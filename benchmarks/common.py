@@ -1,0 +1,263 @@
+"""Shared benchmark harness: drive the XLB in-graph engine and the two
+sidecar baselines over a ServiceGraph, measuring throughput / latency / CPU.
+
+The per-service application is the tiny dense LM (xlb-service-model); a
+request occupies a slot for ``tokens_per_req`` decode steps.  Requests flow
+along the graph's call chain: when a request completes at hop i it is
+enqueued at hop i+1 (the host moves an opaque token id — never inspecting
+payloads for XLB; the sidecar baselines route on the host per hop, paying
+the proxy costs they pay in the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ServiceGraph, get_config, smoke_config
+from repro.core import interpose, sidecar
+from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST, Rule,
+                                      ServiceConfig, build_state)
+from repro.models import model as M
+
+CFG = smoke_config(get_config("xlb-service-model"))
+KEY = jax.random.PRNGKey(42)
+PARAMS = M.init_params(CFG, KEY, dtype=jnp.float32)
+
+
+def build_routing(n_instances: int):
+    services = [ServiceConfig("svc", rules=[Rule(0, None, "pool")])]
+    clusters = [Cluster("pool", endpoints=list(range(n_instances)),
+                        policy=POLICY_LEAST_REQUEST)]
+    st, _ = build_state(services, clusters)
+    return st
+
+
+def request_batch(req_ids, pad_to: int):
+    rid = np.full((pad_to,), -1, np.int32)
+    tok = np.zeros((pad_to,), np.int32)
+    n = min(len(req_ids), pad_to)
+    rid[:n] = req_ids[:n]
+    tok[:n] = 3 + (np.asarray(req_ids[:n]) % (CFG.vocab - 3))
+    return interpose.RequestBatch(
+        req_id=jnp.asarray(rid), svc=jnp.zeros((pad_to,), jnp.int32),
+        features=jnp.zeros((pad_to, 8), jnp.int32), token=jnp.asarray(tok),
+        msg_bytes=jnp.full((pad_to,), 128, jnp.int32))
+
+
+@dataclasses.dataclass
+class HopStats:
+    completed: int = 0
+    ticks: int = 0
+    wall_s: float = 0.0
+
+
+class XLBService:
+    """One service fleet behind the in-graph engine."""
+
+    def __init__(self, n_instances: int, slots: int, tokens_per_req: int,
+                 admit_batch: int = 16):
+        self.eng = interpose.Engine(CFG, n_instances, slots,
+                                    max_len=tokens_per_req + 1)
+        self.state = self.eng.init_state(build_routing(n_instances),
+                                         dtype=jnp.float32)
+        self.serve = self.eng.make_jitted(donate=False)
+        self.admit_batch = admit_batch
+        self.queue: list[int] = []
+        self.stats = HopStats()
+
+    def submit(self, req_ids):
+        self.queue.extend(int(r) for r in req_ids)
+
+    def tick(self) -> list[int]:
+        """One engine step. Returns req_ids completed this tick."""
+        take = self.queue[: self.admit_batch]
+        self.queue = self.queue[self.admit_batch:]
+        reqs = request_batch(take, self.admit_batch)
+        t0 = time.perf_counter()
+        self.state, out = self.serve(PARAMS, self.state, reqs)
+        jax.block_until_ready(out["emitted"])
+        self.stats.wall_s += time.perf_counter() - t0
+        self.stats.ticks += 1
+        done = np.asarray(out["done"])
+        ids = np.asarray(out["req_id"])          # ids serviced this tick
+        finished = [int(x) for x in ids[done & (ids >= 0)]]
+        self.stats.completed += len(finished)
+        return finished
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or bool(np.asarray(
+            self.state.pool.active).any())
+
+
+class SidecarService:
+    """One service fleet behind a host-interposed proxy (istio|cilium)."""
+
+    def __init__(self, n_instances: int, slots: int, tokens_per_req: int,
+                 mode: str, admit_batch: int = 16):
+        self.eng = sidecar.SidecarEngine(CFG, n_instances, slots,
+                                         max_len=tokens_per_req + 1,
+                                         routing=build_routing(n_instances),
+                                         mode=mode)
+        self.admit_batch = admit_batch
+        self.queue: list[int] = []
+        self.stats = HopStats()
+
+    def submit(self, req_ids):
+        self.queue.extend(int(r) for r in req_ids)
+
+    def tick(self) -> list[int]:
+        take = self.queue[: self.admit_batch]
+        self.queue = self.queue[self.admit_batch:]
+        t0 = time.perf_counter()
+        if take:
+            self.eng.admit(request_batch(take, self.admit_batch))
+        before_req = self.eng.pool_req.copy()
+        before_act = self.eng.pool_active.copy()
+        self.eng.step(PARAMS)
+        self.stats.wall_s += time.perf_counter() - t0
+        self.stats.ticks += 1
+        now_inactive = before_act & ~self.eng.pool_active
+        finished = [int(r) for r in before_req[now_inactive] if r >= 0]
+        self.stats.completed += len(finished)
+        return finished
+
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or bool(self.eng.pool_active.any())
+
+
+def make_service(mode: str, n_instances: int, slots: int,
+                 tokens_per_req: int, admit_batch: int = 16):
+    if mode == "xlb":
+        return XLBService(n_instances, slots, tokens_per_req, admit_batch)
+    return SidecarService(n_instances, slots, tokens_per_req, mode,
+                          admit_batch)
+
+
+# --------------------------------------------------------------------------- #
+# Drivers
+# --------------------------------------------------------------------------- #
+
+
+def warm(*svcs):
+    """Compile each engine's programs before the timed region (both the
+    sidecars and XLB pay their jit compile once, outside measurement)."""
+    for s in svcs:
+        s.tick()
+        s.stats = HopStats()
+    return svcs[0] if len(svcs) == 1 else svcs
+
+
+def run_closed_loop(mode: str, *, n_requests: int, n_instances: int = 2,
+                    slots: int = 8, tokens_per_req: int = 4,
+                    max_ticks: int = 2000, arrivals_per_tick: int = 0) -> dict:
+    """Single-service loop (paper Table 1 / Fig 5 setting).
+
+    ``arrivals_per_tick`` > 0 streams arrivals (open-ish loop) so both the
+    host-routed baselines and the in-graph path pay admission repeatedly —
+    the paper's persistent-connection request stream."""
+    svc = warm(make_service(mode, n_instances, slots, tokens_per_req))
+    submit_t = {}
+    done_t = {}
+    t0 = time.perf_counter()
+    pending = list(range(n_requests))
+    if not arrivals_per_tick:
+        svc.submit(pending)
+        submit_t = {r: t0 for r in pending}
+        pending = []
+    ticks = 0
+    while (svc.busy or pending) and ticks < max_ticks:
+        if pending:
+            wave, pending = (pending[:arrivals_per_tick],
+                             pending[arrivals_per_tick:])
+            now = time.perf_counter()
+            svc.submit(wave)
+            submit_t.update({r: now for r in wave})
+        for r in svc.tick():
+            done_t[r] = time.perf_counter()
+        ticks += 1
+    wall = time.perf_counter() - t0
+    lat = [done_t[r] - submit_t[r] for r in done_t]
+    return {
+        "mode": mode, "completed": len(done_t), "wall_s": wall,
+        "req_per_s": len(done_t) / wall if wall else 0.0,
+        "avg_ms": 1e3 * float(np.mean(lat)) if lat else float("nan"),
+        "p99_ms": 1e3 * float(np.percentile(lat, 99)) if lat else float("nan"),
+        "ticks": ticks,
+    }
+
+
+def run_chain(mode: str, *, chain_len: int, n_requests: int = 16,
+              n_instances: int = 2, slots: int = 8, tokens_per_req: int = 2,
+              max_ticks: int = 4000) -> dict:
+    """Paper Fig 8: requests traverse a chain of services."""
+    hops = [make_service(mode, n_instances, slots, tokens_per_req)
+            for _ in range(chain_len)]
+    warm(*hops)
+    hops[0].submit(list(range(n_requests)))
+    t0 = time.perf_counter()
+    done_t = {}
+    ticks = 0
+    while any(h.busy for h in hops) and ticks < max_ticks:
+        for i, h in enumerate(hops):
+            if not h.busy:                       # event-driven: idle hops
+                continue                         # launch no program
+            finished = h.tick()
+            if i + 1 < len(hops):
+                hops[i + 1].submit(finished)
+            else:
+                for r in finished:
+                    done_t[r] = time.perf_counter()
+        ticks += 1
+    wall = time.perf_counter() - t0
+    lat = [done_t[r] - t0 for r in done_t]
+    return {"mode": mode, "chain": chain_len, "completed": len(done_t),
+            "req_per_s": len(done_t) / wall if wall else 0.0,
+            "avg_ms": 1e3 * float(np.mean(lat)) if lat else float("nan"),
+            "wall_s": wall}
+
+
+def run_graph(mode: str, graph: ServiceGraph, *, n_requests: int = 12,
+              slots: int = 8, tokens_per_req: int = 2,
+              max_ticks: int = 4000) -> dict:
+    """Paper Fig 11/12: microservice application topologies."""
+    insts = {s: max(1, min(graph.instances.get(s, 1), 8))
+             for s in graph.services}
+    svcs = {s: make_service(mode, insts[s], slots, tokens_per_req)
+            for s in graph.services if s != graph.services[0]}
+    warm(*svcs.values())
+    out_edges = {}
+    for a, b in graph.edges:
+        out_edges.setdefault(a, []).append(b)
+    entry = out_edges[graph.services[0]][0]     # client → first real service
+    svcs[entry].submit(list(range(n_requests)))
+    inflight = {r: [entry] for r in range(n_requests)}
+    done_t = {}
+    t0 = time.perf_counter()
+    ticks = 0
+    while any(s.busy for s in svcs.values()) and ticks < max_ticks:
+        for name, s in svcs.items():
+            if not s.busy:
+                continue
+            finished = s.tick()
+            nxt = out_edges.get(name, [])
+            for r in finished:
+                if nxt:                          # fan out to callees
+                    for callee in nxt:
+                        svcs[callee].submit([r])
+                else:
+                    done_t[r] = time.perf_counter()
+        ticks += 1
+    wall = time.perf_counter() - t0
+    lat = [done_t[r] - t0 for r in done_t]
+    return {"mode": mode, "graph": graph.name, "completed": len(done_t),
+            "req_per_s": len(done_t) / wall if wall else 0.0,
+            "avg_ms": 1e3 * float(np.mean(lat)) if lat else float("nan"),
+            "wall_s": wall}

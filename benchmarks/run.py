@@ -1,0 +1,229 @@
+"""Benchmark harness — one benchmark per paper table/figure (§6).
+
+Each prints CSV rows ``bench,mode,metric,value`` measured on CPU with the
+tiny per-service model, comparing the three architectures of Fig. 1:
+  istio  = per-instance proxy + host routing       (sidecar)
+  cilium = one global proxy + host routing         (sidecar-lite)
+  xlb    = in-graph admission + batched decode     (this paper)
+
+Run all:      PYTHONPATH=src python -m benchmarks.run
+Run a subset: PYTHONPATH=src python -m benchmarks.run table1 fig8
+"""
+
+from __future__ import annotations
+
+import resource
+import sys
+import time
+
+import numpy as np
+
+MODES = ("istio", "cilium", "xlb")
+ROWS: list[tuple] = []
+
+
+def emit(bench, mode, metric, value):
+    ROWS.append((bench, mode, metric, value))
+    print(f"{bench},{mode},{metric},{value:.4f}" if isinstance(value, float)
+          else f"{bench},{mode},{metric},{value}", flush=True)
+
+
+# --------------------------------------------------------------------------- #
+
+
+def bench_table1():
+    """Table 1: throughput + latency, 1 service × 2 instances."""
+    from benchmarks import common
+    for mode in MODES:
+        r = common.run_closed_loop(mode, n_requests=96, n_instances=2,
+                                   slots=16, tokens_per_req=4,
+                                   arrivals_per_tick=16)
+        emit("table1", mode, "req_per_s", r["req_per_s"])
+        emit("table1", mode, "avg_ms", r["avg_ms"])
+        emit("table1", mode, "p99_ms", r["p99_ms"])
+
+
+def bench_fig5():
+    """Fig 5: scaling concurrent connections (= live slots)."""
+    from benchmarks import common
+    for conc in (8, 32, 128):
+        for mode in MODES:
+            r = common.run_closed_loop(mode, n_requests=4 * conc,
+                                       n_instances=2, slots=conc // 2,
+                                       tokens_per_req=4,
+                                       arrivals_per_tick=conc // 2)
+            emit("fig5", mode, f"req_per_s@{conc}", r["req_per_s"])
+            emit("fig5", mode, f"p99_ms@{conc}", r["p99_ms"])
+
+
+def bench_fig6():
+    """Fig 6: message size (= tokens per request)."""
+    from benchmarks import common
+    for toks in (2, 8, 16):
+        for mode in MODES:
+            r = common.run_closed_loop(mode, n_requests=16, n_instances=2,
+                                       slots=8, tokens_per_req=toks)
+            emit("fig6", mode, f"req_per_s@{toks}tok", r["req_per_s"])
+            emit("fig6", mode, f"avg_ms@{toks}tok", r["avg_ms"])
+
+
+def bench_fig7():
+    """Fig 7: CPU usage at fixed offered load (process CPU-ms per request)."""
+    from benchmarks import common
+    for mode in MODES:
+        cpu0 = resource.getrusage(resource.RUSAGE_SELF).ru_utime
+        r = common.run_closed_loop(mode, n_requests=24, n_instances=2,
+                                   slots=8, tokens_per_req=4)
+        cpu = resource.getrusage(resource.RUSAGE_SELF).ru_utime - cpu0
+        emit("fig7", mode, "cpu_ms_per_req", 1e3 * cpu / max(r["completed"], 1))
+
+
+def bench_fig8():
+    """Fig 8: service-chain length 1..9."""
+    from benchmarks import common
+    for chain in (1, 3, 6, 9):
+        for mode in MODES:
+            r = common.run_chain(mode, chain_len=chain, n_requests=12)
+            emit("fig8", mode, f"req_per_s@len{chain}", r["req_per_s"])
+            emit("fig8", mode, f"avg_ms@len{chain}", r["avg_ms"])
+
+
+def bench_fig9():
+    """Fig 9: service density — many fleets on one host."""
+    from benchmarks import common
+    for n_services in (2, 6, 12):
+        for mode in MODES:
+            svcs = [common.make_service(mode, 2, 4, 2)
+                    for _ in range(n_services)]
+            common.warm(*svcs)
+            for s in svcs:
+                s.submit(list(range(4)))
+            t0 = time.perf_counter()
+            ticks = 0
+            while any(s.busy for s in svcs) and ticks < 500:
+                for s in svcs:
+                    if s.busy:
+                        s.tick()
+                ticks += 1
+            wall = time.perf_counter() - t0
+            total = sum(s.stats.completed for s in svcs)
+            emit("fig9", mode, f"req_per_s@{n_services}svc",
+                 total / wall if wall else 0.0)
+
+
+def bench_fig10():
+    """Fig 10: interference — monitored service at fixed load while a noisy
+    neighbour scales.  For cilium the neighbour SHARES the global proxy
+    (same engine); istio/xlb keep per-service engines."""
+    from benchmarks import common
+    for noise in (0, 8, 24):
+        for mode in MODES:
+            if mode == "cilium":
+                # shared proxy: one fleet serves both workloads
+                svc = common.warm(
+                    common.make_service(mode, 2, 8 + max(4, noise), 4))
+                svc.submit(list(range(8)))                   # monitored
+                svc.submit(list(range(1000, 1000 + noise)))  # interference
+                t0 = time.perf_counter()
+                got, ticks = 0, 0
+                while got < 8 and ticks < 500:
+                    got += sum(1 for r in svc.tick() if r < 1000)
+                    ticks += 1
+                lat = time.perf_counter() - t0
+            else:
+                mon = common.make_service(mode, 2, 8, 4)
+                noisy = common.make_service(mode, 2, max(4, noise), 4)
+                common.warm(mon, noisy)
+                mon.submit(list(range(8)))
+                noisy.submit(list(range(1000, 1000 + noise)))
+                t0 = time.perf_counter()
+                got, ticks = 0, 0
+                while got < 8 and ticks < 500:
+                    got += len(mon.tick())
+                    if noisy.busy:
+                        noisy.tick()                         # timeshared host
+                    ticks += 1
+                lat = time.perf_counter() - t0
+            emit("fig10", mode, f"mon_latency_ms@noise{noise}", 1e3 * lat)
+
+
+def bench_fig11():
+    """Fig 11: bookinfo application."""
+    from benchmarks import common
+    from repro.configs import BOOKINFO
+    for mode in MODES:
+        r = common.run_graph(mode, BOOKINFO, n_requests=8)
+        emit("fig11", mode, "req_per_s", r["req_per_s"])
+        emit("fig11", mode, "avg_ms", r["avg_ms"])
+
+
+def bench_fig12():
+    """Fig 12: Bank of Anthos application."""
+    from benchmarks import common
+    from repro.configs import BANK_OF_ANTHOS
+    for mode in MODES:
+        r = common.run_graph(mode, BANK_OF_ANTHOS, n_requests=8)
+        emit("fig12", mode, "req_per_s", r["req_per_s"])
+        emit("fig12", mode, "avg_ms", r["avg_ms"])
+
+
+def bench_table2():
+    """Table 2 analogue: decompose the XLB step — routing/balancing vs model
+    decode — showing essential-LB work is a small fraction (paper: ~20%)."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks import common
+    from repro.core import policies, router
+
+    st = common.build_routing(4)
+    svc = jnp.zeros((64,), jnp.int32)
+    feats = jnp.zeros((64, 8), jnp.int32)
+
+    @jax.jit
+    def lb_only(st, svc, feats, key):
+        cl = router.match_cluster(st, svc, feats)
+        sel, st = policies.select(st, cl, key)
+        return sel.endpoint, st
+
+    key = jax.random.PRNGKey(0)
+    out, _ = lb_only(st, svc, feats, key)                  # warm
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(50):
+        out, _ = lb_only(st, svc, feats, key)
+    jax.block_until_ready(out)
+    lb_us = (time.perf_counter() - t0) / 50 * 1e6
+    emit("table2", "xlb", "route+balance_us", lb_us)
+
+    svc_e = common.make_service("xlb", 2, 8, 4)
+    svc_e.submit(list(range(8)))
+    svc_e.tick()                                           # warm
+    t0 = time.perf_counter()
+    for _ in range(20):
+        svc_e.tick()
+    step_us = (time.perf_counter() - t0) / 20 * 1e6
+    emit("table2", "xlb", "full_step_us", step_us)
+    emit("table2", "xlb", "lb_fraction_pct", 100.0 * lb_us / step_us)
+
+
+BENCHES = {
+    "table1": bench_table1, "table2": bench_table2, "fig5": bench_fig5,
+    "fig6": bench_fig6, "fig7": bench_fig7, "fig8": bench_fig8,
+    "fig9": bench_fig9, "fig10": bench_fig10, "fig11": bench_fig11,
+    "fig12": bench_fig12,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("bench,mode,metric,value")
+    for n in names:
+        BENCHES[n]()
+    t1 = {m: v for b, m, k, v in ROWS if b == "table1" and k == "req_per_s"}
+    if "xlb" in t1 and t1.get("istio"):
+        print(f"# headline: xlb/istio throughput = "
+              f"{t1['xlb'] / t1['istio']:.2f}x  (paper: >=1.5x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Serve a microservice application graph (bookinfo) behind XLB.
+
+One in-graph engine per service; requests fan out along the call graph.
+Prints per-hop latency and the end-to-end comparison vs the sidecar
+baselines — the paper's Fig. 11 in miniature.
+
+Run:  PYTHONPATH=src python examples/serve_cluster.py
+"""
+
+import time
+
+from benchmarks import common
+from repro.configs import BOOKINFO
+
+print(f"topology: {BOOKINFO.name}: " +
+      " -> ".join(BOOKINFO.chain()))
+
+for mode in ("istio", "cilium", "xlb"):
+    r = common.run_graph(mode, BOOKINFO, n_requests=8, tokens_per_req=2)
+    print(f"{mode:7s}: {r['completed']} done  "
+          f"{r['req_per_s']:8.1f} req/s  avg {r['avg_ms']:7.2f} ms")

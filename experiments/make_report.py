@@ -1,0 +1,234 @@
+"""Generate EXPERIMENTS.md from the dry-run JSONs + benchmark CSV +
+hillclimb log.  Run:  python experiments/make_report.py
+"""
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(HERE)
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = ["granite-20b", "internlm2-20b", "yi-34b", "minitron-4b",
+              "deepseek-v2-236b", "arctic-480b", "whisper-large-v3",
+              "chameleon-34b", "mamba2-2.7b", "jamba-v0.1-52b"]
+
+
+def load(mesh):
+    out = {}
+    for f in glob.glob(os.path.join(HERE, "dryrun", f"*__{mesh}.json")):
+        r = json.load(open(f))
+        out[(r.get("arch") or os.path.basename(f).split("__")[0],
+             r.get("shape") or os.path.basename(f).split("__")[1])] = r
+    return out
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}µs"
+
+
+def dryrun_section(single, multi):
+    lines = ["## §Dry-run — lower+compile for every (arch × shape × mesh)",
+             "",
+             "Both meshes: single-pod `(data=16, model=16)` = 256 chips and "
+             "multi-pod `(pod=2, data=16, model=16)` = 512 chips. "
+             "`.lower().compile()` succeeds for **every** cell below "
+             "(ShapeDtypeStruct AOT — no allocation). Memory columns are "
+             "per-device from `compiled.memory_analysis()`; collective "
+             "schedule parsed from the compiled SPMD module.",
+             "",
+             "| arch | shape | mesh | per-dev GiB (arg+out+tmp) | HLO "
+             "collectives (count) | wire GB/dev/step | compile s |",
+             "|---|---|---|---|---|---|---|"]
+    for (arch, shape) in [(a, s) for a in ARCH_ORDER for s in SHAPE_ORDER]:
+        for mesh, table in (("16x16", single), ("2x16x16", multi)):
+            r = table.get((arch, shape))
+            if r is None:
+                continue
+            if "skipped" in r:
+                if mesh == "16x16":
+                    lines.append(f"| {arch} | {shape} | both | — | skipped: "
+                                 f"{r['skipped'][:60]}… | — | — |")
+                continue
+            m = r["memory_analysis"]
+            colls = r["hlo"]["collectives"]
+            cstr = " ".join(f"{k.replace('collective-','c-')}"
+                            f"×{int(v['count'])}" for k, v in colls.items())
+            lines.append(
+                f"| {arch} | {shape} | {mesh} | {m['total_GiB']:.1f} | "
+                f"{cstr or 'none'} | "
+                f"{r['hlo']['collective_bytes_per_device']/1e9:.1f} | "
+                f"{r['compile_s']:.0f} |")
+    lines += [
+        "",
+        "**CPU-backend artifacts (affect the absolute numbers, not the "
+        "structure):** XLA:CPU upcasts bf16 dot operands to f32 *before* "
+        "GSPMD-inserted collectives, so weight all-gathers and partial-sum "
+        "all-reduces appear at 4 B/elt where a TPU build moves 2 B/elt — "
+        "collective bytes and the f32 temp copies in `memory_analysis` are "
+        "conservative (≈2× worst case). XLA:CPU also lacks the TPU "
+        "all-reduce→reduce-scatter rewrite, so Megatron-style row-parallel "
+        "sums are counted at AR cost (2×(g−1)/g) instead of RS.",
+    ]
+    return "\n".join(lines)
+
+
+def roofline_section(single):
+    lines = ["## §Roofline — single-pod (16×16, 256 × TPU v5e)",
+             "",
+             "Terms per step, per device: compute = parsed HLO dot-FLOPs / "
+             "197 TF/s; memory = analytic HBM traffic / 819 GB/s; collective "
+             "= parsed wire bytes / 50 GB/s. Parsed values come from the "
+             "compiled SPMD module with per-`while` `known_trip_count` "
+             "scaling (XLA's own `cost_analysis` counts loop bodies once — "
+             "verified here — so raw values are recorded but not used). "
+             "MODEL_FLOPS = 6·N·T (train) / 2·N·T+attn (serve), N = active "
+             "params.",
+             "",
+             "| arch | shape | compute | memory | collective | dominant | "
+             "MODEL_FLOPS | useful ratio | roofline frac | what moves the "
+             "bottleneck |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    fixes = {
+        ("collective", "train"): "explicit bf16 FSDP gather + RS inside "
+        "shard_map; overlap weight gathers with compute",
+        ("collective", "prefill"): "same + keep KV gather per layer (not per "
+        "chunk)",
+        ("collective", "decode"): "serve params pure-TP (replicate over dp): "
+        "kills the per-token weight all-gather",
+        ("memory", "decode"): "already at the HBM floor: params+cache read "
+        "per token; batch more lanes",
+        ("memory", "train"): "fuse optimizer reads; bf16 moments",
+        ("compute", "train"): "at the MXU roof; raise MFU via remat policy",
+    }
+    for (arch, shape) in [(a, s) for a in ARCH_ORDER for s in SHAPE_ORDER]:
+        r = single.get((arch, shape))
+        if r is None or "skipped" in r:
+            continue
+        rf = r["roofline"]
+        kind = "train" if shape == "train_4k" else (
+            "prefill" if "prefill" in shape else "decode")
+        fix = fixes.get((rf["dominant"], kind), "")
+        ur = rf["useful_flops_ratio"]
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(rf['compute_s'])} | "
+            f"{fmt_s(rf['memory_s'])} | {fmt_s(rf['collective_s'])} | "
+            f"**{rf['dominant']}** | {rf['model_flops']:.2e} | "
+            f"{ur:.2f} | {rf['roofline_fraction']:.4f} | {fix} |")
+    lines += [
+        "",
+        "`useful ratio` = MODEL_FLOPS/device ÷ parsed HLO FLOPs/device "
+        "(<1 ⇒ remat/padding/dispatch overhead; ≈0.65 on trains is the "
+        "remat recompute +1 fwd). `roofline frac` = (MODEL_FLOPS/device ÷ "
+        "peak) ÷ max(term) — the score this report optimises in §Perf.",
+        "",
+        "long_500k is skipped for the 8 pure-full-attention archs "
+        "(quadratic at 524k; per assignment) and runs for mamba2-2.7b and "
+        "jamba-v0.1-52b via SSM state + sequence-sharded KV.",
+    ]
+    return "\n".join(lines)
+
+
+def perf_section():
+    log_path = os.path.join(HERE, "perf_log.json")
+    if not os.path.exists(log_path):
+        return "## §Perf\n\n(hillclimb log pending)"
+    log = json.load(open(log_path))
+    lines = ["## §Perf — hypothesis → change → measure → validate",
+             "",
+             log.get("preamble", ""), ""]
+    for cell in log["cells"]:
+        lines += [f"### {cell['name']}", "", cell.get("why", ""), "",
+                  "| # | hypothesis | change | before (dom term) | after | "
+                  "Δ | verdict |", "|---|---|---|---|---|---|---|"]
+        for i, it in enumerate(cell["iterations"]):
+            lines.append(
+                f"| {i+1} | {it['hypothesis']} | {it['change']} | "
+                f"{it['before']} | {it['after']} | {it['delta']} | "
+                f"{it['verdict']} |")
+        lines += ["", cell.get("summary", ""), ""]
+    lines += [log.get("closing", ""), ""]
+
+    # variant cells measured on disk: paper-faithful baseline vs optimized
+    var_files = sorted(glob.glob(os.path.join(HERE, "dryrun",
+                                              "*__16x16__*.json")))
+    if var_files:
+        lines += ["### Baseline vs optimized cells (both recorded, per the "
+                  "reproduce-then-optimize contract)", "",
+                  "| cell | variant | compute | memory | collective | "
+                  "dominant | roofline frac | per-dev GiB |",
+                  "|---|---|---|---|---|---|---|---|"]
+        for f in var_files:
+            r = json.load(open(f))
+            if "roofline" not in r:
+                continue
+            base = os.path.join(HERE, "dryrun",
+                                f"{r['arch']}__{r['shape']}__16x16.json")
+            for tag, rr in (("baseline", json.load(open(base))), (
+                    r.get("variant", "opt"), r)):
+                rf = rr["roofline"]
+                lines.append(
+                    f"| {r['arch']} × {r['shape']} | {tag} | "
+                    f"{fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | "
+                    f"{fmt_s(rf['collective_s'])} | {rf['dominant']} | "
+                    f"{rf['roofline_fraction']:.4f} | "
+                    f"{rr['memory_analysis']['total_GiB']:.1f} |")
+    return "\n".join(lines)
+
+
+def paper_claims_section():
+    csv_path = os.path.join(ROOT, "bench_output.txt")
+    if not os.path.exists(csv_path):
+        return ("## §Paper-claims\n\n(run `PYTHONPATH=src python -m "
+                "benchmarks.run | tee bench_output.txt` first)")
+    rows = [l.strip() for l in open(csv_path) if "," in l and
+            not l.startswith("bench,")]
+    lines = ["## §Paper-claims — Table 1/2 and Figs 5–12 analogues (CPU)",
+             "",
+             "Measured on this container (1 CPU core; tiny per-service "
+             "model). `istio` = per-instance proxy programs + host routing; "
+             "`cilium` = one global program + host routing; `xlb` = one "
+             "fused in-graph program. NOTE the CPU backend makes host↔device "
+             "copies ≈free (no PCIe/kernel crossing), so xlb-vs-cilium gaps "
+             "here are a conservative floor; xlb-vs-istio shows the "
+             "per-instance dispatch cost the paper attributes to per-service "
+             "sidecars. At long chain lengths (fig8 len≥6) XLB's fused "
+             "program pays a fixed per-launch dispatch cost per hop that "
+             "python host routing undercuts on this 1-core container — on a "
+             "real accelerator the launch is amortised by device compute and "
+             "the host router pays PCIe/kernel crossings instead.",
+             "", "```csv"]
+    lines += rows
+    lines += ["```"]
+    return "\n".join(lines)
+
+
+def main():
+    single, multi = load("16x16"), load("2x16x16")
+    ok_s = sum(1 for r in single.values() if "roofline" in r)
+    ok_m = sum(1 for r in multi.values() if "roofline" in r)
+    head = [
+        "# EXPERIMENTS",
+        "",
+        f"Dry-run matrix: 10 archs × 4 shapes × 2 meshes — "
+        f"**{ok_s}/32 single-pod and {ok_m}/32 multi-pod cells compile** "
+        "(8 cells per mesh are assignment-mandated long_500k skips for "
+        "pure-attention archs). Generated by `experiments/make_report.py` "
+        "from `experiments/dryrun/*.json`.",
+        "",
+    ]
+    body = [dryrun_section(single, multi), "", roofline_section(single), "",
+            perf_section(), "", paper_claims_section()]
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write("\n".join(head + body) + "\n")
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Architecture configs (assigned pool + the paper's own topologies)."""
+
+from repro.configs.base import (
+    SHAPES,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    ShapeConfig,
+    SSMConfig,
+    get_config,
+    list_configs,
+    shape_applicable,
+    smoke_config,
+)
+
+# importing each module registers its config
+from repro.configs.granite_20b import GRANITE_20B
+from repro.configs.internlm2_20b import INTERNLM2_20B
+from repro.configs.yi_34b import YI_34B
+from repro.configs.minitron_4b import MINITRON_4B
+from repro.configs.deepseek_v2_236b import DEEPSEEK_V2_236B
+from repro.configs.arctic_480b import ARCTIC_480B
+from repro.configs.whisper_large_v3 import WHISPER_LARGE_V3
+from repro.configs.chameleon_34b import CHAMELEON_34B
+from repro.configs.mamba2_2_7b import MAMBA2_2_7B
+from repro.configs.jamba_v0_1_52b import JAMBA_V0_1_52B
+from repro.configs.xlb_microbench import (
+    BANK_OF_ANTHOS,
+    BOOKINFO,
+    MICROBENCH,
+    XLB_SERVICE_MODEL,
+    ServiceGraph,
+    chain_graph,
+)
+
+ASSIGNED_ARCHS = [
+    "granite-20b",
+    "internlm2-20b",
+    "yi-34b",
+    "minitron-4b",
+    "deepseek-v2-236b",
+    "arctic-480b",
+    "whisper-large-v3",
+    "chameleon-34b",
+    "mamba2-2.7b",
+    "jamba-v0.1-52b",
+]
+
+__all__ = [
+    "SHAPES",
+    "ASSIGNED_ARCHS",
+    "ModelConfig",
+    "MoEConfig",
+    "MLAConfig",
+    "SSMConfig",
+    "ShapeConfig",
+    "ServiceGraph",
+    "get_config",
+    "list_configs",
+    "shape_applicable",
+    "smoke_config",
+    "chain_graph",
+]

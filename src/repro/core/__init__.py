@@ -1,0 +1,15 @@
+"""XLB core: the paper's contribution as a composable JAX module.
+
+  routing_table  nested eBPF-map state (map-in-map → index-linked arrays)
+  router         content-based rule matching (filter/route managers)
+  policies       LB algorithms (rr / random / least-request / weighted)
+  relay          socket relay → scatter / all-to-all payload redirection
+  request_map    stream-id rewrite + response re-ordering
+  delta          delta refresh (bottom-up add, top-down delete)
+  interpose      the in-graph serving engine (admit + step in one program)
+  sidecar        Istio/Cilium-analogue baselines (host-interposed)
+"""
+
+from repro.core import relay, routing_table
+
+__all__ = ["relay", "routing_table"]

@@ -1,0 +1,107 @@
+"""Delta refresh — incremental control-plane updates (paper §4.2).
+
+Adds follow *bottom-up* order (endpoints → cluster → rules → service), deletes
+*top-down*, so the datapath — which may be mid-step on the previous state —
+never observes a dangling index.  Because RoutingState is an argument of the
+compiled step (never a traced constant), these updates are plain buffer swaps:
+zero recompilation, exactly the paper's "configuration updates do not disturb
+the kernel data path".
+
+All functions are pure: they return a new RoutingState with version+1.
+They are jit-compatible so the control daemon can run them on-device.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing_table import (WILDCARD, RoutingState)
+
+
+def _bump(state: RoutingState) -> RoutingState:
+    return state._replace(version=state.version + 1)
+
+
+# --------------------------------------------------------------------------- #
+# Endpoint-level (lowest level first on add)
+# --------------------------------------------------------------------------- #
+
+
+def add_endpoint(state: RoutingState, cluster_id: int, ep_slot: int,
+                 instance: int, weight: float = 1.0) -> RoutingState:
+    """Insert one endpoint at global slot ``ep_slot`` then grow the cluster.
+
+    Bottom-up: the endpoint row is written *before* the cluster's count is
+    bumped, so a concurrent reader never indexes an unwritten row.
+    """
+    st = state._replace(
+        ep_instance=state.ep_instance.at[ep_slot].set(instance),
+        ep_weight=state.ep_weight.at[ep_slot].set(weight),
+        ep_load=state.ep_load.at[ep_slot].set(0),
+    )
+    st = st._replace(
+        cluster_ep_count=st.cluster_ep_count.at[cluster_id].add(1))
+    return _bump(st)
+
+
+def remove_endpoint(state: RoutingState, cluster_id: int, ep_off: int
+                    ) -> RoutingState:
+    """Top-down: shrink the cluster count first, then compact the window by
+    swapping the last endpoint into the vacated offset."""
+    start = state.cluster_ep_start[cluster_id]
+    count = state.cluster_ep_count[cluster_id]
+    st = state._replace(
+        cluster_ep_count=state.cluster_ep_count.at[cluster_id].add(-1))
+    last = start + count - 1
+    tgt = start + ep_off
+    st = st._replace(
+        ep_instance=st.ep_instance.at[tgt].set(st.ep_instance[last]),
+        ep_weight=st.ep_weight.at[tgt].set(st.ep_weight[last]),
+        ep_load=st.ep_load.at[tgt].set(st.ep_load[last]),
+    )
+    return _bump(st)
+
+
+# --------------------------------------------------------------------------- #
+# Rule-level
+# --------------------------------------------------------------------------- #
+
+
+def add_rule(state: RoutingState, svc_id: int, rule_slot: int, field: int,
+             value_hash: int, cluster_id: int) -> RoutingState:
+    """Write the rule row first (bottom), then extend the service chain."""
+    st = state._replace(
+        rule_field=state.rule_field.at[rule_slot].set(field),
+        rule_value=state.rule_value.at[rule_slot].set(value_hash),
+        rule_cluster=state.rule_cluster.at[rule_slot].set(cluster_id),
+    )
+    st = st._replace(svc_rule_count=st.svc_rule_count.at[svc_id].add(1))
+    return _bump(st)
+
+
+def remove_rule(state: RoutingState, svc_id: int, rule_off: int
+                ) -> RoutingState:
+    """Top-down: shrink the chain, then compact (swap-with-last)."""
+    start = state.svc_rule_start[svc_id]
+    count = state.svc_rule_count[svc_id]
+    st = state._replace(svc_rule_count=state.svc_rule_count.at[svc_id].add(-1))
+    last, tgt = start + count - 1, start + rule_off
+    st = st._replace(
+        rule_field=st.rule_field.at[tgt].set(st.rule_field[last]),
+        rule_value=st.rule_value.at[tgt].set(st.rule_value[last]),
+        rule_cluster=st.rule_cluster.at[tgt].set(st.rule_cluster[last]),
+    )
+    return _bump(st)
+
+
+def set_policy(state: RoutingState, cluster_id: int, policy: int
+               ) -> RoutingState:
+    return _bump(state._replace(
+        cluster_policy=state.cluster_policy.at[cluster_id].set(policy)))
+
+
+def set_weight(state: RoutingState, ep_slot: int, weight: float
+               ) -> RoutingState:
+    return _bump(state._replace(
+        ep_weight=state.ep_weight.at[ep_slot].set(weight)))

@@ -1,0 +1,189 @@
+"""In-graph interposition — the XLB serving engine (paper §3/§4).
+
+The engine owns ``I`` instance lanes × ``C`` decode slots (the pre-established
+i-sock pools).  Both engine operations are compiled *into* the model program —
+the LB is a logical extension of the application:
+
+  * ``admit``  — connection establishment + load balancing: content match →
+    policy select → slot allocation → scatter into pools.  No host round-trip:
+    the paper's "client TCP connection is bypassed".
+  * ``step``   — one decode step for every active slot across all lanes in a
+    single batched program, then completion handling (release load counters,
+    free slots).
+
+The sidecar baselines in core/sidecar.py implement the same contract with
+host-mediated routing + per-instance programs, reproducing the overhead
+classes of paper Table 2.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import policies, request_map, router
+from repro.core.routing_table import FlowMetrics, RoutingState
+from repro.models import model as M
+from repro.models.transformer import DEFAULT_CTX
+
+
+class RequestBatch(NamedTuple):
+    """Host-ingress output: fixed-size admission batch (pad with req_id=-1)."""
+
+    req_id: jax.Array     # (R,) int32, -1 = padding
+    svc: jax.Array        # (R,) int32 virtual-IP/service id
+    features: jax.Array   # (R, N_FEATURES) int32 hashed L7 fields
+    token: jax.Array      # (R,) int32 first prompt token
+    msg_bytes: jax.Array  # (R,) int32 payload size (traffic metrics)
+
+
+class PoolState(NamedTuple):
+    """Per-(instance, slot) live-connection state."""
+
+    req_id: jax.Array      # (I, C) int32, -1 = free
+    endpoint: jax.Array    # (I, C) int32 (for load release)
+    svc: jax.Array         # (I, C) int32
+    length: jax.Array      # (I, C) int32
+    token: jax.Array       # (I, C) int32 last emitted/fed token
+    active: jax.Array      # (I, C) bool
+
+    @staticmethod
+    def init(I: int, C: int) -> "PoolState":
+        return PoolState(
+            req_id=jnp.full((I, C), -1, jnp.int32),
+            endpoint=jnp.full((I, C), -1, jnp.int32),
+            svc=jnp.zeros((I, C), jnp.int32),
+            length=jnp.zeros((I, C), jnp.int32),
+            token=jnp.zeros((I, C), jnp.int32),
+            active=jnp.zeros((I, C), bool),
+        )
+
+
+class EngineState(NamedTuple):
+    routing: RoutingState
+    pool: PoolState
+    cache: Any             # model KV/SSM cache, batch dim = I*C
+    metrics: FlowMetrics
+    key: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    """XLB in-graph serving engine for one service fleet."""
+
+    cfg: ModelConfig
+    n_instances: int
+    slots: int
+    max_len: int
+    eos: int = 1
+    ctx: Any = DEFAULT_CTX
+
+    # ------------------------------------------------------------------ #
+    def init_state(self, routing: RoutingState, dtype=None) -> EngineState:
+        return EngineState(
+            routing=routing,
+            pool=PoolState.init(self.n_instances, self.slots),
+            cache=M.init_cache(self.cfg, self.n_instances * self.slots,
+                               self.max_len, dtype),
+            metrics=FlowMetrics.zeros(),
+            key=jax.random.PRNGKey(0),
+        )
+
+    # ------------------------------------------------------------------ #
+    # admit: routing + balancing + slot allocation, fully in-graph
+    # ------------------------------------------------------------------ #
+    def admit(self, state: EngineState, reqs: RequestBatch) -> EngineState:
+        rstate, pool, metrics = state.routing, state.pool, state.metrics
+        key, sub = jax.random.split(state.key)
+        valid = reqs.req_id >= 0
+
+        cluster = router.match_cluster(rstate, reqs.svc, reqs.features)
+        cluster = jnp.where(valid, cluster, -1)
+        sel, rstate = policies.select(rstate, cluster, sub)
+
+        assign = request_map.allocate_slots(sel.instance, ~pool.active)
+        ok = assign.ok & valid
+        assign = request_map.SlotAssignment(assign.instance, assign.slot, ok)
+
+        pool = PoolState(
+            req_id=request_map.scatter_to_pool(pool.req_id, assign,
+                                               reqs.req_id),
+            endpoint=request_map.scatter_to_pool(pool.endpoint, assign,
+                                                 sel.endpoint),
+            svc=request_map.scatter_to_pool(pool.svc, assign, reqs.svc),
+            length=request_map.scatter_to_pool(pool.length, assign,
+                                               jnp.zeros_like(reqs.req_id)),
+            token=request_map.scatter_to_pool(pool.token, assign, reqs.token),
+            active=request_map.scatter_to_pool(pool.active, assign,
+                                               jnp.ones_like(ok)),
+        )
+        # held requests whose balancing succeeded release their counter
+        held = valid & (sel.endpoint >= 0) & ~ok
+        rstate = policies.release(rstate, sel.endpoint, held)
+
+        metrics = metrics._replace(
+            requests=metrics.requests.at[jnp.maximum(reqs.svc, 0)].add(
+                ok.astype(jnp.int32), mode="drop"),
+            tx_bytes=metrics.tx_bytes.at[jnp.maximum(reqs.svc, 0)].add(
+                jnp.where(ok, reqs.msg_bytes, 0), mode="drop"),
+            no_route_match=metrics.no_route_match
+            + (valid & (cluster < 0)).sum(),
+            overflow=metrics.overflow + held.sum(),
+        )
+        return EngineState(rstate, pool, state.cache, metrics, key)
+
+    # ------------------------------------------------------------------ #
+    # step: one batched decode over all lanes; completion handling
+    # ------------------------------------------------------------------ #
+    def step(self, params, state: EngineState) -> tuple[EngineState, dict]:
+        pool, cache = state.pool, state.cache
+        I, C = pool.req_id.shape
+        B = I * C
+        tokens = pool.token.reshape(B, 1)
+        lengths = pool.length.reshape(B)
+        logits, cache = M.decode_step(self.cfg, params, tokens, lengths,
+                                      cache, ctx=self.ctx)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32).reshape(I, C)
+
+        new_len = jnp.where(pool.active, pool.length + 1, pool.length)
+        done = pool.active & ((nxt == self.eos) | (new_len >= self.max_len - 1))
+        rstate = policies.release(state.routing, pool.endpoint.reshape(B),
+                                  done.reshape(B))
+        metrics = state.metrics._replace(
+            rx_bytes=state.metrics.rx_bytes.at[
+                jnp.maximum(pool.svc, 0).reshape(B)].add(
+                jnp.where(pool.active, 2, 0).reshape(B), mode="drop"))
+        pool = PoolState(
+            req_id=jnp.where(done, -1, pool.req_id),
+            endpoint=jnp.where(done, -1, pool.endpoint),
+            svc=pool.svc,
+            length=jnp.where(done, 0, new_len),
+            token=jnp.where(pool.active, nxt, pool.token),
+            active=pool.active & ~done,
+        )
+        out = {"emitted": nxt, "done": done,
+               "req_id": state.pool.req_id,     # ids that produced this tick
+               "active": pool.active.sum()}
+        return EngineState(rstate, pool, cache, metrics, state.key), out
+
+    # ------------------------------------------------------------------ #
+    def make_jitted(self, donate: bool = True):
+        """One fused program: admit + decode step (the XLB datapath).
+
+        Admission is gated by ``lax.cond`` on "any arrivals", so steady-state
+        decode ticks skip the routing/allocation work entirely (the paper's
+        connect-path eBPF hook only fires on connect)."""
+
+        @partial(jax.jit, donate_argnums=(1,) if donate else ())
+        def serve_step(params, state: EngineState, reqs: RequestBatch):
+            state = jax.lax.cond(jnp.any(reqs.req_id >= 0),
+                                 lambda s: self.admit(s, reqs),
+                                 lambda s: s, state)
+            return self.step(params, state)
+
+        return serve_step

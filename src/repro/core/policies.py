@@ -1,0 +1,106 @@
+"""Load-balancing policies over cluster endpoints (paper §4.1/§4.2).
+
+All policies are vectorised over the request batch and run in-graph.  The
+mutable LB state (ep_load counters, rr cursors) lives in RoutingState and is
+functionally updated — "the eBPF map handles synchronization internally"
+becomes XLA's single-program-order scatter semantics.
+
+Policies: round-robin, random, least-request (paper) + weighted (Envoy).
+``least_request`` uses Envoy's power-of-two-choices variant: O(1) per request
+instead of a full scan, then falls back to a full argmin for small clusters.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import relay
+from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, POLICY_LEAST_REQUEST,
+                                      POLICY_RANDOM, POLICY_RR, POLICY_WEIGHTED,
+                                      RoutingState)
+
+
+class Selection(NamedTuple):
+    endpoint: jax.Array      # (B,) global endpoint index (-1 = unroutable)
+    instance: jax.Array      # (B,) instance-lane id (-1 = unroutable)
+
+
+def _window(state: RoutingState, cluster):
+    """Per-request endpoint window (B, MAX_EPS_PER_CLUSTER) + validity mask."""
+    start = state.cluster_ep_start[cluster]                 # (B,)
+    count = state.cluster_ep_count[cluster]
+    win = jnp.arange(MAX_EPS_PER_CLUSTER, dtype=jnp.int32)
+    idx = jnp.clip(start[:, None] + win[None, :], 0,
+                   state.ep_instance.shape[0] - 1)          # (B,W)
+    ok = win[None, :] < count[:, None]
+    return idx, ok, count
+
+
+def select(state: RoutingState, cluster: jax.Array, key: jax.Array
+           ) -> tuple[Selection, RoutingState]:
+    """Pick one endpoint per request according to each cluster's policy and
+    update the LB state (load counters + rr cursors).
+
+    cluster: (B,) int32, may contain NO_ROUTE (-1) → endpoint -1.
+    """
+    B = cluster.shape[0]
+    routable = cluster >= 0
+    cl = jnp.maximum(cluster, 0)
+    idx, ok, count = _window(state, cl)
+    policy = state.cluster_policy[cl]                       # (B,)
+    kr, kw, kp = jax.random.split(key, 3)
+
+    # --- round robin: cursor + stable rank of this request within its
+    # cluster this batch (the relay's counting sort gives the rank) -------- #
+    rank, _ = relay.positions_sort(cl, state.cluster_ep_start.shape[0])
+    rr_off = (state.rr_cursor[cl] + rank) % jnp.maximum(count, 1)
+
+    # --- random ----------------------------------------------------------- #
+    rnd_off = jax.random.randint(kr, (B,), 0, 1 << 30) % jnp.maximum(count, 1)
+
+    # --- least request -------------------------------------------------- #
+    # vectorised batch semantics: the r-th request (arrival order) of a
+    # cluster takes the r-th LEAST-loaded endpoint, emulating the paper's
+    # sequential per-request counters (a naive batch argmin would send the
+    # whole batch to one endpoint before any counter updates)
+    load = jnp.where(ok, state.ep_load[idx], jnp.iinfo(jnp.int32).max)
+    by_load = jnp.argsort(load, axis=1).astype(jnp.int32)     # (B,W)
+    lr_off = jnp.take_along_axis(
+        by_load, (rank % jnp.maximum(count, 1))[:, None], 1)[:, 0]
+
+    # --- weighted: Gumbel-max over log-weights ----------------------------- #
+    w = jnp.where(ok, state.ep_weight[idx], 0.0)
+    g = jax.random.gumbel(kw, w.shape)
+    wt_off = jnp.argmax(jnp.where(ok, jnp.log(w + 1e-9) + g, -jnp.inf),
+                        axis=1).astype(jnp.int32)
+
+    off = jnp.select(
+        [policy == POLICY_RR, policy == POLICY_RANDOM,
+         policy == POLICY_LEAST_REQUEST, policy == POLICY_WEIGHTED],
+        [rr_off, rnd_off, lr_off, wt_off], rr_off).astype(jnp.int32)
+
+    ep = jnp.take_along_axis(idx, off[:, None], 1)[:, 0]
+    ep = jnp.where(routable, ep, -1)
+    inst = jnp.where(routable, state.ep_instance[jnp.maximum(ep, 0)], -1)
+
+    # --- state update: load++ on chosen endpoints, cursors advance -------- #
+    new_load = state.ep_load.at[jnp.maximum(ep, 0)].add(
+        routable.astype(jnp.int32), mode="drop")
+    per_cluster = jax.ops.segment_sum(routable.astype(jnp.int32), cl,
+                                      num_segments=state.rr_cursor.shape[0])
+    new_cursor = (state.rr_cursor + per_cluster) % jnp.maximum(
+        state.cluster_ep_count, 1)
+    state = state._replace(ep_load=new_load, rr_cursor=new_cursor)
+    return Selection(ep, inst), state
+
+
+def release(state: RoutingState, endpoint: jax.Array, done: jax.Array
+            ) -> RoutingState:
+    """Decrement load counters for finished requests (connection close)."""
+    dec = jnp.where(done & (endpoint >= 0), -1, 0).astype(jnp.int32)
+    return state._replace(
+        ep_load=state.ep_load.at[jnp.maximum(endpoint, 0)].add(dec,
+                                                               mode="drop"))

@@ -1,0 +1,69 @@
+"""Request map — stream-id rewriting and response re-ordering (paper §4.1).
+
+When several p-socks multiplex onto one i-sock, XLB allocates *internal*
+request identifiers and maps them back to the original ids on the response
+path.  Here: requests admitted into instance pools get an internal id =
+(instance, slot); the original request id is stored per slot, and responses
+are returned to request order with one inverse gather.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import relay
+
+
+class SlotAssignment(NamedTuple):
+    instance: jax.Array     # (R,) int32 target instance (-1 unroutable)
+    slot: jax.Array         # (R,) int32 slot within instance (-1 held)
+    ok: jax.Array           # (R,) bool admitted
+
+
+def allocate_slots(instance: jax.Array, free_mask: jax.Array
+                   ) -> SlotAssignment:
+    """Assign each request a free slot on its chosen instance.
+
+    instance: (R,) int32 (may be -1); free_mask: (I, C) bool — True = free.
+    Stable: requests keep arrival order within an instance (HTTP/1.1 in-order
+    semantics); requests that exceed the free-slot count are held (ok=False),
+    the paper's bounded hold queue.
+    """
+    I, C = free_mask.shape
+    routable = instance >= 0
+    inst = jnp.where(routable, instance, 0)
+    # rank of each request within its instance (counting-sort, cf. relay)
+    rank, _ = relay.positions_sort(jnp.where(routable, inst, I), I + 1)
+    # free slots, free-first stable order per instance
+    order = jnp.argsort(~free_mask, axis=1, stable=True)    # (I,C) free first
+    n_free = free_mask.sum(axis=1)                          # (I,)
+    ok = routable & (rank < n_free[inst])
+    slot = jnp.where(ok, order[inst, jnp.minimum(rank, C - 1)], -1)
+    return SlotAssignment(jnp.where(routable, instance, -1), slot, ok)
+
+
+def scatter_to_pool(pool_val: jax.Array, assign: SlotAssignment,
+                    values: jax.Array) -> jax.Array:
+    """Write per-request values into (I, C, ...) pool arrays at (inst, slot).
+
+    Un-admitted rows are steered to an out-of-bounds index and dropped, so
+    they can never collide with a real slot write.
+    """
+    I = pool_val.shape[0]
+    i = jnp.where(assign.ok, assign.instance, I)     # OOB when not admitted
+    s = jnp.where(assign.ok, assign.slot, 0)
+    return pool_val.at[i, s].set(values, mode="drop")
+
+
+def gather_responses(pool_val: jax.Array, assign: SlotAssignment,
+                     fill=0) -> jax.Array:
+    """Inverse map: read back per-request values from the pool (response
+    re-ordering; un-admitted requests get ``fill``)."""
+    i = jnp.where(assign.ok, assign.instance, 0)
+    s = jnp.where(assign.ok, assign.slot, 0)
+    out = pool_val[i, s]
+    return jnp.where(assign.ok.reshape((-1,) + (1,) * (out.ndim - 1)),
+                     out, fill)

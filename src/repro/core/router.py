@@ -1,0 +1,46 @@
+"""Content-based routing — the eBPF filter/route managers (paper Fig. 4).
+
+The paper walks a bounded rule chain per request inside the kernel; here the
+walk is a vectorised gather over the flat rule tables for a whole request
+batch at once.  The bounded loop (ROUTE_MAX_NUM) becomes a masked window of
+``MAX_RULES_PER_SVC`` — the same verifier-friendly static bound.
+
+Byte-level protocol parsing stays on the host ingress (the paper's helper
+functions): requests arrive with an int32 feature vector of hashed L7 fields.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.routing_table import (MAX_RULES_PER_SVC, NO_ROUTE, WILDCARD,
+                                      RoutingState)
+
+
+def match_cluster(state: RoutingState, svc: jax.Array, features: jax.Array
+                  ) -> jax.Array:
+    """Resolve destination cluster per request.
+
+    svc: (B,) int32 service (virtual-IP) id; features: (B, N_FEATURES) int32.
+    Returns (B,) int32 cluster id, NO_ROUTE where no rule matched.
+
+    Matches rules sequentially (the paper: "the last matched rule resolves the
+    destination" is implemented as first-match over a priority-ordered chain —
+    the control plane emits rules most-specific-first).
+    """
+    B = svc.shape[0]
+    start = state.svc_rule_start[svc]                       # (B,)
+    count = state.svc_rule_count[svc]                       # (B,)
+    win = jnp.arange(MAX_RULES_PER_SVC, dtype=jnp.int32)    # (W,)
+    idx = jnp.clip(start[:, None] + win[None, :], 0,
+                   state.rule_field.shape[0] - 1)           # (B,W)
+    in_range = win[None, :] < count[:, None]                # (B,W)
+    fields = state.rule_field[idx]                          # (B,W)
+    expect = state.rule_value[idx]                          # (B,W)
+    actual = jnp.take_along_axis(features, fields, axis=1)  # (B,W)
+    hit = in_range & ((expect == WILDCARD) | (expect == actual))
+    any_hit = hit.any(axis=1)
+    first = jnp.argmax(hit, axis=1)                         # (B,)
+    cluster = state.rule_cluster[idx[jnp.arange(B), first]]
+    return jnp.where(any_hit, cluster, NO_ROUTE)

@@ -1,0 +1,170 @@
+"""Nested-map routing state — the eBPF map-in-map hierarchy (paper §4.2).
+
+Envoy's configuration tree (listener → filter → route → cluster → endpoint)
+is flattened into capacity-bounded, fixed-shape int32/float32 arrays with
+index references instead of pointers — exactly the transformation the paper
+performs for the eBPF verifier, which maps 1:1 onto XLA's static-shape
+constraint (DESIGN.md §2).  The whole state is a pytree of device arrays that
+is passed as an *argument* to the compiled datapath, so control-plane updates
+(delta refresh, core/delta.py) never trigger recompilation.
+
+Capacity bounds mirror the paper's 10K-entry map cap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Capacity bounds (the paper's FILTER_MAX_NUM / ROUTE_MAX_NUM / map capacity).
+MAX_SERVICES = 64          # listeners (virtual IPs)
+MAX_RULES = 256            # route rules, globally
+MAX_RULES_PER_SVC = 16     # bounded rule-chain walk per request
+MAX_CLUSTERS = 64          # destination clusters
+MAX_ENDPOINTS = 512        # backend instances, globally
+MAX_EPS_PER_CLUSTER = 64   # bounded LB scan per cluster
+N_FEATURES = 8             # hashed L7 header fields per request
+
+# LB policies (paper §4.1: round-robin, random, least request; + weighted)
+POLICY_RR = 0
+POLICY_RANDOM = 1
+POLICY_LEAST_REQUEST = 2
+POLICY_WEIGHTED = 3
+
+NO_ROUTE = jnp.int32(-1)
+WILDCARD = -1
+
+
+class RoutingState(NamedTuple):
+    """All tables the in-graph datapath reads (+ the counters it writes)."""
+
+    # --- listener / service level -------------------------------------- #
+    svc_rule_start: jax.Array    # (MAX_SERVICES,) i32 → index into rule_*
+    svc_rule_count: jax.Array    # (MAX_SERVICES,) i32
+    # --- route rules (content match) ----------------------------------- #
+    rule_field: jax.Array        # (MAX_RULES,) i32 feature column to inspect
+    rule_value: jax.Array        # (MAX_RULES,) i32 expected hash; -1 wildcard
+    rule_cluster: jax.Array      # (MAX_RULES,) i32 destination cluster
+    # --- clusters -------------------------------------------------------#
+    cluster_ep_start: jax.Array  # (MAX_CLUSTERS,) i32 → index into ep_*
+    cluster_ep_count: jax.Array  # (MAX_CLUSTERS,) i32
+    cluster_policy: jax.Array    # (MAX_CLUSTERS,) i32 POLICY_*
+    # --- endpoints ------------------------------------------------------#
+    ep_instance: jax.Array       # (MAX_ENDPOINTS,) i32 instance-lane id
+    ep_weight: jax.Array         # (MAX_ENDPOINTS,) f32
+    # --- mutable datapath state (load-balancing states, paper §4.2) ----- #
+    ep_load: jax.Array           # (MAX_ENDPOINTS,) i32 outstanding requests
+    rr_cursor: jax.Array         # (MAX_CLUSTERS,) i32 round-robin cursor
+    version: jax.Array           # () i32, bumped by every delta refresh
+
+
+class FlowMetrics(NamedTuple):
+    """Per-service traffic metrics (paper §4.2 third state type)."""
+
+    tx_bytes: jax.Array          # (MAX_SERVICES,) i32
+    rx_bytes: jax.Array          # (MAX_SERVICES,) i32
+    requests: jax.Array          # (MAX_SERVICES,) i32
+    no_route_match: jax.Array    # () i32
+    overflow: jax.Array          # () i32  (pool exhaustion / held requests)
+
+    @staticmethod
+    def zeros() -> "FlowMetrics":
+        z = jnp.zeros((), jnp.int32)
+        return FlowMetrics(jnp.zeros((MAX_SERVICES,), jnp.int32),
+                           jnp.zeros((MAX_SERVICES,), jnp.int32),
+                           jnp.zeros((MAX_SERVICES,), jnp.int32), z, z)
+
+
+def empty_state() -> RoutingState:
+    i = lambda n: jnp.zeros((n,), jnp.int32)
+    return RoutingState(
+        svc_rule_start=i(MAX_SERVICES), svc_rule_count=i(MAX_SERVICES),
+        rule_field=i(MAX_RULES),
+        rule_value=jnp.full((MAX_RULES,), WILDCARD, jnp.int32),
+        rule_cluster=jnp.full((MAX_RULES,), -1, jnp.int32),
+        cluster_ep_start=i(MAX_CLUSTERS), cluster_ep_count=i(MAX_CLUSTERS),
+        cluster_policy=i(MAX_CLUSTERS),
+        ep_instance=jnp.full((MAX_ENDPOINTS,), -1, jnp.int32),
+        ep_weight=jnp.ones((MAX_ENDPOINTS,), jnp.float32),
+        ep_load=i(MAX_ENDPOINTS), rr_cursor=i(MAX_CLUSTERS),
+        version=jnp.zeros((), jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Host-side (control plane) builder — mirrors the Go daemon that converts
+# protobuf Envoy config into the C structs of Figure 3(b).
+# --------------------------------------------------------------------------- #
+
+
+def fnv1a(s: str) -> int:
+    """Stable 31-bit string hash (the host-side 'protocol parse' helper)."""
+    h = 0x811C9DC5
+    for ch in s.encode():
+        h = ((h ^ ch) * 0x01000193) & 0xFFFFFFFF
+    return int(h & 0x7FFFFFFF)
+
+
+@dataclasses.dataclass
+class Rule:
+    field: int                   # feature column
+    value: str | None            # None = wildcard
+    cluster: str
+
+
+@dataclasses.dataclass
+class Cluster:
+    name: str
+    endpoints: list[int]         # instance-lane ids
+    policy: int = POLICY_LEAST_REQUEST
+    weights: list[float] | None = None
+
+
+@dataclasses.dataclass
+class ServiceConfig:
+    name: str
+    rules: list[Rule]
+
+
+def build_state(services: list[ServiceConfig], clusters: list[Cluster],
+                ) -> tuple[RoutingState, dict[str, int]]:
+    """Compile a control-plane config tree into the flat tables.
+
+    Returns (state, name→id maps for services and clusters).
+    """
+    assert len(services) <= MAX_SERVICES and len(clusters) <= MAX_CLUSTERS
+    st = jax.tree.map(np.asarray, empty_state())
+    st = RoutingState(*[np.array(a) for a in st])
+    cluster_id = {c.name: i for i, c in enumerate(clusters)}
+    svc_id = {s.name: i for i, s in enumerate(services)}
+
+    ep_cursor = 0
+    for ci, c in enumerate(clusters):
+        n = len(c.endpoints)
+        assert n <= MAX_EPS_PER_CLUSTER and ep_cursor + n <= MAX_ENDPOINTS
+        st.cluster_ep_start[ci] = ep_cursor
+        st.cluster_ep_count[ci] = n
+        st.cluster_policy[ci] = c.policy
+        st.ep_instance[ep_cursor:ep_cursor + n] = c.endpoints
+        if c.weights is not None:
+            st.ep_weight[ep_cursor:ep_cursor + n] = c.weights
+        ep_cursor += n
+
+    rule_cursor = 0
+    for si, s in enumerate(services):
+        assert len(s.rules) <= MAX_RULES_PER_SVC
+        st.svc_rule_start[si] = rule_cursor
+        st.svc_rule_count[si] = len(s.rules)
+        for r in s.rules:
+            st.rule_field[rule_cursor] = r.field
+            st.rule_value[rule_cursor] = (WILDCARD if r.value is None
+                                          else fnv1a(r.value))
+            st.rule_cluster[rule_cursor] = cluster_id[r.cluster]
+            rule_cursor += 1
+
+    state = RoutingState(*[jnp.asarray(a) for a in st])
+    return state, {"services": svc_id, "clusters": cluster_id}

@@ -1,0 +1,176 @@
+"""Sidecar baselines — the architectures XLB replaces (paper Fig. 1 a/b).
+
+Both baselines implement the exact Engine contract (admit + step over I×C
+instance pools) but place the LB where Istio/Cilium place the proxy:
+
+  * ``IstioEngine``  — a *per-instance proxy*: every instance lane is its own
+    compiled program with its own cache; the host router inspects every
+    response, re-routes, and re-launches per-instance programs each step.
+    Overheads reproduced: per-hop host↔device copies (syscalls / kernel stack
+    traversals), per-instance dispatch (cross-process scheduling), duplicate
+    routing work (duplicate protocol processing).
+  * ``CiliumEngine`` — a *global proxy*: one compiled program for all lanes
+    (sockmap-style shortcut) but routing/admission still runs on the host, so
+    each step still pays one host round-trip and the python LB.
+
+The XLB engine (core/interpose.py) removes all of the above by compiling
+admission + decode into a single on-device program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.interpose import RequestBatch
+from repro.core.routing_table import (POLICY_LEAST_REQUEST, POLICY_RANDOM,
+                                      POLICY_RR, POLICY_WEIGHTED, RoutingState)
+from repro.models import model as M
+from repro.models.transformer import DEFAULT_CTX
+
+
+class HostRouter:
+    """The user-space LB logic of the proxy (numpy, per-request python)."""
+
+    def __init__(self, routing: RoutingState):
+        self.t = jax.tree.map(lambda a: np.array(a, copy=True), routing)
+        self.rng = np.random.RandomState(0)
+
+    def match(self, svc: int, features: np.ndarray) -> int:
+        t = self.t
+        start, count = int(t.svc_rule_start[svc]), int(t.svc_rule_count[svc])
+        for r in range(start, start + count):
+            exp = int(t.rule_value[r])
+            if exp == -1 or exp == int(features[int(t.rule_field[r])]):
+                return int(t.rule_cluster[r])
+        return -1
+
+    def select(self, cluster: int) -> tuple[int, int]:
+        t = self.t
+        start, count = (int(t.cluster_ep_start[cluster]),
+                        int(t.cluster_ep_count[cluster]))
+        if count == 0:
+            return -1, -1
+        pol = int(t.cluster_policy[cluster])
+        if pol == POLICY_RR:
+            off = int(t.rr_cursor[cluster]) % count
+            t.rr_cursor[cluster] += 1
+        elif pol == POLICY_RANDOM:
+            off = int(self.rng.randint(count))
+        elif pol == POLICY_WEIGHTED:
+            w = t.ep_weight[start:start + count]
+            off = int(self.rng.choice(count, p=w / w.sum()))
+        else:                                   # least request
+            off = int(np.argmin(t.ep_load[start:start + count]))
+        ep = start + off
+        t.ep_load[ep] += 1
+        return ep, int(t.ep_instance[ep])
+
+    def release(self, ep: int) -> None:
+        if ep >= 0:
+            self.t.ep_load[ep] -= 1
+
+
+@dataclasses.dataclass
+class SidecarEngine:
+    """Host-interposed serving engine (mode: 'istio' | 'cilium')."""
+
+    cfg: ModelConfig
+    n_instances: int
+    slots: int
+    max_len: int
+    routing: RoutingState
+    mode: str = "istio"
+    eos: int = 1
+    ctx: Any = DEFAULT_CTX
+
+    def __post_init__(self):
+        I, C = self.n_instances, self.slots
+        self.router = HostRouter(self.routing)
+        self.pool_req = np.full((I, C), -1, np.int64)
+        self.pool_ep = np.full((I, C), -1, np.int64)
+        self.pool_len = np.zeros((I, C), np.int64)
+        self.pool_tok = np.zeros((I, C), np.int64)
+        self.pool_active = np.zeros((I, C), bool)
+        dtype = jnp.float32
+        if self.mode == "istio":
+            # one cache + one compiled program PER instance (per-service proxy)
+            self.caches = [M.init_cache(self.cfg, C, self.max_len, dtype)
+                           for _ in range(I)]
+        else:
+            self.caches = M.init_cache(self.cfg, I * C, self.max_len, dtype)
+        cfg, ctx = self.cfg, self.ctx
+
+        @jax.jit
+        def decode(params, tokens, lengths, cache):
+            logits, cache = M.decode_step(cfg, params, tokens, lengths, cache,
+                                          ctx=ctx)
+            return jnp.argmax(logits, -1).astype(jnp.int32), cache
+
+        self._decode = decode
+
+    # ------------------------------------------------------------------ #
+    def admit(self, reqs: RequestBatch) -> int:
+        """Host-side routing + slot allocation. Returns #admitted."""
+        req_id = np.asarray(reqs.req_id)
+        svc = np.asarray(reqs.svc)
+        feats = np.asarray(reqs.features)
+        tok = np.asarray(reqs.token)
+        admitted = 0
+        for r in range(len(req_id)):
+            if req_id[r] < 0:
+                continue
+            cluster = self.router.match(int(svc[r]), feats[r])
+            if cluster < 0:
+                continue
+            ep, inst = self.router.select(cluster)
+            if inst < 0:
+                continue
+            free = np.where(~self.pool_active[inst])[0]
+            if len(free) == 0:                   # held (pool exhausted)
+                self.router.release(ep)
+                continue
+            s = int(free[0])
+            self.pool_req[inst, s] = req_id[r]
+            self.pool_ep[inst, s] = ep
+            self.pool_len[inst, s] = 0
+            self.pool_tok[inst, s] = tok[r]
+            self.pool_active[inst, s] = True
+            admitted += 1
+        return admitted
+
+    # ------------------------------------------------------------------ #
+    def step(self, params) -> dict:
+        """One decode step for all lanes, host-mediated."""
+        I, C = self.n_instances, self.slots
+        if self.mode == "istio":
+            nxt = np.zeros((I, C), np.int64)
+            for i in range(I):                   # per-instance program launch
+                toks = jnp.asarray(self.pool_tok[i][:, None], jnp.int32)
+                lens = jnp.asarray(self.pool_len[i], jnp.int32)
+                out, self.caches[i] = self._decode(params, toks, lens,
+                                                   self.caches[i])
+                nxt[i] = np.asarray(out)         # proxy reads every response
+        else:
+            toks = jnp.asarray(self.pool_tok.reshape(-1, 1), jnp.int32)
+            lens = jnp.asarray(self.pool_len.reshape(-1), jnp.int32)
+            out, self.caches = self._decode(params, toks, lens, self.caches)
+            nxt = np.asarray(out).reshape(I, C)  # one global proxy round-trip
+
+        # vectorised host bookkeeping (numpy): keeps the baseline honest — the
+        # architectural cost we measure is the per-request python ROUTING and
+        # (for istio) per-instance program launches, not sloppy loops.
+        act = self.pool_active
+        self.pool_len[act] += 1
+        self.pool_tok[act] = nxt[act]
+        done = act & ((nxt == self.eos) | (self.pool_len >= self.max_len - 1))
+        for ep in self.pool_ep[done]:            # release load counters
+            self.router.release(int(ep))
+        self.pool_active[done] = False
+        self.pool_req[done] = -1
+        return {"done": int(done.sum()), "active": int(act.sum() - done.sum())}

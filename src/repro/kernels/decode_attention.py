@@ -1,0 +1,105 @@
+"""GQA decode attention (one token vs a long KV cache) as a Pallas kernel.
+
+TPU adaptation: FlashDecoding's split-K over SMs becomes KV-block streaming
+along the minor (sequential) grid dimension with running (m, l, acc) state in
+VMEM scratch, exactly like the prefill kernel but with Sq = 1 packed as the
+G axis: the (G, BK) score tile keeps the MXU busy even at batch-1 decode
+(G = q-heads-per-kv-head, e.g. 6–8 for GQA; the paper-assigned archs make
+this the dominant serving shape, decode_32k).
+
+Per-sequence lengths (continuous batching) mask the tail blocks; blocks past
+the longest length still stream but are masked (static grid — the verifier-
+friendly bounded loop, cf. eBPF).
+
+Grid: (B·K, S/BK).  q: (B, K, G, hd) packed; cache k/v: (B, S, K, hd).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, block_k: int):
+    ki = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # (G, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (BK, hd)
+    v = v_ref[0].astype(jnp.float32)                  # (BK, hd)
+    length = len_ref[0]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos <= length, s, NEG_INF)         # per-seq causal bound
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
+                     scale: float | None = None, interpret: bool = True):
+    """q: (B, H, hd); k/v_cache: (B, S, K, hd); lengths: (B,) — new token sits
+    at position ``lengths[b]`` (already written into the cache).
+
+    Returns (B, H, hd).
+    """
+    B, H, hd = q.shape
+    _, S, K, _ = k_cache.shape
+    G = H // K
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    block_k = min(block_k, S)
+    assert S % block_k == 0
+
+    qp = q.reshape(B, K, G, hd).reshape(B * K, G, hd)
+    kt = k_cache.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    vt = v_cache.transpose(0, 2, 1, 3).reshape(B * K, S, hd)
+    lens = jnp.repeat(lengths.astype(jnp.int32), K)
+
+    grid = (B * K, S // block_k)
+    out = pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bk, ki: (bk,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, G, hd), lambda bk, ki: (bk, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bk, ki: (bk, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda bk, ki: (bk, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd), lambda bk, ki: (bk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lens, qp, kt, vt)
+    return out.reshape(B, K * G, hd)

@@ -1,0 +1,53 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernels execute their bodies in
+Python through the Pallas interpreter — bit-accurate against the BlockSpec
+pipeline), and to False on real TPU backends where they lower to Mosaic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import (decode_attention as _da, flash_attention as _fa,
+                           relay_dispatch as _rd, route_match as _rm,
+                           ssd_scan as _ss)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k,
+                               interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512):
+    return _da.decode_attention(q, k_cache, v_cache, lengths,
+                                block_k=block_k,
+                                interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(xdt, a_log, Bm, Cm, *, chunk: int = 128):
+    return _ss.ssd_scan(xdt, a_log, Bm, Cm, chunk=chunk,
+                        interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("block_r",))
+def route_match(svc, features, state, *, block_r: int = 256):
+    return _rm.route_match(svc, features, state, block_r=block_r,
+                           interpret=_default_interpret())
+
+
+@partial(jax.jit, static_argnames=("n_dest", "block_n"))
+def relay_slots(idx, n_dest: int, *, block_n: int = 1024):
+    return _rd.relay_slots(idx, n_dest, block_n=block_n,
+                           interpret=_default_interpret())

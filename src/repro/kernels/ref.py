@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert_allclose against
+these across shape/dtype sweeps)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        scale: float | None = None):
+    """q: (B,S,H,hd); k/v: (B,S,K,hd) — naive full-matrix GQA attention."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    qg = q.reshape(B, S, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths,
+                         scale: float | None = None):
+    """q: (B,H,hd); caches (B,S,K,hd); attend to kpos <= lengths[b]."""
+    B, H, hd = q.shape
+    S, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(hd)
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache.astype(jnp.float32)) * scale
+    mask = jnp.arange(S)[None, :] <= lengths[:, None]          # (B,S)
+    s = jnp.where(mask[:, None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(xdt, a_log, Bm, Cm):
+    """Sequential (non-chunked) SSD recurrence — the ground truth.
+
+    xdt:(B,S,nh,hd)=dt⊙x; a_log:(B,S,nh)=dt·A; Bm/Cm:(B,S,nh,N).
+    """
+    B, S, nh, hd = xdt.shape
+    N = Bm.shape[-1]
+
+    def step(h, inp):
+        x_t, a_t, b_t, c_t = inp
+        h = jnp.exp(a_t)[..., None, None] * h + jnp.einsum(
+            "bhp,bhn->bhpn", x_t, b_t)
+        y = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B, nh, hd, N), jnp.float32)
+    xs = (xdt.transpose(1, 0, 2, 3).astype(jnp.float32),
+          a_log.transpose(1, 0, 2).astype(jnp.float32),
+          Bm.transpose(1, 0, 2, 3).astype(jnp.float32),
+          Cm.transpose(1, 0, 2, 3).astype(jnp.float32))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(xdt.dtype)
+
+
+def route_match_ref(svc, features, state):
+    """First-match routing + full-scan least-request (cf. core.router)."""
+    from repro.core import router
+    cluster = router.match_cluster(state, svc, features)
+    cl = jnp.maximum(cluster, 0)
+    start = state.cluster_ep_start[cl]
+    count = state.cluster_ep_count[cl]
+    W = 64
+    win = jnp.arange(W, dtype=jnp.int32)
+    idx = jnp.clip(start[:, None] + win[None, :], 0,
+                   state.ep_load.shape[0] - 1)
+    ok = win[None, :] < count[:, None]
+    load = jnp.where(ok, state.ep_load[idx], 2**30)
+    best = jnp.argmin(load, axis=1)
+    ep = jnp.take_along_axis(idx, best[:, None], 1)[:, 0]
+    ep = jnp.where((cluster >= 0) & (count > 0), ep, -1)
+    return cluster, ep
+
+
+def relay_slots_ref(idx, n_dest: int):
+    from repro.core import relay
+    return relay.positions_sort(idx, n_dest)

@@ -1,0 +1,67 @@
+"""Relay slot assignment (counting-sort rank) as a Pallas TPU kernel.
+
+The socket-relay dispatch needs, per payload row, its *stable rank among rows
+with the same destination* (→ pool slot).  The GShard form is a (N, E)
+one-hot cumsum — O(N·E) memory traffic.  This kernel tiles it: a (BN, E)
+one-hot tile is built in VMEM, ranks within the tile come from a local
+cumsum, and a running per-destination base counter (E,) carried in VMEM
+scratch across the sequential grid provides the global offset.  HBM traffic
+drops from O(N·E) to O(N + E) per tile — the difference between streaming
+the whole dispatch matrix and streaming only the index vector.
+
+Grid: (N / BN,) sequential.  idx: (N,) int32 destinations.
+Outputs: slot (N,) int32 rank-within-destination; load (E,) int32 totals.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _relay_kernel(idx_ref, slot_ref, load_ref, counts_ref, *, n_dest: int,
+                  block_n: int):
+    i = pl.program_id(0)
+    n = pl.num_programs(0)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    idx = idx_ref[...]                                  # (BN,)
+    oh = (idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_n, n_dest), 1)).astype(jnp.int32)
+    local_rank = jnp.cumsum(oh, axis=0) - oh            # rank before self
+    base = counts_ref[...]                              # (E,)
+    slot_ref[...] = (base[idx] + jnp.sum(local_rank * oh, axis=1)
+                     ).astype(jnp.int32)
+    counts_ref[...] = base + jnp.sum(oh, axis=0)
+
+    @pl.when(i == n - 1)
+    def _emit():
+        load_ref[...] = counts_ref[...]
+
+
+def relay_slots(idx, n_dest: int, *, block_n: int = 1024,
+                interpret: bool = True):
+    """idx: (N,) int32 → (slot (N,), load (E,)).  Oracle: relay.positions_*."""
+    N = idx.shape[0]
+    block_n = min(block_n, N)
+    assert N % block_n == 0
+    grid = (N // block_n,)
+    slot, load = pl.pallas_call(
+        functools.partial(_relay_kernel, n_dest=n_dest, block_n=block_n),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
+                   pl.BlockSpec((n_dest,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32),
+                   jax.ShapeDtypeStruct((n_dest,), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((n_dest,), jnp.int32)],
+        interpret=interpret,
+    )(idx.astype(jnp.int32))
+    return slot, load

@@ -1,0 +1,98 @@
+"""XLB datapath hot loop — rule match + least-request select — as one fused
+Pallas kernel (the paper's filter_manager → route_manager → load_balancer
+tail-call chain, Figure 4).
+
+The eBPF version walks ROUTE_MAX_NUM rules per request and scans endpoint
+load counters; the TPU version processes a (BR) tile of requests against the
+full (bounded) rule window and endpoint window in VMEM with masked vector
+ops — the verifier's static bounds become the static block shapes.
+
+Per request r:
+  1. rules[svc_start[svc_r] .. +count]: first i where field matches → cluster
+  2. endpoints[cluster_start .. +count]: argmin load (least-request)
+Outputs: cluster id (-1 = no_route_match), endpoint id (-1 = unroutable).
+
+Grid: (R / BR,).  Tables are small (≤ 64×… int32) and stay VMEM-resident
+across the whole grid — they are the eBPF maps pinned in kernel memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, MAX_RULES_PER_SVC,
+                                      WILDCARD)
+
+BIG = 2**30        # python literal — a jnp scalar here would be captured as
+                   # a constant by the Pallas kernel (verifier-rejected)
+
+
+def _route_kernel(svc_ref, feat_ref, rs_ref, rc_ref, rf_ref, rv_ref,
+                  rcl_ref, cs_ref, cc_ref, load_ref, cluster_ref, ep_ref, *,
+                  block_r: int):
+    svc = svc_ref[...]                                 # (BR,)
+    feats = feat_ref[...]                              # (BR, F)
+    W = MAX_RULES_PER_SVC
+
+    start = rs_ref[svc]                                # (BR,)
+    count = rc_ref[svc]
+    win = jax.lax.broadcasted_iota(jnp.int32, (block_r, W), 1)
+    idx = jnp.clip(start[:, None] + win, 0, rf_ref.shape[0] - 1)
+    in_range = win < count[:, None]
+    fields = rf_ref[idx]                               # (BR, W)
+    expect = rv_ref[idx]
+    actual = jnp.take_along_axis(feats, fields, axis=1)
+    hit = in_range & ((expect == WILDCARD) | (expect == actual))
+    any_hit = hit.any(axis=1)
+    first = jnp.argmax(hit, axis=1)
+    rix = jnp.take_along_axis(idx, first[:, None], axis=1)[:, 0]
+    cluster = jnp.where(any_hit, rcl_ref[rix], -1)
+    cluster_ref[...] = cluster
+
+    # least-request over the endpoint window (paper: full scan; small N)
+    WE = MAX_EPS_PER_CLUSTER
+    cl = jnp.maximum(cluster, 0)
+    estart = cs_ref[cl]
+    ecount = cc_ref[cl]
+    ewin = jax.lax.broadcasted_iota(jnp.int32, (block_r, WE), 1)
+    eidx = jnp.clip(estart[:, None] + ewin, 0, load_ref.shape[0] - 1)
+    eok = ewin < ecount[:, None]
+    load = jnp.where(eok, load_ref[eidx], BIG)
+    best = jnp.argmin(load, axis=1)
+    ep = jnp.take_along_axis(eidx, best[:, None], axis=1)[:, 0]
+    ep_ref[...] = jnp.where((cluster >= 0) & (ecount > 0), ep, -1)
+
+
+def route_match(svc, features, state, *, block_r: int = 256,
+                interpret: bool = True):
+    """svc: (R,) i32; features: (R, F) i32; state: RoutingState.
+
+    Returns (cluster (R,), endpoint (R,)) — least-request selection.
+    """
+    R, F = features.shape
+    block_r = min(block_r, R)
+    assert R % block_r == 0
+    grid = (R // block_r,)
+    tables = [state.svc_rule_start, state.svc_rule_count, state.rule_field,
+              state.rule_value, state.rule_cluster, state.cluster_ep_start,
+              state.cluster_ep_count, state.ep_load]
+    table_specs = [
+        pl.BlockSpec(t.shape, lambda r, _n=len(t.shape): (0,) * _n)
+        for t in tables]
+    cluster, ep = pl.pallas_call(
+        functools.partial(_route_kernel, block_r=block_r),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r,), lambda r: (r,)),
+                  pl.BlockSpec((block_r, F), lambda r: (r, 0))] + table_specs,
+        out_specs=[pl.BlockSpec((block_r,), lambda r: (r,)),
+                   pl.BlockSpec((block_r,), lambda r: (r,))],
+        out_shape=[jax.ShapeDtypeStruct((R,), jnp.int32),
+                   jax.ShapeDtypeStruct((R,), jnp.int32)],
+        interpret=interpret,
+    )(svc, features, *tables)
+    return cluster, ep

@@ -1,0 +1,100 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+TPU adaptation (DESIGN.md §2): the reference CUDA kernel parallelises the
+recurrence with warp-level scans; the TPU formulation uses the *state-space
+duality*: per chunk, Y = ((C·Bᵀ)⊙L)·X (an MXU matmul over the chunk) plus a
+rank-N state correction carried across chunks.  The chunk axis is the
+minor-most (sequential) grid dimension, and the running state h (hd × N,
+fp32) lives in VMEM scratch across grid steps — the inter-chunk recurrence
+costs one (hd, N) FMA per chunk, everything else is systolic matmul.
+
+Grid: (B·nh, S/Q) with Q the chunk length (multiple of 128 for the MXU).
+Inputs are pre-split per head: xdt (B·nh, S, hd), a_log (B·nh, S),
+Bm/Cm (B·nh, S, N).  Output (B·nh, S, hd).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, o_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # (Q, hd)  = dt ⊙ X
+    a = a_ref[0].astype(jnp.float32)          # (Q,)     = dt · A (negative)
+    Bm = b_ref[0].astype(jnp.float32)         # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)         # (Q, N)
+
+    acum = jnp.cumsum(a)                      # (Q,)
+    # intra-chunk decay matrix L[i,j] = exp(acum_i - acum_j - a_j ... )
+    seg = acum[:, None] - acum[None, :]       # sum_{j<k<=i} a_k  (i≥j)
+    Q = a.shape[0]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    # diagonal block: ((C Bᵀ) ⊙ L) X
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q,Q)
+    y = jax.lax.dot_general(scores * L, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)       # (Q,hd)
+
+    # inter-chunk: contribution of the carried state, then state update
+    h = h_ref[...]                            # (hd, N)
+    decay_in = jnp.exp(acum)[:, None]         # (Q,1) decay from chunk start
+    y = y + decay_in * jax.lax.dot_general(
+        Cm, h, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)   # (Q,N)·(hd,N)ᵀ → (Q,hd)
+
+    total = acum[-1]
+    decay_out = jnp.exp(total - acum)[:, None]           # (Q,1)
+    new_state = jax.lax.dot_general(
+        x * decay_out, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # (hd, N)
+    h_ref[...] = jnp.exp(total) * h + new_state
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def ssd_scan(xdt, a_log, Bm, Cm, *, chunk: int = 128,
+             interpret: bool = True):
+    """xdt: (B, S, nh, hd) (= dt⊙x); a_log: (B, S, nh); Bm/Cm: (B, S, nh, N).
+
+    Returns y: (B, S, nh, hd).  VMEM per program at (Q=128, hd=64, N=128):
+    x/y 2·Q·hd·4 + B/C 2·Q·N·4 + L/scores 2·Q²·4 + h hd·N·4 ≈ 0.4 MB.
+    """
+    B, S, nh, hd = xdt.shape
+    N = Bm.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+
+    xt = xdt.transpose(0, 2, 1, 3).reshape(B * nh, S, hd)
+    at = a_log.transpose(0, 2, 1).reshape(B * nh, S)
+    bt = Bm.transpose(0, 2, 1, 3).reshape(B * nh, S, N)
+    ct = Cm.transpose(0, 2, 1, 3).reshape(B * nh, S, N)
+
+    grid = (B * nh, S // chunk)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk), lambda h, c: (h, c)),
+            pl.BlockSpec((1, chunk, N), lambda h, c: (h, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda h, c: (h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda h, c: (h, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * nh, S, hd), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(xt, at, bt, ct)
+    return out.reshape(B, nh, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (not module constants) so importing this module never
+touches jax device state; dryrun.py sets XLA_FLAGS before calling.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+from repro.sharding.specs import MeshSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """Target: TPU v5e pods — 16×16 (256 chips) per pod; 2 pods = 512 chips.
+
+    Axes: "pod" (slow DCI hop), "data" (DP/FSDP), "model" (TP/EP/SP).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_spec(*, multi_pod: bool = False) -> MeshSpec:
+    return MeshSpec(make_production_mesh(multi_pod=multi_pod))
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,55 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it trains the *reduced* (smoke) config of the selected
+architecture end-to-end (the full configs are exercised via dryrun.py); on a
+real fleet the same entry point takes ``--full`` and the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config, smoke_config
+from repro.data.pipeline import DataConfig, Pipeline
+from repro.optim import adamw
+from repro.runtime import train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ASSIGNED_ARCHS
+                    + ["xlb-service-model"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config (requires a real TPU fleet)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = smoke_config(cfg)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params on "
+          f"{len(jax.devices())} device(s)")
+
+    pipe = Pipeline(DataConfig(
+        vocab=cfg.vocab, seq_len=args.seq, global_batch=args.global_batch,
+        enc_frames=cfg.enc_frames if cfg.is_encdec else 0,
+        d_model=cfg.d_model))
+    tcfg = train_loop.TrainConfig(
+        steps=args.steps, ckpt_every=max(args.steps // 4, 10),
+        ckpt_dir=args.ckpt_dir or f"/tmp/repro-{cfg.name}",
+        microbatch=args.microbatch,
+        opt=adamw.AdamWConfig(lr=args.lr), log_every=10)
+    out = train_loop.run(cfg, pipe, tcfg)
+    losses = [h["loss"] for h in out["history"]]
+    print(f"done: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,397 @@
+"""Attention mixers: GQA/MQA, MLA (DeepSeek-V2), full + cached-decode paths.
+
+Layout conventions
+------------------
+* Weights are kept FLAT on the head axis — ``wq: (D, H*hd)`` — so explicit
+  shardings stay divisible even when ``H`` is not (yi-34b: 56 heads over a
+  16-way model axis; 56*128 = 7168 is divisible).  Reshape to heads happens
+  inside the mixer where only the compiler sees it.
+* ``lengths: (B,)`` int32 — per-sequence valid length.  Full paths mask with a
+  causal+length mask; decode paths write KV at ``lengths`` (continuous
+  batching: every sequence may sit at a different position).
+* Caches are bf16 dicts; decode returns the functionally-updated cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import Params, apply_rope, dense_init, split_keys
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# Parameter init
+# --------------------------------------------------------------------------- #
+
+
+def init_gqa(key, cfg: ModelConfig, dtype) -> Params:
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = split_keys(key, 4)
+    return {
+        "wq": dense_init(ks[0], (D, H * hd), dtype),
+        "wk": dense_init(ks[1], (D, K * hd), dtype),
+        "wv": dense_init(ks[2], (D, K * hd), dtype),
+        "wo": dense_init(ks[3], (H * hd, D), dtype),
+    }
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> Params:
+    m: MLAConfig = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    ks = split_keys(key, 6)
+    p: Params = {
+        # kv down-projection: latent + decoupled rope key
+        "w_dkv": dense_init(ks[0], (D, m.kv_lora_rank + m.qk_rope_head_dim), dtype),
+        # up-projections out of the latent
+        "w_uk": dense_init(ks[1], (m.kv_lora_rank, H * m.qk_nope_head_dim), dtype),
+        "w_uv": dense_init(ks[2], (m.kv_lora_rank, H * m.v_head_dim), dtype),
+        "wo": dense_init(ks[3], (H * m.v_head_dim, D), dtype),
+    }
+    if m.q_lora_rank:
+        p["w_dq"] = dense_init(ks[4], (D, m.q_lora_rank), dtype)
+        p["w_uq"] = dense_init(ks[5], (m.q_lora_rank, H * m.qk_head_dim), dtype)
+    else:
+        p["w_uq"] = dense_init(ks[5], (D, H * m.qk_head_dim), dtype)
+    return p
+
+
+def init_attn(key, cfg: ModelConfig, dtype) -> Params:
+    if cfg.mla is not None:
+        return init_mla(key, cfg, dtype)
+    return init_gqa(key, cfg, dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Cache init
+# --------------------------------------------------------------------------- #
+
+
+def init_gqa_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    K, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, K, hd), dtype),
+        "v": jnp.zeros((batch, max_len, K, hd), dtype),
+    }
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Params:
+    if cfg.mla is not None:
+        return init_mla_cache(cfg, batch, max_len, dtype)
+    return init_gqa_cache(cfg, batch, max_len, dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Core scaled-dot-product helpers (pure jnp reference path; the Pallas
+# flash kernel in kernels/flash_attention is numerically checked against this)
+# --------------------------------------------------------------------------- #
+
+
+def sdpa(q, k, v, scale: float, *, causal: bool = False, mask=None,
+         shard=None, q_chunk: int = 0, expand_kv: bool = False):
+    """q:(B,Sq,H,hd) k/v:(B,Skv,K,·) grouped-query attention, fp32 softmax.
+
+    ``causal``: build the causal mask on the fly (per chunk — never
+    materialised at (Sq, Skv)).  ``mask``: optional explicit mask
+    broadcastable to (B, 1, Sq, Skv) (decode path); mutually exclusive with
+    ``causal`` chunking.
+    ``q_chunk``: >0 → memory-efficient attention: scan over query chunks so
+    only a (B, H, CQ, Skv) score slab is alive at a time (the jnp analogue of
+    the Pallas flash kernel's VMEM streaming; the dry-run lowers this path).
+    ``shard``: optional (x, kind) sharding-constraint callback.
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    con = shard or (lambda x, kind: x)
+    H_real = H
+    if expand_kv:
+        # GQA→MHA expansion (+ zero-padding to ``expand_kv`` heads): when
+        # neither K nor G divides the model axis (chameleon 8×8, internlm2
+        # 8×6, yi 8×7→pad 64, whisper 20×1→pad 32), replicating KV heads
+        # makes the whole attention head-shardable end-to-end — trading KV
+        # reads (and padded-head FLOPs) for zero score-slab resharding.
+        if K < H:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+            K, G = H, 1
+        if expand_kv > H:
+            pad = [(0, 0), (0, 0), (0, expand_kv - H), (0, 0)]
+            q = jnp.pad(q, pad)
+            k = jnp.pad(k, pad)
+            v = jnp.pad(v, pad)
+            K = H = expand_kv
+
+    def block(q_blk, q_off):
+        """q_blk: (B, CQ, K, G, hd); q_off: absolute offset of the chunk."""
+        CQ = q_blk.shape[1]
+        scores = jnp.einsum("bqkgh,bskh->bkgqs", q_blk, k)
+        scores = con(scores.astype(jnp.float32), "scores") * scale
+        if causal:
+            qpos = q_off + jax.lax.broadcasted_iota(
+                jnp.int32, (CQ, Skv), 0)
+            kpos = jax.lax.broadcasted_iota(jnp.int32, (CQ, Skv), 1)
+            scores = jnp.where((kpos <= qpos)[None, None, None], scores,
+                               NEG_INF)
+        elif mask is not None:
+            scores = jnp.where(mask[:, :, None], scores, NEG_INF)
+        w = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bkgqs,bskh->bqkgh", w.astype(v.dtype), v)
+
+    qg = con(q.reshape(B, Sq, K, G, hd), "heads")
+    if q_chunk and Sq > q_chunk and Sq % q_chunk == 0:
+        # materialise K/V once per layer OUTSIDE the chunk loop (otherwise the
+        # tp all-gather of K/V re-runs every chunk iteration — Megatron-SP's
+        # "gather once, reduce-scatter after" pattern)
+        k = con(k, "kv_full")
+        v = con(v, "kv_full")
+        nc = Sq // q_chunk
+        qc = qg.reshape(B, nc, q_chunk, K, G, hd).transpose(1, 0, 2, 3, 4, 5)
+        offs = jnp.arange(nc, dtype=jnp.int32) * q_chunk
+        # checkpoint the chunk: otherwise grad-of-map stores the fp32 score
+        # slab of EVERY chunk simultaneously (flash-bwd recompute tradeoff)
+        out = jax.lax.map(lambda args: jax.checkpoint(block)(*args),
+                          (qc, offs))
+        out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, K, G,
+                                                      v.shape[-1])
+    else:
+        out = block(qg, jnp.int32(0))
+    out = out.reshape(B, Sq, H, v.shape[-1])
+    return out[:, :, :H_real] if H != H_real else out
+
+
+def make_causal_mask(Sq: int, Skv: int, q_offset: int = 0):
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Skv)[None, :]
+    return (kpos <= qpos)[None, None]                  # (1,1,Sq,Skv)
+
+
+def make_decode_mask(lengths, Skv: int):
+    """Decode: new token at position ``lengths`` attends to kpos <= lengths."""
+    kpos = jnp.arange(Skv)[None, :]
+    return (kpos <= lengths[:, None])[:, None, None]   # (B,1,1,Skv)
+
+
+# --------------------------------------------------------------------------- #
+# GQA/MQA mixer
+# --------------------------------------------------------------------------- #
+
+
+def gqa_full(cfg: ModelConfig, p: Params, x, positions, *, causal: bool = True,
+             kv_x=None, kv_positions=None, cache: Optional[Params] = None,
+             shard=None, q_chunk: int = 0, expand_kv: bool = False):
+    """Full-sequence attention (train / prefill / encoder / cross).
+
+    ``kv_x`` != None → cross-attention (no causal mask, no rope on whisper-style
+    cross path is still applied for simplicity of a shared code path: we use
+    rope only when kv_x is None, matching whisper's learned-pos stub).
+    Returns (out, new_cache); new_cache is None unless ``cache`` given.
+    """
+    B, Sq, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, Sq, H, hd)
+    src = kv_x if kv_x is not None else x
+    Skv = src.shape[1]
+    k = (src @ p["wk"]).reshape(B, Skv, K, hd)
+    v = (src @ p["wv"]).reshape(B, Skv, K, hd)
+    if kv_x is None:                                   # self-attention: rope
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions if kv_positions is None else kv_positions,
+                       cfg.rope_theta)
+    out = sdpa(q, k, v, 1.0 / jnp.sqrt(hd).astype(jnp.float32),
+               causal=causal, shard=shard, q_chunk=q_chunk,
+               expand_kv=expand_kv)
+    new_cache = None
+    if cache is not None:
+        S = cache["k"].shape[1]
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            if Skv <= S else cache["k"],
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            if Skv <= S else cache["v"],
+        }
+    return out.reshape(B, Sq, H * hd) @ p["wo"], new_cache
+
+
+def gqa_decode(cfg: ModelConfig, p: Params, x, lengths, cache: Params):
+    """One-token decode. x:(B,1,D); cache k/v:(B,S,K,hd); lengths:(B,)."""
+    B, _, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, 1, H, hd)
+    k = (x @ p["wk"]).reshape(B, 1, K, hd)
+    v = (x @ p["wv"]).reshape(B, 1, K, hd)
+    q = apply_rope(q, lengths[:, None], cfg.rope_theta)
+    k = apply_rope(k, lengths[:, None], cfg.rope_theta)
+    b = jnp.arange(B)
+    ck = cache["k"].at[b, lengths].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[b, lengths].set(v[:, 0].astype(cache["v"].dtype))
+    mask = make_decode_mask(lengths, ck.shape[1])
+    out = sdpa(q, ck, cv, 1.0 / jnp.sqrt(hd).astype(jnp.float32), mask=mask)
+    return out.reshape(B, 1, H * hd) @ p["wo"], {"k": ck, "v": cv}
+
+
+def gqa_cross_decode(cfg: ModelConfig, p: Params, x, cross_k, cross_v):
+    """Cross-attention decode against precomputed encoder K/V (whisper)."""
+    B, Sq, D = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, Sq, H, hd)
+    out = sdpa(q, cross_k, cross_v, 1.0 / jnp.sqrt(hd).astype(jnp.float32))
+    return out.reshape(B, Sq, H * hd) @ p["wo"]
+
+
+# --------------------------------------------------------------------------- #
+# MLA mixer (DeepSeek-V2)
+# --------------------------------------------------------------------------- #
+
+
+def _mla_sdpa(q_nope, q_rope, k_nope, k_rope, v, scale, *, shard=None,
+              q_chunk: int = 0):
+    """Chunked causal attention with decoupled-rope split scores.
+
+    q_nope/k_nope: (B,S,H,dn); q_rope: (B,S,H,dr); k_rope: (B,S,dr) shared
+    across heads; v: (B,S,H,dv).  Head-sharded throughout (H=128 divides any
+    sane model axis).
+    """
+    B, Sq, H, dn = q_nope.shape
+    Skv = k_nope.shape[1]
+    con = shard or (lambda x, kind: x)
+
+    def block(qn, qr, off):
+        s = jnp.einsum("bqhd,bshd->bhqs", qn, k_nope).astype(jnp.float32)
+        s = s + jnp.einsum("bqhd,bsd->bhqs", qr, k_rope).astype(jnp.float32)
+        s = con(s, "scores4") * scale
+        CQ = qn.shape[1]
+        qpos = off + jax.lax.broadcasted_iota(jnp.int32, (CQ, Skv), 0)
+        kpos = jax.lax.broadcasted_iota(jnp.int32, (CQ, Skv), 1)
+        s = jnp.where((kpos <= qpos)[None, None], s, NEG_INF)
+        w = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhqs,bshd->bqhd", w.astype(v.dtype), v)
+
+    q_nope = con(q_nope, "heads4")
+    q_rope = con(q_rope, "heads4")
+    if q_chunk and Sq > q_chunk and Sq % q_chunk == 0:
+        k_nope = con(k_nope, "heads4")         # full-S, head-sharded: fixed
+        nc = Sq // q_chunk
+        qn = q_nope.reshape(B, nc, q_chunk, H, dn).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(B, nc, q_chunk, H, -1).transpose(1, 0, 2, 3, 4)
+        offs = jnp.arange(nc, dtype=jnp.int32) * q_chunk
+        out = jax.lax.map(lambda a: jax.checkpoint(block)(*a),
+                          (qn, qr, offs))
+        return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, v.shape[-1])
+    return block(q_nope, q_rope, jnp.int32(0))
+
+
+def _mla_q(cfg, p, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    hq = x @ p["w_dq"] if "w_dq" in p else x
+    q = (hq @ p["w_uq"]).reshape(B, S, H, m.qk_head_dim)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_full(cfg: ModelConfig, p: Params, x, positions, *,
+             cache: Optional[Params] = None, shard=None, q_chunk: int = 0):
+    """Full-sequence MLA: materialise k/v from the latent (train/prefill).
+
+    The decoupled-rope split is packed into a single (qk_nope + rope)-wide
+    head so the chunked/flash SDPA path is shared with GQA (K=H, G=1).
+    """
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, p, x, positions)
+    dkv = x @ p["w_dkv"]                               # (B,S,r+rope)
+    ckv, k_rope = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    k_nope = (ckv @ p["w_uk"]).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (ckv @ p["w_uv"]).reshape(B, S, H, m.v_head_dim)
+    scale = 1.0 / jnp.sqrt(m.qk_head_dim).astype(jnp.float32)
+    # split-score attention: scoring the decoupled rope part against the
+    # SHARED (B,S,dr) rope key keeps every wide tensor head-sharded — never
+    # concat k_nope with a broadcast k_rope (GSPMD materialises + gathers the
+    # (B,S,H,dn+dr) result: 2×380 GB/step on deepseek-v2 train, measured)
+    out = _mla_sdpa(q_nope, q_rope, k_nope, k_rope, v, scale, shard=shard,
+                    q_chunk=q_chunk)
+    out = out.reshape(B, S, H * m.v_head_dim) @ p["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "ckv": jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1),
+            "krope": jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], k_rope.astype(cache["krope"].dtype), 0, axis=1),
+        }
+    return out, new_cache
+
+
+def mla_decode(cfg: ModelConfig, p: Params, x, lengths, cache: Params):
+    """Absorbed MLA decode: score/accumulate directly in the latent space.
+
+    Per-token cache is only (kv_lora_rank + rope) wide — the paper-relevant
+    serving trick that makes deepseek-v2 decode memory tiny.
+    """
+    m = cfg.mla
+    B, _, D = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _mla_q(cfg, p, x, lengths[:, None])
+    # absorb W_UK into q: q_lat[b,h,r] = sum_d q_nope[b,h,d] * w_uk[r, h*d]
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, w_uk)
+    dkv = x @ p["w_dkv"]
+    ckv_new, krope_new = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    krope_new = apply_rope(krope_new[:, :, None, :], lengths[:, None],
+                           cfg.rope_theta)[:, :, 0]
+    b = jnp.arange(B)
+    ckv = cache["ckv"].at[b, lengths].set(ckv_new[:, 0].astype(cache["ckv"].dtype))
+    krope = cache["krope"].at[b, lengths].set(
+        krope_new[:, 0].astype(cache["krope"].dtype))
+    scale = 1.0 / jnp.sqrt(m.qk_head_dim).astype(jnp.float32)
+    s_lat = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv).astype(jnp.float32)
+    s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope, krope).astype(jnp.float32)
+    mask = make_decode_mask(lengths, ckv.shape[1])
+    scores = jnp.where(mask, (s_lat + s_rope) * scale, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", w.astype(ckv.dtype), ckv)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bqhr,rhd->bqhd", out_lat, w_uv)
+    out = out.reshape(B, 1, H * m.v_head_dim) @ p["wo"]
+    return out, {"ckv": ckv, "krope": krope}
+
+
+# --------------------------------------------------------------------------- #
+# Unified entry points used by the transformer blocks
+# --------------------------------------------------------------------------- #
+
+
+def attn_full(cfg, p, x, positions, *, cache=None, shard=None,
+              q_chunk: int = 0, expand_kv: bool = False):
+    if cfg.mla is not None:
+        return mla_full(cfg, p, x, positions, cache=cache, shard=shard,
+                        q_chunk=q_chunk)
+    return gqa_full(cfg, p, x, positions, cache=cache, shard=shard,
+                    q_chunk=q_chunk, expand_kv=expand_kv)
+
+
+def attn_decode(cfg, p, x, lengths, cache):
+    if cfg.mla is not None:
+        return mla_decode(cfg, p, x, lengths, cache)
+    return gqa_decode(cfg, p, x, lengths, cache)

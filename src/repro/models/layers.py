@@ -1,0 +1,119 @@
+"""Shared layer primitives (pure JAX, no framework deps).
+
+Conventions:
+  * params are nested dicts of jnp arrays; per-layer weights are STACKED on a
+    leading axis so layer stacks can be ``lax.scan``ned (O(1) HLO in depth).
+  * weights live in ``cfg.dtype`` (bf16); normalization statistics and logits
+    are computed in fp32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = dict
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Initializers
+# --------------------------------------------------------------------------- #
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (matches llama-family practice)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------- #
+# Normalization
+# --------------------------------------------------------------------------- #
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def gated_rms_norm(x, gate, scale, eps: float = 1e-5):
+    """Mamba-2 gated RMSNorm: norm(x * silu(z))."""
+    return rms_norm(x * jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype), scale, eps)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embedding
+# --------------------------------------------------------------------------- #
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) or (..., S, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, hd/2)
+    if x.ndim == angles.ndim + 1:                            # head axis present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_positions(n_pos: int, d_model: int) -> jnp.ndarray:
+    """Fixed sinusoidal embeddings (whisper encoder)."""
+    pos = np.arange(n_pos)[:, None]
+    dim = np.arange(d_model // 2)[None, :]
+    inv = 1.0 / (10000 ** (2 * dim / d_model))
+    ang = pos * inv
+    return jnp.asarray(
+        np.concatenate([np.sin(ang), np.cos(ang)], axis=-1), dtype=jnp.float32
+    )
+
+
+# --------------------------------------------------------------------------- #
+# FFN
+# --------------------------------------------------------------------------- #
+
+
+def init_ffn(key, d_model: int, d_ff: int, act: str, dtype) -> Params:
+    ks = split_keys(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d_model, d_ff), dtype),
+        "w_out": dense_init(ks[1], (d_ff, d_model), dtype),
+    }
+    if act == "swiglu":
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype)
+    return p
+
+
+def ffn(params: Params, x, act: str):
+    h = x @ params["w_in"]
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * h
+    elif act == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(f"unknown activation {act!r}")
+    return h @ params["w_out"]

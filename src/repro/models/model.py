@@ -1,0 +1,230 @@
+"""Model factory: init / train forward / loss / prefill / decode for every
+assigned architecture, built from the block machinery in transformer.py."""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.layers import (Params, dense_init, embed_init, rms_norm,
+                                 sinusoid_positions, split_keys)
+from repro.models.transformer import DEFAULT_CTX, RunCtx
+
+Cache = Any
+
+
+def n_scan_blocks(cfg: ModelConfig) -> int:
+    if cfg.is_hybrid:
+        assert cfg.n_layers % cfg.attn_period == 0
+        return cfg.n_layers // cfg.attn_period
+    return cfg.n_layers - cfg.moe.first_dense
+
+
+def _block_init_fn(cfg: ModelConfig, dtype):
+    fam = cfg.family
+    if fam == "ssm":
+        return lambda k: tfm._init_mamba_layer(k, cfg, dtype,
+                                               with_ffn=cfg.d_ff > 0,
+                                               is_moe=False)
+    if cfg.is_hybrid:
+        return lambda k: tfm._init_jamba_period(k, cfg, dtype)
+    if fam == "moe":
+        return lambda k: tfm._init_attn_layer(k, cfg, dtype, is_moe=True)
+    # dense / vlm / audio decoder
+    return lambda k: tfm._init_attn_layer(k, cfg, dtype, is_moe=False,
+                                          cross=cfg.is_encdec)
+
+
+def init_params(cfg: ModelConfig, key, dtype=None) -> Params:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    ks = split_keys(key, 8)
+    p: Params = {
+        "embed": embed_init(ks[0], (Vp, D), dtype),
+        "head": dense_init(ks[1], (D, Vp), dtype),
+        "norm_f": jnp.ones((D,), dtype),
+        "blocks": tfm._stack_init(_block_init_fn(cfg, dtype), ks[2],
+                                  n_scan_blocks(cfg)),
+    }
+    if cfg.moe.first_dense:
+        fk = split_keys(ks[3], cfg.moe.first_dense)
+        p["first"] = [tfm._init_attn_layer(fk[i], cfg, dtype, is_moe=False)
+                      for i in range(cfg.moe.first_dense)]
+    if cfg.is_encdec:
+        p["enc"] = {
+            "blocks": tfm._stack_init(
+                lambda k: tfm._init_attn_layer(k, cfg, dtype, is_moe=False),
+                ks[4], cfg.n_enc_layers),
+            "norm_f": jnp.ones((D,), dtype),
+        }
+    return p
+
+
+# --------------------------------------------------------------------------- #
+# Cache init
+# --------------------------------------------------------------------------- #
+
+
+def _stack_zeros(tree, n: int):
+    return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype), tree)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None) -> Cache:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    fam = cfg.family
+    if fam == "ssm":
+        st = ssm_mod.init_ssm_state(cfg, batch, dtype)
+        return _stack_zeros(st, cfg.n_layers)
+    if cfg.is_hybrid:
+        st = ssm_mod.init_ssm_state(cfg, batch, dtype)
+        per = {
+            "attn": attn.init_attn_cache(cfg, batch, max_len, dtype),
+            "ssm": _stack_zeros(st, cfg.attn_period - 1),
+        }
+        return _stack_zeros(per, n_scan_blocks(cfg))
+    per = {"self": attn.init_attn_cache(cfg, batch, max_len, dtype)}
+    if cfg.is_encdec:
+        K, hd = cfg.n_kv_heads, cfg.head_dim
+        per["cross_k"] = jnp.zeros((batch, cfg.enc_frames, K, hd), dtype)
+        per["cross_v"] = jnp.zeros((batch, cfg.enc_frames, K, hd), dtype)
+    # attention-family archs use a {"blocks": ...} wrapper (+ optional "first")
+    cache = {"blocks": _stack_zeros(per, n_scan_blocks(cfg))}
+    if cfg.moe.first_dense:
+        cache["first"] = [
+            {"self": attn.init_attn_cache(cfg, batch, max_len, dtype)}
+            for _ in range(cfg.moe.first_dense)]
+    return cache
+
+
+# --------------------------------------------------------------------------- #
+# Encoder (whisper)
+# --------------------------------------------------------------------------- #
+
+
+def encode(cfg: ModelConfig, params: Params, enc_frames, ctx: RunCtx):
+    """enc_frames: (B, F, D) precomputed conv-frontend embeddings (stub)."""
+    B, F, D = enc_frames.shape
+    x = enc_frames.astype(params["embed"].dtype)
+    x = x + sinusoid_positions(F, D)[None].astype(x.dtype)
+    x = ctx.shard(x, "resid")
+    x, _, _ = tfm.stack_apply(cfg, params["enc"]["blocks"], x, mode="train",
+                              ctx=ctx, positions=jnp.arange(F)[None],
+                              caches=None, encoder=True)
+    return rms_norm(x, params["enc"]["norm_f"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------- #
+# Train forward / loss
+# --------------------------------------------------------------------------- #
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *, enc_frames=None,
+            ctx: RunCtx = DEFAULT_CTX):
+    """Full causal forward → (logits fp32 (B,S,Vp), metrics)."""
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = ctx.shard(x, "resid")
+    positions = jnp.arange(S)[None]
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, enc_frames, ctx)
+    for lp in params.get("first", []):
+        x, _, _ = tfm._attn_layer_full(cfg, lp, x, positions, ctx)
+    x, _, metrics = tfm.stack_apply(cfg, params["blocks"], x, mode="train",
+                                    ctx=ctx, positions=positions, caches=None,
+                                    enc_out=enc_out)
+    x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = (x @ params["head"]).astype(jnp.float32)
+    logits = ctx.shard(logits, "logits")
+    return logits, metrics
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict, *,
+            ctx: RunCtx = DEFAULT_CTX, aux_coef: float = 0.01,
+            z_coef: float = 1e-4):
+    """batch: tokens (B,S) int32, labels (B,S) int32 (-1 = masked),
+    [enc_frames (B,F,D)].  Returns (loss, metrics-dict)."""
+    logits, m = forward(cfg, params, batch["tokens"],
+                        enc_frames=batch.get("enc_frames"), ctx=ctx)
+    labels = batch["labels"]
+    Vp = cfg.vocab_padded
+    mask = (labels >= 0).astype(jnp.float32)
+    lbl = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ce = -jnp.take_along_axis(logp, lbl[..., None], axis=-1)[..., 0]
+    ce = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce + aux_coef * m.aux_loss + z_coef * m.z_loss
+    return loss, {"loss": loss, "ce": ce, "aux": m.aux_loss, "z": m.z_loss,
+                  "overflow": m.overflow_frac, "expert_load": m.load}
+
+
+# --------------------------------------------------------------------------- #
+# Serving: prefill / decode
+# --------------------------------------------------------------------------- #
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, cache: Cache, *,
+            enc_frames=None, ctx: RunCtx = DEFAULT_CTX):
+    """Run the full prompt, writing KV/SSM state into ``cache``.
+
+    Returns (last-token logits (B,Vp), cache).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    x = ctx.shard(x, "resid")
+    positions = jnp.arange(S)[None]
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, enc_frames, ctx)
+    new_cache = {}
+    if cfg.moe.first_dense:
+        new_cache["first"] = []
+        for lp, c in zip(params["first"], cache["first"]):
+            x, c_out, _ = tfm._attn_layer_full(cfg, lp, x, positions, ctx,
+                                               cache=c["self"])
+            new_cache["first"].append(c_out)
+    blocks_cache = cache["blocks"] if isinstance(cache, dict) and "blocks" in cache else cache
+    x, cache_out, metrics = tfm.stack_apply(
+        cfg, params["blocks"], x, mode="prefill", ctx=ctx,
+        positions=positions, caches=blocks_cache, enc_out=enc_out)
+    x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["head"]).astype(jnp.float32)
+    if isinstance(cache, dict) and "blocks" in cache:
+        new_cache["blocks"] = cache_out
+        return logits, new_cache
+    return logits, cache_out
+
+
+def decode_step(cfg: ModelConfig, params: Params, token, lengths,
+                cache: Cache, *, ctx: RunCtx = DEFAULT_CTX):
+    """One decode step.  token (B,1) int32; lengths (B,) int32 — the position
+    each sequence writes at (continuous batching: per-sequence offsets).
+
+    Returns (logits (B,Vp) fp32, cache).
+    """
+    x = params["embed"][token]                         # (B,1,D)
+    new_cache = {}
+    positions = lengths[:, None]
+    if cfg.moe.first_dense:
+        new_cache["first"] = []
+        for lp, c in zip(params["first"], cache["first"]):
+            x, c_out, _ = tfm._attn_layer_decode(cfg, lp, x, lengths, ctx, c)
+            new_cache["first"].append(c_out)
+    blocks_cache = cache["blocks"] if isinstance(cache, dict) and "blocks" in cache else cache
+    x, cache_out, _ = tfm.stack_apply(
+        cfg, params["blocks"], x, mode="decode", ctx=ctx, lengths=lengths,
+        caches=blocks_cache)
+    x = rms_norm(x, params["norm_f"], cfg.norm_eps)
+    logits = (x[:, -1] @ params["head"]).astype(jnp.float32)
+    logits = ctx.shard(logits, "logits")
+    if isinstance(cache, dict) and "blocks" in cache:
+        new_cache["blocks"] = cache_out
+        return logits, new_cache
+    return logits, cache_out

@@ -1,0 +1,235 @@
+"""Mamba-2 (SSD — state-space duality) mixer.  [arXiv:2405.21060]
+
+TPU adaptation note (DESIGN.md §2): the GPU reference implements SSD with a
+fused Triton scan over warps; on TPU we keep the paper's *chunked dual form*,
+which turns the recurrence into MXU-shaped matmuls (Q×Q intra-chunk scores,
+hd×N outer-product states) plus a tiny inter-chunk ``associative_scan`` — the
+layout the ``kernels/ssd_scan`` Pallas kernel tiles into VMEM.
+
+Layout: x:(B,S,nh,hd), B/C:(B,S,G,N) groups broadcast over heads,
+dt:(B,S,nh) post-softplus, A:(nh,) negative.
+Decode state: ssm (B,nh,hd,N) + rolling conv window (B,conv_dim,W-1).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.models.layers import (Params, dense_init, gated_rms_norm,
+                                 split_keys)
+
+
+class SSMState(NamedTuple):
+    ssm: jax.Array    # (B, nh, hd, N) fp32
+    conv: jax.Array   # (B, conv_dim, W-1) model dtype
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Params:
+    s: SSMConfig = cfg.ssm
+    D = cfg.d_model
+    di = s.d_inner(D)
+    nh = s.n_heads(D)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    ks = split_keys(key, 5)
+    # A in [1,16] log-uniform; dt bias = softplus^{-1}(dt), dt in [1e-3, 0.1]
+    a0 = np.exp(np.random.RandomState(0).uniform(np.log(1.0), np.log(16.0), nh))
+    dt0 = np.exp(np.random.RandomState(1).uniform(np.log(1e-3), np.log(0.1), nh))
+    dt_bias = dt0 + np.log(-np.expm1(-dt0))
+    return {
+        "w_in": dense_init(ks[0], (D, 2 * di + 2 * s.n_groups * s.d_state + nh),
+                           dtype),
+        "conv_w": dense_init(ks[1], (s.conv_width, conv_dim), dtype,
+                             scale=1.0 / np.sqrt(s.conv_width)),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.asarray(np.log(a0), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "norm": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[2], (di, D), dtype),
+    }
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype) -> SSMState:
+    s = cfg.ssm
+    D = cfg.d_model
+    di, nh = s.d_inner(D), s.n_heads(D)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return SSMState(
+        ssm=jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        conv=jnp.zeros((batch, conv_dim, s.conv_width - 1), dtype),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Chunked SSD (train / prefill)
+# --------------------------------------------------------------------------- #
+
+
+def _segsum(a):
+    """a: (..., Q) → (..., Q, Q) with out[i,j] = sum_{j<k<=i} a_k (i>=j), -inf else."""
+    Q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(xdt, a_log, Bm, Cm, chunk: int, h0=None):
+    """SSD dual form.
+
+    xdt:(B,S,nh,hd) = dt⊙x;  a_log:(B,S,nh) = dt*A;  Bm/Cm:(B,S,nh,N)
+    (already broadcast from groups).  Returns (y:(B,S,nh,hd), h_last fp32).
+    Pure-jnp oracle for kernels/ssd_scan.
+    """
+    B, S, nh, hd = xdt.shape
+    N = Bm.shape[-1]
+    Q = chunk
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    xc = xdt.reshape(B, nc, Q, nh, hd)
+    ac = a_log.reshape(B, nc, Q, nh).transpose(0, 3, 1, 2)     # (B,nh,nc,Q)
+    Bc = Bm.reshape(B, nc, Q, nh, N)
+    Cc = Cm.reshape(B, nc, Q, nh, N)
+    ac = ac.astype(jnp.float32)
+    A_cum = jnp.cumsum(ac, axis=-1)                            # (B,nh,nc,Q)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(ac))                                   # (B,nh,nc,Q,Q)
+    Y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        Cc, Bc, L.astype(Cc.dtype), xc)
+
+    # 2) chunk states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)            # (B,nh,nc,Q)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn",
+                        Bc, decay_states.astype(Bc.dtype), xc)  # (B,nc,nh,hd,N)
+
+    # 3) inter-chunk recurrence (associative scan over nc)
+    chunk_decay = jnp.exp(A_cum[..., -1]).transpose(0, 2, 1)   # (B,nc,nh)
+    states = states.astype(jnp.float32)
+    if h0 is not None:
+        states = jnp.concatenate([h0[:, None].astype(jnp.float32), states], 1)
+        chunk_decay = jnp.concatenate(
+            [jnp.ones_like(chunk_decay[:, :1]), chunk_decay], 1)
+
+    def comb(a, b):
+        da, ha = a                     # decay (B,nc,nh,1,1), state (B,nc,…)
+        db, hb = b
+        return da * db, hb + db * ha
+
+    dec, hs = jax.lax.associative_scan(
+        comb, (chunk_decay[..., None, None] * 1.0, states), axis=1)
+    if h0 is not None:
+        hs = hs[:, 1:]
+    h_last = hs[:, -1]                                         # (B,nh,hd,N)
+    h_prev = jnp.concatenate(
+        [h0[:, None].astype(jnp.float32) if h0 is not None
+         else jnp.zeros_like(hs[:, :1]), hs[:, :-1]], axis=1)  # (B,nc,nh,hd,N)
+
+    # 4) inter-chunk output
+    state_decay = jnp.exp(A_cum)                               # (B,nh,nc,Q)
+    Y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp",
+                       Cc, h_prev.astype(Cc.dtype),
+                       state_decay.astype(Cc.dtype))
+    y = (Y_diag + Y_off).reshape(B, S, nh, hd)
+    return y, h_last
+
+
+# --------------------------------------------------------------------------- #
+# Full mixer
+# --------------------------------------------------------------------------- #
+
+
+def _split_proj(cfg: ModelConfig, h):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    gn = 2 * s.n_groups * s.d_state
+    nh = s.n_heads(cfg.d_model)
+    z, xBC, dt = jnp.split(h, [di, di + di + gn], axis=-1)
+    assert dt.shape[-1] == nh
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, w, b, conv_state=None):
+    """Depthwise causal conv1d.  xBC:(B,S,C); w:(W,C).  Returns (y, new_state)."""
+    B, S, C = xBC.shape
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((B, W - 1, C), xBC.dtype)
+    else:
+        pad = conv_state.transpose(0, 2, 1)                    # (B,W-1,C)
+    xp = jnp.concatenate([pad, xBC], axis=1)                   # (B,S+W-1,C)
+    y = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(W))
+    y = y + b[None, None, :]
+    new_state = xp[:, -(W - 1):, :].transpose(0, 2, 1)         # (B,C,W-1)
+    return jax.nn.silu(y.astype(jnp.float32)).astype(xBC.dtype), new_state
+
+
+def mamba_mixer(cfg: ModelConfig, p: Params, x, *, state: SSMState | None = None,
+                return_state: bool = False):
+    """Full-sequence SSD mixer (train/prefill).  x:(B,S,D)."""
+    s = cfg.ssm
+    B, S, D = x.shape
+    di, nh, N, G = s.d_inner(D), s.n_heads(D), s.d_state, s.n_groups
+    h = x @ p["w_in"]
+    z, xBC, dt = _split_proj(cfg, h)
+    xBC, conv_state = _causal_conv(
+        xBC, p["conv_w"], p["conv_b"],
+        None if state is None else state.conv)
+    xs, Bm, Cm = jnp.split(xBC, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, S, nh, s.head_dim)
+    rep = nh // G
+    Bm = jnp.repeat(Bm.reshape(B, S, G, N), rep, axis=2)
+    Cm = jnp.repeat(Cm.reshape(B, S, G, N), rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    A = -jnp.exp(p["A_log"])                                   # (nh,)
+    y, h_last = ssd_chunked(
+        (xs * dt[..., None].astype(xs.dtype)), dt * A[None, None],
+        Bm, Cm, chunk=min(s.chunk, S),
+        h0=None if state is None else state.ssm)
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    y = gated_rms_norm(y.reshape(B, S, di), z, p["norm"], cfg.norm_eps)
+    out = y @ p["w_out"]
+    if return_state:
+        return out, SSMState(ssm=h_last, conv=conv_state)
+    return out, None
+
+
+def mamba_decode(cfg: ModelConfig, p: Params, x, state: SSMState):
+    """Single-token recurrent step.  x:(B,1,D) → (out, new_state)."""
+    s = cfg.ssm
+    B, _, D = x.shape
+    di, nh, N, G = s.d_inner(D), s.n_heads(D), s.d_state, s.n_groups
+    h = x[:, 0] @ p["w_in"]                                    # (B, ·)
+    z, xBC, dt = _split_proj(cfg, h[:, None, :])
+    z, xBC, dt = z[:, 0], xBC[:, 0], dt[:, 0]
+    # rolling conv window
+    win = jnp.concatenate([state.conv, xBC[:, :, None]], axis=-1)  # (B,C,W)
+    conv_out = jnp.einsum("bcw,wc->bc", win, p["conv_w"]) + p["conv_b"]
+    xBC_t = jax.nn.silu(conv_out.astype(jnp.float32)).astype(xBC.dtype)
+    new_conv = win[:, :, 1:]
+    xs, Bm, Cm = jnp.split(xBC_t, [di, di + G * N], axis=-1)
+    xs = xs.reshape(B, nh, s.head_dim)
+    rep = nh // G
+    Bm = jnp.repeat(Bm.reshape(B, G, N), rep, axis=1)          # (B,nh,N)
+    Cm = jnp.repeat(Cm.reshape(B, G, N), rep, axis=1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A[None])                                  # (B,nh)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, xs.astype(jnp.float32),
+                     Bm.astype(jnp.float32))
+    new_ssm = a[..., None, None] * state.ssm + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Cm.astype(jnp.float32))
+    y = y.astype(xs.dtype) + xs * p["D"][None, :, None].astype(xs.dtype)
+    y = gated_rms_norm(y.reshape(B, di), z, p["norm"], cfg.norm_eps)
+    out = (y @ p["w_out"])[:, None, :]
+    return out, SSMState(ssm=new_ssm, conv=new_conv)

@@ -1,0 +1,346 @@
+"""Block composition + scan-over-depth for every assigned architecture.
+
+Every arch is expressed as a stack of identical *scan blocks* (plus optionally
+a few unrolled leading layers), so the HLO is O(1) in depth:
+
+  dense / vlm       block = [attn + dense FFN]            × L
+  moe (deepseek)    unrolled [attn + dense FFN] × first_dense,
+                    block = [MLA attn + MoE FFN]           × (L - first_dense)
+  moe (arctic)      block = [attn + MoE ∥ dense residual]  × L
+  ssm (mamba2)      block = [mamba mixer]                  × L   (no FFN)
+  hybrid (jamba)    block = 8-layer period (7×mamba + 1×attn at pos 4;
+                    FFN alternates dense/MoE by layer parity)    × L/8
+  audio (whisper)   encoder block = [bidir attn + FFN] × n_enc,
+                    decoder block = [causal attn + cross-attn + FFN] × L
+
+Caches are pytrees whose leaves are stacked on the block axis so the decode
+path scans over (block_params, cache_block) pairs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (Params, dense_init, embed_init, ffn,
+                                 init_ffn, rms_norm, sinusoid_positions,
+                                 split_keys)
+
+Identity = lambda x, kind=None: x
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Per-call runtime knobs threaded through the stack (not traced)."""
+
+    shard: Callable = Identity          # (x, kind) -> x  sharding constraints
+    remat: str = "none"                 # none | block
+    moe_method: str = "sort"            # sort | cumsum | einsum
+    ep: Optional[tuple] = None          # (mesh, tok_axes) expert-parallel relay
+    scan_unroll: int = 1
+    q_chunk: int = 0                    # 0 = auto (memory-efficient attention)
+    tp_size: int = 1                    # model-axis size (layout decisions)
+    explicit_fsdp: bool = False         # bf16 expert-weight AG inside relay
+
+
+DEFAULT_CTX = RunCtx()
+
+
+def _is_moe_layer(cfg: ModelConfig, i: int) -> bool:
+    m = cfg.moe
+    return (m.enabled and i >= m.first_dense
+            and i % m.moe_every == m.moe_offset)
+
+
+# --------------------------------------------------------------------------- #
+# Layer init (single layer / period); stacked via vmap over keys
+# --------------------------------------------------------------------------- #
+
+
+def _init_attn_layer(key, cfg: ModelConfig, dtype, is_moe: bool,
+                     cross: bool = False) -> Params:
+    ks = split_keys(key, 5)
+    p: Params = {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_attn(ks[0], cfg, dtype),
+        "norm2": jnp.ones((cfg.d_model,), dtype),
+    }
+    if is_moe:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_act, dtype)
+    if cross:
+        p["norm_x"] = jnp.ones((cfg.d_model,), dtype)
+        p["cross"] = attn.init_gqa(ks[2], cfg, dtype)
+    return p
+
+
+def _init_mamba_layer(key, cfg: ModelConfig, dtype, with_ffn: bool,
+                      is_moe: bool) -> Params:
+    ks = split_keys(key, 2)
+    p: Params = {
+        "norm1": jnp.ones((cfg.d_model,), dtype),
+        "mamba": ssm_mod.init_mamba(ks[0], cfg, dtype),
+    }
+    if with_ffn:
+        p["norm2"] = jnp.ones((cfg.d_model,), dtype)
+        if is_moe:
+            p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+        else:
+            p["ffn"] = init_ffn(ks[1], cfg.d_model, cfg.d_ff, cfg.ffn_act, dtype)
+    return p
+
+
+def _init_jamba_period(key, cfg: ModelConfig, dtype) -> Params:
+    """One 8-layer period: mamba at pos != attn_pos, attn at attn_pos;
+    FFN parity: even=dense, odd=MoE (matching moe_every=2, moe_offset=1)."""
+    P_ = cfg.attn_period
+    ks = split_keys(key, P_)
+    layers = []
+    for pos in range(P_):
+        is_moe = _is_moe_layer(cfg, pos)               # parity matches global
+        if pos == cfg.attn_pos:
+            layers.append(("attn", _init_attn_layer(ks[pos], cfg, dtype, is_moe)))
+        else:
+            layers.append(("mamba", _init_mamba_layer(ks[pos], cfg, dtype,
+                                                      with_ffn=True,
+                                                      is_moe=is_moe)))
+    return {f"pos{i}": p for i, (_, p) in enumerate(layers)}
+
+
+def _stack_init(init_fn, key, n: int):
+    return jax.vmap(init_fn)(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------- #
+# Layer apply — full-sequence (train/prefill) and decode
+# --------------------------------------------------------------------------- #
+
+
+class BlockOut(NamedTuple):
+    x: jax.Array
+    cache: Any
+    metrics: moe_mod.MoEMetrics
+
+
+def _apply_ffn(cfg, lp, x, ctx: RunCtx):
+    if "moe" in lp:
+        out, metrics = moe_mod.moe_ffn(cfg, lp["moe"], x, method=ctx.moe_method,
+                                       ep=ctx.ep,
+                                       explicit_fsdp=ctx.explicit_fsdp)
+    else:
+        out, metrics = ffn(lp["ffn"], x, cfg.ffn_act), None
+    return out, metrics
+
+
+def _auto_q_chunk(ctx: RunCtx, Sq: int) -> int:
+    if ctx.q_chunk:
+        return ctx.q_chunk
+    if Sq < 4096:
+        return 0
+    return 512 if Sq <= 8192 else 256
+
+
+def _expand_kv(cfg, ctx: RunCtx) -> int:
+    """GQA→MHA expansion (to a tp-multiple head count) when neither K nor G
+    divides the model axis (keeps the score slab head-shardable end-to-end;
+    see attention.sdpa).  Returns the target head count, 0 = off."""
+    tp = ctx.tp_size
+    if tp <= 1 or cfg.mla is not None or cfg.n_heads == 0:
+        return 0
+    K, H = cfg.n_kv_heads, cfg.n_heads
+    G = H // max(K, 1)
+    if K % tp == 0 or G % tp == 0:
+        return 0
+    return -(-H // tp) * tp
+
+
+def _attn_layer_full(cfg, lp, x, positions, ctx, cache=None, enc_out=None,
+                     causal=True):
+    qc = _auto_q_chunk(ctx, x.shape[1])
+    ekv = _expand_kv(cfg, ctx)
+    h, new_kv = attn.attn_full(cfg, lp["attn"], rms_norm(x, lp["norm1"],
+                                                         cfg.norm_eps),
+                               positions, cache=cache, shard=ctx.shard,
+                               q_chunk=qc, expand_kv=ekv) \
+        if causal else \
+        attn.gqa_full(cfg, lp["attn"], rms_norm(x, lp["norm1"], cfg.norm_eps),
+                      positions, causal=False, cache=cache, shard=ctx.shard,
+                      q_chunk=qc, expand_kv=ekv)
+    # constrain the projection output BEFORE the add: turns the row-parallel
+    # all-reduce into a reduce-scatter onto the sequence-sharded residual
+    x = ctx.shard(x + ctx.shard(h, "resid"), "resid")
+    new_cache = {"self": new_kv} if new_kv is not None else None
+    if enc_out is not None:                            # whisper cross-attn
+        hx, _ = attn.gqa_full(cfg, lp["cross"],
+                              rms_norm(x, lp["norm_x"], cfg.norm_eps),
+                              positions, causal=False, kv_x=enc_out)
+        x = ctx.shard(x + ctx.shard(hx, "resid"), "resid")
+        if new_cache is not None:
+            # precompute cross K/V once for decode
+            B, Se, _ = enc_out.shape
+            K, hd = cfg.n_kv_heads, cfg.head_dim
+            new_cache["cross_k"] = (enc_out @ lp["cross"]["wk"]).reshape(
+                B, Se, K, hd)
+            new_cache["cross_v"] = (enc_out @ lp["cross"]["wv"]).reshape(
+                B, Se, K, hd)
+    h, metrics = _apply_ffn(cfg, lp, rms_norm(x, lp["norm2"], cfg.norm_eps), ctx)
+    x = ctx.shard(x + ctx.shard(h, "resid"), "resid")
+    return x, new_cache, metrics
+
+
+def _attn_layer_decode(cfg, lp, x, lengths, ctx, cache):
+    h, new_kv = attn.attn_decode(cfg, lp["attn"],
+                                 rms_norm(x, lp["norm1"], cfg.norm_eps),
+                                 lengths, cache["self"])
+    x = x + h
+    new_cache = dict(cache)
+    new_cache["self"] = new_kv
+    if "cross_k" in cache:                             # whisper
+        hx = attn.gqa_cross_decode(cfg, lp["cross"],
+                                   rms_norm(x, lp["norm_x"], cfg.norm_eps),
+                                   cache["cross_k"], cache["cross_v"])
+        x = x + hx
+    h, metrics = _apply_ffn(cfg, lp, rms_norm(x, lp["norm2"], cfg.norm_eps), ctx)
+    return x + h, new_cache, metrics
+
+
+def _mamba_layer_full(cfg, lp, x, ctx, want_state: bool, state=None):
+    h, new_state = ssm_mod.mamba_mixer(
+        cfg, lp["mamba"], rms_norm(x, lp["norm1"], cfg.norm_eps),
+        state=state, return_state=want_state)
+    x = ctx.shard(x + ctx.shard(h, "resid"), "resid")
+    metrics = None
+    if "norm2" in lp:
+        h, metrics = _apply_ffn(cfg, lp, rms_norm(x, lp["norm2"], cfg.norm_eps),
+                                ctx)
+        x = ctx.shard(x + ctx.shard(h, "resid"), "resid")
+    return x, new_state, metrics
+
+
+def _mamba_layer_decode(cfg, lp, x, ctx, state):
+    h, new_state = ssm_mod.mamba_decode(
+        cfg, lp["mamba"], rms_norm(x, lp["norm1"], cfg.norm_eps), state)
+    x = x + h
+    metrics = None
+    if "norm2" in lp:
+        h, metrics = _apply_ffn(cfg, lp, rms_norm(x, lp["norm2"], cfg.norm_eps),
+                                ctx)
+        x = x + h
+    return x, new_state, metrics
+
+
+def _merge_metrics(cfg, ms):
+    ms = [m for m in ms if m is not None]
+    if not ms:
+        return moe_mod.MoEMetrics.zero(max(cfg.moe.n_experts, 1))
+    return moe_mod.MoEMetrics(
+        aux_loss=sum(m.aux_loss for m in ms) / len(ms),
+        z_loss=sum(m.z_loss for m in ms) / len(ms),
+        overflow_frac=sum(m.overflow_frac for m in ms) / len(ms),
+        load=sum(m.load for m in ms),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Block apply (one scan step).  mode: train | prefill | decode
+# --------------------------------------------------------------------------- #
+
+
+def block_apply(cfg: ModelConfig, bp: Params, x, *, mode: str, ctx: RunCtx,
+                positions=None, lengths=None, cache=None, enc_out=None,
+                encoder: bool = False):
+    """Apply one scan block.  Returns BlockOut(x, cache_out, metrics)."""
+    want_cache = mode != "train"
+    if cfg.family == "ssm":
+        if mode == "decode":
+            x, st, m = _mamba_layer_decode(cfg, bp, x, ctx, cache)
+            return BlockOut(x, st, _merge_metrics(cfg, [m]))
+        x, st, m = _mamba_layer_full(cfg, bp, x, ctx, want_state=want_cache)
+        return BlockOut(x, st, _merge_metrics(cfg, [m]))
+
+    if cfg.is_hybrid:
+        ms, new_cache = [], {"attn": None, "ssm": []}
+        for pos in range(cfg.attn_period):
+            lp = bp[f"pos{pos}"]
+            if pos == cfg.attn_pos:
+                if mode == "decode":
+                    x, c, m = _attn_layer_decode(cfg, lp, x, lengths, ctx,
+                                                 {"self": cache["attn"]})
+                    new_cache["attn"] = c["self"]
+                else:
+                    x, c, m = _attn_layer_full(
+                        cfg, lp, x, positions, ctx,
+                        cache=cache["attn"] if want_cache else None)
+                    new_cache["attn"] = c["self"] if c else None
+            else:
+                midx = pos if pos < cfg.attn_pos else pos - 1
+                if mode == "decode":
+                    st = jax.tree.map(lambda a: a[midx], cache["ssm"])
+                    x, st, m = _mamba_layer_decode(cfg, lp, x, ctx, st)
+                else:
+                    x, st, m = _mamba_layer_full(cfg, lp, x, ctx,
+                                                 want_state=want_cache)
+                new_cache["ssm"].append(st)
+            ms.append(m)
+        if new_cache["ssm"] and new_cache["ssm"][0] is not None:
+            new_cache["ssm"] = jax.tree.map(
+                lambda *a: jnp.stack(a), *new_cache["ssm"])
+        else:
+            new_cache = None
+        return BlockOut(x, new_cache, _merge_metrics(cfg, ms))
+
+    # plain attention block (dense / moe / vlm / whisper enc+dec)
+    if mode == "decode":
+        x, c, m = _attn_layer_decode(cfg, bp, x, lengths, ctx, cache)
+        return BlockOut(x, c, _merge_metrics(cfg, [m]))
+    kv_cache = None
+    if want_cache and not encoder:
+        kv_cache = cache["self"]
+    x, c, m = _attn_layer_full(cfg, bp, x, positions, ctx, cache=kv_cache,
+                               enc_out=enc_out, causal=not encoder)
+    return BlockOut(x, c, _merge_metrics(cfg, [m]))
+
+
+# --------------------------------------------------------------------------- #
+# Stack apply: scan over blocks
+# --------------------------------------------------------------------------- #
+
+
+def stack_apply(cfg: ModelConfig, stacked: Params, x, *, mode: str,
+                ctx: RunCtx, positions=None, lengths=None, caches=None,
+                enc_out=None, encoder: bool = False):
+    """Scan ``block_apply`` over stacked block params (+ stacked caches).
+
+    Returns (x, stacked_caches_out, metrics).
+    """
+
+    def body(carry, xs):
+        bp, cache = xs
+        out = block_apply(cfg, bp, carry, mode=mode, ctx=ctx,
+                          positions=positions, lengths=lengths, cache=cache,
+                          enc_out=enc_out, encoder=encoder)
+        return out.x, (out.cache, out.metrics)
+
+    if ctx.remat == "block":
+        body = jax.checkpoint(body)
+
+    # ``caches=None`` (train / encoder) is a valid empty pytree for scan xs.
+    x, (caches_out, metrics) = jax.lax.scan(body, x, (stacked, caches),
+                                            unroll=ctx.scan_unroll)
+    # reduce stacked per-block metrics: means for scalars, sum for load
+    metrics = moe_mod.MoEMetrics(
+        aux_loss=metrics.aux_loss.mean(0),
+        z_loss=metrics.z_loss.mean(0),
+        overflow_frac=metrics.overflow_frac.mean(0),
+        load=metrics.load.sum(0),
+    )
+    return x, caches_out, metrics

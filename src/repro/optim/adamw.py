@@ -1,0 +1,94 @@
+"""AdamW in pure JAX, FSDP-friendly (moments inherit parameter shardings).
+
+Built for the scale this framework targets:
+  * bf16 params with fp32 moments (fp32 master copies are redundant when the
+    update is computed in fp32 and cast on write — recorded in DESIGN.md)
+  * global-norm clipping
+  * optional int8 error-feedback gradient compression applied on the slow
+    (cross-pod) data axis before the all-reduce (optim/compression.py)
+  * least-request router-bias update for MoE (the XLB LB policy as an
+    optimizer-side state; aux-loss-free balancing, DeepSeek-V3-style)
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init(params) -> AdamWState:
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros32, params),
+                      v=jax.tree.map(zeros32, params))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def apply(params, grads, state: AdamWState, cfg: AdamWConfig,
+          lr_scale: jax.Array | float = 1.0):
+    """One AdamW step.  Returns (new_params, new_state, stats)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    lr = cfg.lr * lr_scale
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / b1c
+        vh = v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * \
+            p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_m, new_v), \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+# --------------------------------------------------------------------------- #
+# Least-request router bias (XLB LB policy → MoE expert balancing)
+# --------------------------------------------------------------------------- #
+
+
+def update_router_bias(bias: jax.Array, load: jax.Array,
+                       rate: float = 1e-3) -> jax.Array:
+    """Aux-loss-free balancing: bias experts inversely to their recent load.
+
+    ``load``: (E,) tokens routed this step.  The sign-rule update nudges
+    selection away from hot experts — the least-request policy expressed as a
+    slowly-varying bias instead of a per-request counter scan.
+    """
+    err = load.astype(jnp.float32) - load.mean()
+    return bias - rate * jnp.sign(err)

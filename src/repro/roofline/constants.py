@@ -1,0 +1,10 @@
+"""Target-hardware constants (TPU v5e), per the assignment brief."""
+
+PEAK_FLOPS_BF16 = 197e12      # per chip, bf16
+HBM_BW = 819e9                # bytes/s per chip
+ICI_BW_PER_LINK = 50e9        # bytes/s per link (~50 GB/s)
+HBM_BYTES = 16 * 2**30        # 16 GiB per chip
+
+BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+         "f16": 2, "f32": 4, "s32": 4, "u32": 4, "f64": 8, "s64": 8,
+         "u64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}

@@ -1,0 +1,40 @@
+"""Elastic scaling: reshard a live state pytree onto a different mesh.
+
+Because (a) checkpoints are mesh-agnostic (host npz + key paths) and (b) the
+data pipeline is step-indexed, scaling from e.g. (data=16, model=16) to
+(data=8, model=16) is: build the new MeshSpec → recompute shardings →
+device_put every leaf.  No collective resharding program is required on CPU;
+on a real fleet this is the jax.device_put cross-mesh path.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.sharding.specs import MeshSpec
+
+
+def reshard_params(params: Any, new_ms: MeshSpec) -> Any:
+    shardings = new_ms.params_shardings(params)
+    return jax.tree.map(jax.device_put, params, shardings)
+
+
+def reshard_tree(tree: Any, shardings: Any) -> Any:
+    return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def validate_divisibility(cfg, ms: MeshSpec, global_batch: int) -> list[str]:
+    """Pre-flight checks when the mesh changes shape (elastic event)."""
+    problems = []
+    dp = 1
+    for a in ms.dp:
+        dp *= ms.mesh.shape[a]
+    if global_batch % dp:
+        problems.append(f"global_batch {global_batch} % dp {dp} != 0")
+    if cfg.moe.enabled and cfg.moe.n_experts % ms.mesh.shape["model"]:
+        problems.append(
+            f"n_experts {cfg.moe.n_experts} not divisible by model axis "
+            f"{ms.mesh.shape['model']} — EP relay needs even ownership")
+    return problems

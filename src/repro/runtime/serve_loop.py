@@ -1,0 +1,126 @@
+"""Host serving driver: ingress parsing + continuous batching around the
+in-graph XLB engine (core/interpose.py).
+
+The host does exactly what the paper leaves outside eBPF (its helper
+functions): byte-level protocol parsing — here hashing L7 header fields into
+the fixed int32 feature vector — and queueing.  Everything else (routing,
+balancing, slot allocation, decode) runs inside one compiled program.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import interpose
+from repro.core.routing_table import N_FEATURES, RoutingState, fnv1a
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    service: int
+    headers: dict[str, str]
+    prompt_token: int
+    msg_bytes: int = 128
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    retries: int = 0
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+def parse_features(headers: dict[str, str]) -> np.ndarray:
+    """Host ingress 'protocol parse': hash selected header fields into the
+    feature vector the in-graph router matches on."""
+    feats = np.zeros((N_FEATURES,), np.int32)
+    for i, field in enumerate(("path", "user", "version", "tenant",
+                               "method", "content-type", "region", "abtest")):
+        if field in headers:
+            feats[i] = fnv1a(headers[field])
+    return feats
+
+
+class ServeLoop:
+    """Continuous batching driver for one service fleet."""
+
+    def __init__(self, engine: interpose.Engine, params, routing: RoutingState,
+                 admit_batch: int = 8, dtype=jnp.float32):
+        self.engine = engine
+        self.params = params
+        self.admit_batch = admit_batch
+        self.state = engine.init_state(routing, dtype=dtype)
+        self.serve_step = engine.make_jitted(donate=False)
+        self.queue: collections.deque[Request] = collections.deque()
+        self.inflight: dict[int, Request] = {}
+        self.done: list[Request] = []
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request) -> None:
+        req.t_submit = time.perf_counter()
+        self.queue.append(req)
+
+    def _next_admission(self) -> tuple[interpose.RequestBatch, list]:
+        R = self.admit_batch
+        rid = np.full((R,), -1, np.int32)
+        svc = np.zeros((R,), np.int32)
+        feats = np.zeros((R, N_FEATURES), np.int32)
+        tok = np.zeros((R,), np.int32)
+        nbytes = np.zeros((R,), np.int32)
+        taken = []
+        for i in range(R):
+            if not self.queue:
+                break
+            r = self.queue.popleft()
+            rid[i], svc[i] = r.req_id, r.service
+            feats[i] = parse_features(r.headers)
+            tok[i], nbytes[i] = r.prompt_token, r.msg_bytes
+            self.inflight[r.req_id] = r
+            taken.append(r)
+        return interpose.RequestBatch(
+            req_id=jnp.asarray(rid), svc=jnp.asarray(svc),
+            features=jnp.asarray(feats), token=jnp.asarray(tok),
+            msg_bytes=jnp.asarray(nbytes)), taken
+
+    # ------------------------------------------------------------------ #
+    def tick(self) -> dict:
+        """One engine step: admit waiting requests + decode every lane."""
+        reqs, taken = self._next_admission()
+        self.state, out = self.serve_step(self.params, self.state, reqs)
+        emitted = np.asarray(out["emitted"])
+        done = np.asarray(out["done"])
+        ids = np.asarray(out["req_id"])          # ids serviced this tick
+        I, C = emitted.shape
+        serviced = set()
+        for i in range(I):
+            for s in range(C):
+                rid = int(ids[i, s])
+                if rid >= 0 and rid in self.inflight:
+                    serviced.add(rid)
+                    self.inflight[rid].tokens.append(int(emitted[i, s]))
+                    if done[i, s]:
+                        r = self.inflight.pop(rid)
+                        r.t_done = time.perf_counter()
+                        self.done.append(r)
+        # held requests (pool exhausted / unroutable this tick) re-queue —
+        # the paper's bounded hold queue lives on the host ingress
+        for r in taken:
+            if r.req_id not in serviced and r.req_id in self.inflight:
+                self.inflight.pop(r.req_id)
+                r.retries += 1
+                if r.retries < 64:               # unroutable requests drop
+                    self.queue.appendleft(r)
+        return {"active": int(out["active"]), "queued": len(self.queue),
+                "done": len(self.done)}
+
+    def drain(self, max_ticks: int = 10_000) -> list[Request]:
+        t = 0
+        while (self.queue or self.inflight) and t < max_ticks:
+            self.tick()
+            t += 1
+        return self.done

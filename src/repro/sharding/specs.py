@@ -1,0 +1,273 @@
+"""Per-tensor sharding rules (DP / FSDP / TP / EP / SP) for every arch.
+
+jax 0.8 rejects *uneven* explicit shardings on jit inputs/outputs, so every
+rule is divisibility-checked per tensor (``fit_spec``): a dim takes the first
+candidate axis (or axis tuple) that divides it; otherwise it stays
+replicated.  This is what lets yi-34b (56 heads) or granite (kv=1) share one
+rule set with the evenly-shaped archs: the flat weight layouts always divide,
+the awkward dims fall back, and GSPMD pads internally where it chooses to.
+
+Baseline layout (recorded as the paper-faithful starting point in
+EXPERIMENTS.md §Perf; hillclimbs change these rules):
+
+  params      matrix (…, A, B):  A → fsdp(dp axes), B → tp("model")
+              out-projections (…, tp→dp) flipped (Megatron row-parallel)
+              MoE expert stacks: E → tp (expert parallel, relay a2a owner)
+              embed (V, D): V → dp, D → tp;  head (D, V): D → dp, V → tp
+  activations residual (B,S,D): B → dp, S → tp (Megatron-style sequence
+              parallelism at block boundaries); decode (B,1,D): B → dp
+  cache       (n,B,S,K,hd): B → dp, S → tp (KV-sequence sharding; decode
+              softmax reductions become small all-reduces — flash-decoding)
+  ssm state   (n,B,nh,hd,N): B → dp, nh → tp
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_size(mesh: Mesh, cand) -> int:
+    axes = cand if isinstance(cand, tuple) else (cand,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def fit_spec(mesh: Mesh, shape: Sequence[int], prefs: Sequence[Sequence],
+             ) -> P:
+    """Per-dim: first candidate axis(-tuple) that divides the dim and is not
+    already used; else replicated."""
+    used: set = set()
+    out = []
+    for dim, cands in zip(shape, prefs):
+        chosen = None
+        for cand in cands:
+            if cand is None:
+                break
+            axes = cand if isinstance(cand, tuple) else (cand,)
+            if any(a in used for a in axes):
+                continue
+            sz = axis_size(mesh, cand)
+            if sz > 1 and dim % sz == 0:
+                chosen = cand
+                used.update(axes)
+                break
+        out.append(chosen)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """A mesh + the role assignment of its axes.
+
+    ``params_tp_only``: serving layout — parameters live only on the model
+    axis and are REPLICATED across dp (each dp slice is an XLB instance
+    lane holding a full TP copy).  Kills the per-token FSDP weight
+    all-gather that dominates decode; only viable when params/tp fit HBM.
+    """
+
+    mesh: Mesh
+    params_tp_only: bool = False
+
+    @property
+    def dp(self) -> tuple:
+        """Data-parallel axes — everything that isn't the model axis."""
+        return tuple(a for a in self.mesh.axis_names if a != "model")
+
+    @property
+    def param_dp(self) -> tuple:
+        return () if self.params_tp_only else self.dp
+
+    @property
+    def tp(self) -> str:
+        return "model"
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    # ------------------------------------------------------------------ #
+    # Parameters
+    # ------------------------------------------------------------------ #
+    def param_spec(self, path: str, shape: Sequence[int]) -> P:
+        dp, tp = self.param_dp, self.tp
+        r = len(shape)
+        none = [()] * r
+
+        def tail(rules):                      # apply rules to trailing dims
+            prefs = list(none)
+            for off, cands in rules.items():
+                prefs[off] = cands
+            return fit_spec(self.mesh, shape, prefs)
+
+        if re.search(r"moe/(w_in|w_gate)$", path):
+            return tail({r - 3: (tp,), r - 2: (dp,)})
+        if re.search(r"moe/w_out$", path):
+            return tail({r - 3: (tp,), r - 1: (dp,)})
+        if re.search(r"moe/router$", path):
+            return tail({r - 2: (dp,)})
+        if path.endswith("embed"):
+            return tail({r - 2: (dp,), r - 1: (tp,)})
+        if path.endswith("head"):
+            return tail({r - 2: (dp,), r - 1: (tp,)})
+        if re.search(r"(wo|w_out|w_uk|w_uv)$", path) and r >= 2:
+            # row-parallel: contraction dim → tp, output dim → dp(fsdp)
+            return tail({r - 2: (tp,), r - 1: (dp,)})
+        if path.endswith("conv_w"):
+            return tail({r - 1: (tp,)})
+        if re.search(r"(A_log|dt_bias|/D|norm)", path) or r <= 1 + (
+                0 if "blocks" not in path else 1):
+            # scalars / per-head vectors / norm scales: replicate
+            return P()
+        if r >= 2:
+            # column-parallel default: input dim → fsdp, output dim → tp
+            return tail({r - 2: (dp,), r - 1: (tp,)})
+        return P()
+
+    def params_shardings(self, params) -> Any:
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+
+        def spec_of(kp, leaf):
+            path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in kp)
+            return self.named(self.param_spec(path, leaf.shape))
+
+        return jax.tree_util.tree_map_with_path(
+            lambda kp, leaf: spec_of(kp, leaf), params)
+
+    # ------------------------------------------------------------------ #
+    # Activations / batch / cache
+    # ------------------------------------------------------------------ #
+    def constrain(self, x, kind: str):
+        dp, tp = self.dp, self.tp
+        if not isinstance(x, jax.Array) and not hasattr(x, "shape"):
+            return x
+        shape = x.shape
+        if kind == "resid":                    # (B,S,D)
+            if shape[1] == 1:                  # decode token
+                spec = fit_spec(self.mesh, shape, [(dp,), (), (tp,)])
+            else:
+                spec = fit_spec(self.mesh, shape, [(dp,), (tp,), ()])
+        elif kind == "logits":                 # (B,S,V) / (B,V)
+            if len(shape) == 3:
+                spec = fit_spec(self.mesh, shape, [(dp,), (), (tp,)])
+            else:
+                spec = fit_spec(self.mesh, shape, [(dp,), (tp,)])
+        elif kind == "heads" and len(shape) == 5:      # q (B,S,K,G,hd)
+            # layout must agree with the "scores" rule or every chunk pays a
+            # reshard: head-shard only when the score slab can shard K or G;
+            # otherwise keep q SEQUENCE-sharded (matching the CQ-sharded
+            # score slab AND the resid layout).
+            ts = axis_size(self.mesh, tp)
+            if shape[2] % ts == 0 or shape[3] % ts == 0:
+                spec = fit_spec(self.mesh, shape,
+                                [(dp,), (), (tp,), (tp,), ()])
+            else:
+                spec = fit_spec(self.mesh, shape, [(dp,), (tp,), (), (), ()])
+        elif kind == "kv_full" and len(shape) == 4:    # K/V: batch-only
+            spec = fit_spec(self.mesh, shape, [(dp,), (), (), ()])
+        elif kind == "attn_in" and len(shape) == 3:    # x before q/k/v proj
+            # gather the sequence at the NARROWEST tensor (width D), so the
+            # S-shard → head-shard transition never touches the widened
+            # q/k projections (deepseek: 24576-wide q_cat vs 5120-wide x)
+            spec = fit_spec(self.mesh, shape, [(dp,), (), ()])
+        elif kind == "heads4" and len(shape) == 4:     # (B,S,H,d): H→tp
+            spec = fit_spec(self.mesh, shape, [(dp,), (), (tp,), ()])
+        elif kind == "scores4" and len(shape) == 4:    # (B,H,CQ,Skv)
+            spec = fit_spec(self.mesh, shape, [(dp,), (tp,), (), ()])
+        elif kind == "scores" and len(shape) == 5:     # (B,K,G,CQ,Skv)
+            # head-shard the score slab; CQ picks up tp when heads can't
+            # (yi-34b: 56 heads), keeping the fp32 slab under control
+            spec = fit_spec(self.mesh, shape,
+                            [(dp,), (tp,), (tp,), (tp,), ()])
+        else:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.named(spec))
+
+    def batch_spec(self, name: str, shape: Sequence[int]) -> P:
+        # tokens/labels (B,S): B→dp; enc_frames (B,F,D): B→dp
+        return fit_spec(self.mesh, shape,
+                        [(self.dp,)] + [()] * (len(shape) - 1))
+
+    # Cache specs are built *structurally* (mirroring model.init_cache) since
+    # NamedTuple flattening loses field names.  Each leaf kind has an explicit
+    # (B-dim offset, seq/head-dim offset) rule; dims that don't divide fall
+    # back via fit_spec (long_500k's batch=1 → the sequence dim picks up the
+    # whole (dp+tp) mesh instead: full sequence-parallel decode).
+    def _kv_spec(self, shape) -> P:            # (..., B, S, K, hd)
+        dp, tp = self.dp, self.tp
+        r = len(shape)
+        prefs = [()] * r
+        b_off = max(r - 4, 0)
+        prefs[b_off] = (dp,)
+        prefs[b_off + 1] = (tp, dp + (tp,), dp)
+        return fit_spec(self.mesh, shape, prefs)
+
+    def _mla_spec(self, shape) -> P:           # (..., B, S, r) latent cache
+        dp, tp = self.dp, self.tp
+        r = len(shape)
+        prefs = [()] * r
+        prefs[r - 3] = (dp,)
+        prefs[r - 2] = (tp, dp + (tp,), dp)
+        return fit_spec(self.mesh, shape, prefs)
+
+    def _ssm_spec(self, shape) -> P:           # (..., B, nh, hd, N)
+        dp, tp = self.dp, self.tp
+        r = len(shape)
+        prefs = [()] * r
+        prefs[r - 4] = (dp,)
+        prefs[r - 3] = (tp,)
+        return fit_spec(self.mesh, shape, prefs)
+
+    def _conv_spec(self, shape) -> P:          # (..., B, C, W-1)
+        dp, tp = self.dp, self.tp
+        r = len(shape)
+        prefs = [()] * r
+        prefs[r - 3] = (dp,)
+        prefs[r - 2] = (tp,)
+        return fit_spec(self.mesh, shape, prefs)
+
+    def cache_pspecs(self, cfg, cache) -> Any:
+        """PartitionSpec pytree matching model.init_cache(cfg, ...) output."""
+        from repro.models.ssm import SSMState  # local import, no cycle
+
+        def attn_cache_spec(c):
+            if "ckv" in c:                     # MLA latent
+                return {"ckv": self._mla_spec(c["ckv"].shape),
+                        "krope": self._mla_spec(c["krope"].shape)}
+            return {k: self._kv_spec(c[k].shape) for k in ("k", "v")}
+
+        if cfg.family == "ssm":
+            return SSMState(ssm=self._ssm_spec(cache.ssm.shape),
+                            conv=self._conv_spec(cache.conv.shape))
+        if cfg.is_hybrid:
+            return {
+                "attn": attn_cache_spec(cache["attn"]),
+                "ssm": SSMState(ssm=self._ssm_spec(cache["ssm"].ssm.shape),
+                                conv=self._conv_spec(cache["ssm"].conv.shape)),
+            }
+        out = {"blocks": {}}
+        blocks = cache["blocks"]
+        out["blocks"] = {"self": attn_cache_spec(blocks["self"])}
+        for extra in ("cross_k", "cross_v"):
+            if extra in blocks:
+                out["blocks"][extra] = self._kv_spec(blocks[extra].shape)
+        if "first" in cache:
+            out["first"] = [{"self": attn_cache_spec(c["self"])}
+                            for c in cache["first"]]
+        return out
+
+    def cache_shardings(self, cfg, cache) -> Any:
+        return jax.tree.map(self.named, self.cache_pspecs(cfg, cache),
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def batch_shardings(self, batch) -> Any:
+        return jax.tree_util.tree_map_with_path(
+            lambda kp, leaf: self.named(self.batch_spec(str(kp), leaf.shape)),
+            batch)

@@ -1,0 +1,140 @@
+"""Unit + property tests for the XLB core (router, policies, relay,
+request_map, delta refresh)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delta, policies, relay, request_map, router
+from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST, POLICY_RR,
+                                      POLICY_RANDOM, POLICY_WEIGHTED, Rule,
+                                      ServiceConfig, build_state, fnv1a)
+
+
+@pytest.fixture()
+def state():
+    services = [
+        ServiceConfig("front", rules=[
+            Rule(field=0, value="v2", cluster="canary"),
+            Rule(field=0, value=None, cluster="stable"),
+        ]),
+        ServiceConfig("payments", rules=[
+            Rule(field=1, value="gold", cluster="gold-pool"),
+        ]),
+    ]
+    clusters = [
+        Cluster("canary", endpoints=[0, 1], policy=POLICY_RR),
+        Cluster("stable", endpoints=[2, 3, 4], policy=POLICY_LEAST_REQUEST),
+        Cluster("gold-pool", endpoints=[5], policy=POLICY_RANDOM),
+    ]
+    st, ids = build_state(services, clusters)
+    return st, ids
+
+
+def test_content_match_first_rule_wins(state):
+    st, ids = state
+    feats = jnp.zeros((3, 8), jnp.int32)
+    feats = feats.at[0, 0].set(fnv1a("v2"))        # matches canary
+    feats = feats.at[1, 0].set(fnv1a("v1"))        # falls to wildcard stable
+    svc = jnp.array([0, 0, 1], jnp.int32)
+    feats = feats.at[2, 1].set(fnv1a("silver"))    # no match on payments
+    cl = router.match_cluster(st, svc, feats)
+    assert cl[0] == ids["clusters"]["canary"]
+    assert cl[1] == ids["clusters"]["stable"]
+    assert cl[2] == -1                             # no_route_match
+
+
+def test_round_robin_cycles(state):
+    st, ids = state
+    cl = jnp.full((4,), ids["clusters"]["canary"], jnp.int32)
+    sel, st2 = policies.select(st, cl, jax.random.PRNGKey(0))
+    # 4 requests over 2 endpoints → each endpoint chosen exactly twice
+    counts = np.bincount(np.asarray(sel.endpoint), minlength=6)
+    assert counts[0] == 2 and counts[1] == 2
+    # cursor advanced by the batch size mod ep_count
+    assert st2.rr_cursor[ids["clusters"]["canary"]] == 4 % 2
+
+
+def test_least_request_prefers_idle(state):
+    st, ids = state
+    st = st._replace(ep_load=st.ep_load.at[2].set(5).at[3].set(7))
+    cl = jnp.full((1,), ids["clusters"]["stable"], jnp.int32)
+    sel, _ = policies.select(st, cl, jax.random.PRNGKey(1))
+    assert int(sel.endpoint[0]) == 4               # the idle endpoint
+
+
+def test_load_counting_and_release(state):
+    st, ids = state
+    cl = jnp.full((6,), ids["clusters"]["stable"], jnp.int32)
+    sel, st2 = policies.select(st, cl, jax.random.PRNGKey(2))
+    assert int(st2.ep_load.sum()) == 6
+    st3 = policies.release(st2, sel.endpoint, jnp.ones((6,), bool))
+    assert int(st3.ep_load.sum()) == 0
+
+
+def test_relay_roundtrip_sort_vs_cumsum_vs_einsum():
+    key = jax.random.PRNGKey(0)
+    N, D, E, C = 64, 16, 4, 32
+    x = jax.random.normal(key, (N, D))
+    idx = jax.random.randint(key, (N,), 0, E)
+    w = jax.random.uniform(key, (N,))
+    outs = []
+    for method in ("sort", "cumsum"):
+        buf, meta = relay.relay_dispatch(x, idx, E, C, method=method)
+        outs.append(relay.relay_combine(buf, meta, w))
+    buf, meta, d_oh = relay.relay_dispatch_einsum(x, idx, E, C)
+    outs.append(relay.relay_combine_einsum(buf, d_oh, w))
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)
+    # no-drop roundtrip restores weighted rows exactly
+    np.testing.assert_allclose(outs[0], x * w[:, None], rtol=1e-5, atol=1e-5)
+
+
+def test_relay_capacity_drop():
+    x = jnp.ones((10, 4))
+    idx = jnp.zeros((10,), jnp.int32)              # all to one backend
+    buf, meta = relay.relay_dispatch(x, idx, 2, 4)
+    assert int(meta.ok.sum()) == 4
+    assert float(meta.overflow_frac) == pytest.approx(0.6)
+    out = relay.relay_combine(buf, meta)
+    assert int((jnp.abs(out).sum(1) > 0).sum()) == 4
+
+
+def test_slot_allocation_and_response_order():
+    free = jnp.array([[True, False, True], [True, True, True]])
+    inst = jnp.array([0, 0, 0, 1, -1], jnp.int32)
+    a = request_map.allocate_slots(inst, free)
+    # instance 0 has 2 free slots → third request held
+    assert list(np.asarray(a.ok)) == [True, True, False, True, False]
+    assert set(np.asarray(a.slot)[:2].tolist()) == {0, 2}
+    pool = jnp.zeros(free.shape, jnp.int32)
+    vals = jnp.array([10, 20, 30, 40, 50], jnp.int32)
+    pool = request_map.scatter_to_pool(pool, a, vals)
+    back = request_map.gather_responses(pool, a, fill=-7)
+    assert list(np.asarray(back)) == [10, 20, -7, 40, -7]
+
+
+def test_delta_refresh_add_remove_endpoint(state):
+    st, ids = state
+    ci = ids["clusters"]["canary"]
+    v0 = int(st.version)
+    st2 = delta.add_endpoint(st, ci, ep_slot=6, instance=9)
+    assert int(st2.cluster_ep_count[ci]) == 3
+    assert int(st2.version) == v0 + 1
+    # new endpoint becomes routable without recompilation (same pytree shape)
+    assert jax.tree.structure(st) == jax.tree.structure(st2)
+    st3 = delta.remove_endpoint(st2, ci, ep_off=0)
+    assert int(st3.cluster_ep_count[ci]) == 2
+
+
+def test_weighted_policy_distribution(state):
+    st, ids = state
+    ci = ids["clusters"]["stable"]
+    st = delta.set_policy(st, ci, POLICY_WEIGHTED)
+    # weight endpoint 2 much heavier
+    st = delta.set_weight(st, 2, 50.0)
+    cl = jnp.full((512,), ci, jnp.int32)
+    sel, _ = policies.select(st, cl, jax.random.PRNGKey(3))
+    counts = np.bincount(np.asarray(sel.endpoint), minlength=6)
+    assert counts[2] > 350                         # ~50/52 of traffic

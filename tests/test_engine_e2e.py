@@ -1,0 +1,112 @@
+"""End-to-end serving-engine tests: the XLB in-graph engine and the two
+sidecar baselines must emit bit-identical token streams per request (greedy
+decode is per-sequence independent of which instance/slot serves it)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import interpose, sidecar
+from repro.core.routing_table import (Cluster, POLICY_RR, Rule, ServiceConfig,
+                                      build_state)
+from repro.models import model as M
+
+I, C, MAXLEN, NREQ = 2, 3, 24, 4
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(get_config("xlb-service-model"))
+    params = M.init_params(cfg, jax.random.PRNGKey(7), dtype=jnp.float32)
+    services = [ServiceConfig("svc", rules=[Rule(0, None, "pool")])]
+    clusters = [Cluster("pool", endpoints=list(range(I)), policy=POLICY_RR)]
+    routing, _ = build_state(services, clusters)
+    return cfg, params, routing
+
+
+def _reqs(cfg, n=NREQ, pad_to=8):
+    rid = np.full((pad_to,), -1, np.int32)
+    rid[:n] = np.arange(n)
+    tok = np.zeros((pad_to,), np.int32)
+    tok[:n] = 3 + np.arange(n) % (cfg.vocab - 3)
+    return interpose.RequestBatch(
+        req_id=jnp.asarray(rid), svc=jnp.zeros((pad_to,), jnp.int32),
+        features=jnp.zeros((pad_to, 8), jnp.int32), token=jnp.asarray(tok),
+        msg_bytes=jnp.full((pad_to,), 100, jnp.int32))
+
+
+def _drain_xlb(cfg, params, routing, steps=12):
+    eng = interpose.Engine(cfg, I, C, MAXLEN)
+    state = eng.init_state(routing, dtype=jnp.float32)
+    serve = eng.make_jitted(donate=False)
+    reqs = _reqs(cfg)
+    streams = {}
+    for t in range(steps):
+        state, out = serve(params, state, reqs)
+        reqs = _reqs(cfg, n=0)                     # only admit on step 0
+        emitted = np.asarray(out["emitted"])
+        pool_req = np.asarray(state.pool.req_id)
+        done = np.asarray(out["done"])
+        act = np.asarray(state.pool.active)
+        for i in range(I):
+            for s in range(C):
+                r = pool_req[i, s]
+                if r >= 0 and act[i, s]:
+                    streams.setdefault(int(r), []).append(int(emitted[i, s]))
+                elif done[i, s]:
+                    pass
+    return streams, state
+
+
+def _drain_sidecar(cfg, params, routing, mode, steps=12):
+    eng = sidecar.SidecarEngine(cfg, I, C, MAXLEN, routing, mode=mode)
+    eng.admit(_reqs(cfg))
+    streams = {}
+    for t in range(steps):
+        before_req = eng.pool_req.copy()
+        before_act = eng.pool_active.copy()
+        eng.step(params)
+        for i in range(I):
+            for s in range(C):
+                if before_act[i, s]:
+                    streams.setdefault(int(before_req[i, s]), []).append(
+                        int(eng.pool_tok[i, s]))
+    return streams
+
+
+def test_xlb_emits_all_requests(setup):
+    cfg, params, routing = setup
+    streams, state = _drain_xlb(cfg, params, routing)
+    assert set(streams) == set(range(NREQ))
+    assert int(state.metrics.requests.sum()) == NREQ
+    assert int(state.metrics.no_route_match) == 0
+
+
+def test_xlb_matches_sidecars_tokenwise(setup):
+    cfg, params, routing = setup
+    xlb, _ = _drain_xlb(cfg, params, routing, steps=10)
+    istio = _drain_sidecar(cfg, params, routing, "istio", steps=10)
+    cilium = _drain_sidecar(cfg, params, routing, "cilium", steps=10)
+    for r in range(NREQ):
+        n = min(len(xlb[r]), len(istio[r]), len(cilium[r]))
+        assert n >= 3
+        assert xlb[r][:n] == istio[r][:n] == cilium[r][:n], (
+            f"req {r}: xlb={xlb[r][:n]} istio={istio[r][:n]} "
+            f"cilium={cilium[r][:n]}")
+
+
+def test_slot_reuse_after_completion(setup):
+    """Pool slots freed by EOS/length completion get reused by new arrivals."""
+    cfg, params, routing = setup
+    eng = interpose.Engine(cfg, I, C, max_len=6)   # force quick completion
+    state = eng.init_state(routing, dtype=jnp.float32)
+    serve = eng.make_jitted(donate=False)
+    state, _ = serve(params, state, _reqs(cfg, n=6))   # fill all 6 slots
+    assert int(state.pool.active.sum()) == 6
+    for _ in range(8):
+        state, out = serve(params, state, _reqs(cfg, n=0))
+    assert int(state.pool.active.sum()) == 0           # all completed
+    state, _ = serve(params, state, _reqs(cfg, n=3))
+    assert int(state.pool.active.sum()) == 3           # slots reused

@@ -1,0 +1,160 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp ref."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST, Rule,
+                                      ServiceConfig, build_state)
+
+TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+        jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+def _tol(dtype):
+    return TOLS[jnp.bfloat16 if dtype == jnp.bfloat16 else jnp.float32]
+
+
+# --------------------------------------------------------------------------- #
+# flash attention
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("B,S,H,K,hd", [
+    (1, 256, 4, 4, 64),        # MHA
+    (2, 256, 8, 2, 64),        # GQA
+    (1, 512, 4, 1, 128),       # MQA, rectangular blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention(B, S, H, K, hd, dtype, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd), dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=128,
+                              block_k=128)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# --------------------------------------------------------------------------- #
+# decode attention
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("B,S,H,K,hd,bk", [
+    (2, 1024, 8, 2, 64, 256),
+    (4, 512, 4, 4, 128, 512),
+    (1, 2048, 8, 1, 64, 512),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, S, H, K, hd, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    kc = jax.random.normal(ks[1], (B, S, K, hd), dtype)
+    vc = jax.random.normal(ks[2], (B, S, K, hd), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 0, S - 1)
+    out = ops.decode_attention(q, kc, vc, lengths, block_k=bk)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+# --------------------------------------------------------------------------- #
+# SSD scan
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("B,S,nh,hd,N,chunk", [
+    (1, 256, 2, 64, 32, 128),
+    (2, 256, 4, 32, 64, 64),
+    (1, 512, 2, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_ssd_scan(B, S, nh, hd, N, chunk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    xdt = jax.random.normal(ks[0], (B, S, nh, hd), dtype) * 0.5
+    # negative decay keeps the recurrence stable (dt·A with A<0)
+    a_log = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh))) * 0.5
+    Bm = jax.random.normal(ks[2], (B, S, nh, N), dtype) * 0.3
+    Cm = jax.random.normal(ks[3], (B, S, nh, N), dtype) * 0.3
+    out = ops.ssd_scan(xdt, a_log, Bm, Cm, chunk=chunk)
+    want = ref.ssd_scan_ref(xdt, a_log, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_matches_model_chunked():
+    """Kernel == the model's chunked SSD path (used in mamba2/jamba)."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    B, S, nh, hd, N = 2, 256, 2, 64, 32
+    xdt = jax.random.normal(ks[0], (B, S, nh, hd)) * 0.5
+    a_log = -jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh))) * 0.5
+    Bm = jax.random.normal(ks[2], (B, S, nh, N)) * 0.3
+    Cm = jax.random.normal(ks[3], (B, S, nh, N)) * 0.3
+    out = ops.ssd_scan(xdt, a_log, Bm, Cm, chunk=64)
+    want, _ = ssd_chunked(xdt, a_log, Bm, Cm, chunk=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------------------- #
+# route match (XLB hot path)
+# --------------------------------------------------------------------------- #
+
+
+def _routing_state():
+    from repro.core.routing_table import fnv1a
+    services = [ServiceConfig(f"svc{i}", rules=[
+        Rule(field=0, value="v2", cluster=f"cl{i}a"),
+        Rule(field=1, value=None, cluster=f"cl{i}b"),
+    ]) for i in range(4)]
+    clusters = []
+    eid = 0
+    for i in range(4):
+        clusters += [
+            Cluster(f"cl{i}a", endpoints=[eid, eid + 1],
+                    policy=POLICY_LEAST_REQUEST),
+            Cluster(f"cl{i}b", endpoints=[eid + 2, eid + 3, eid + 4],
+                    policy=POLICY_LEAST_REQUEST)]
+        eid += 5
+    st, _ = build_state(services, clusters)
+    # random outstanding-load counters
+    load = jax.random.randint(jax.random.PRNGKey(9),
+                              st.ep_load.shape, 0, 7)
+    return st._replace(ep_load=load.astype(jnp.int32)), fnv1a
+
+
+@pytest.mark.parametrize("R", [256, 512])
+def test_route_match(R):
+    st, fnv1a = _routing_state()
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    svc = jax.random.randint(ks[0], (R,), 0, 4)
+    feats = jnp.zeros((R, 8), jnp.int32)
+    hit = jax.random.bernoulli(ks[1], 0.5, (R,))
+    feats = feats.at[:, 0].set(jnp.where(hit, fnv1a("v2"), fnv1a("v9")))
+    cluster, ep = ops.route_match(svc, feats, st)
+    cl_ref, ep_ref = ref.route_match_ref(svc, feats, st)
+    np.testing.assert_array_equal(np.asarray(cluster), np.asarray(cl_ref))
+    np.testing.assert_array_equal(np.asarray(ep), np.asarray(ep_ref))
+
+
+# --------------------------------------------------------------------------- #
+# relay slot assignment
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("N,E,bn", [(1024, 16, 256), (2048, 160, 1024),
+                                    (512, 4, 512)])
+def test_relay_slots(N, E, bn):
+    idx = jax.random.randint(jax.random.PRNGKey(5), (N,), 0, E)
+    slot, load = ops.relay_slots(idx, E, block_n=bn)
+    slot_ref, load_ref = ref.relay_slots_ref(idx, E)
+    np.testing.assert_array_equal(np.asarray(slot), np.asarray(slot_ref))
+    np.testing.assert_array_equal(np.asarray(load), np.asarray(load_ref))

@@ -1,0 +1,122 @@
+"""Sharding-rule unit tests + property-style invariants (divisibility is the
+load-bearing guarantee: jax rejects uneven explicit shardings)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models import model as M
+from repro.sharding.specs import MeshSpec, fit_spec
+
+
+@pytest.fixture(scope="module")
+def ms():
+    # 1-device container: build a FAKE mesh descriptor via numpy devices is
+    # not possible; use jax.make_mesh on the single device reshaped (1,1) and
+    # monkeypatch shape lookups — instead we test fit_spec against a stub.
+    class StubMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    class StubMS(MeshSpec):
+        pass
+    return MeshSpec.__new__(MeshSpec), StubMesh()
+
+
+def test_fit_spec_divisibility(ms):
+    _, mesh = ms
+    assert fit_spec(mesh, (64, 128), [("data",), ("model",)]) == \
+        P("data", "model")
+    # 56 doesn't divide 16 → replicated
+    assert fit_spec(mesh, (56, 128), [("model",), ()]) == P()
+    # tuple axes: 512 % (16*16) == 0
+    assert fit_spec(mesh, (512,), [(("data", "model"),)]) == \
+        P(("data", "model"))
+    # axis used once only
+    assert fit_spec(mesh, (32, 32), [("model",), ("model",)]) == P("model")
+    # fallback order: first candidate that divides wins
+    assert fit_spec(mesh, (8, 32), [("model", "data"), ()]) == P()
+    assert fit_spec(mesh, (32, 8), [("model",), ("data",)]) == P("model")
+
+
+def _mk_ms(params_tp_only=False):
+    obj = object.__new__(MeshSpec)
+    class StubMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    object.__setattr__(obj, "mesh", StubMesh())
+    object.__setattr__(obj, "params_tp_only", params_tp_only)
+    return obj
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_specs_divide_for_all_archs(arch):
+    """PROPERTY: every parameter of every arch gets a spec whose sharded dims
+    divide exactly on the 16×16 mesh (else jit would reject it)."""
+    cfg = get_config(arch)
+    ms = _mk_ms()
+    params = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in kp)
+        spec = ms.param_spec(path, leaf.shape)
+        for dim, axes in zip(leaf.shape, spec):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            size = int(np.prod([ms.mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (arch, path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["granite-20b", "deepseek-v2-236b",
+                                  "mamba2-2.7b", "jamba-v0.1-52b",
+                                  "whisper-large-v3"])
+def test_cache_specs_divide(arch):
+    cfg = get_config(arch)
+    ms = _mk_ms()
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, 128, 1024))
+    specs = ms.cache_pspecs(cfg, cache)
+    leaves = jax.tree.leaves(cache)
+    spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(leaves) == len(spec_leaves)
+    for leaf, spec in zip(leaves, spec_leaves):
+        for dim, axes in zip(leaf.shape, spec):
+            if axes is None:
+                continue
+            axes = axes if isinstance(axes, tuple) else (axes,)
+            size = int(np.prod([ms.mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (arch, leaf.shape, spec)
+
+
+def test_tp_only_variant_drops_dp():
+    ms = _mk_ms(params_tp_only=True)
+    spec = ms.param_spec("blocks/ffn/w_in", (52, 6144, 24576))
+    assert "data" not in str(spec)
+    ms2 = _mk_ms(params_tp_only=False)
+    spec2 = ms2.param_spec("blocks/ffn/w_in", (52, 6144, 24576))
+    assert "data" in str(spec2)
+
+
+def test_expert_weight_specs():
+    ms = _mk_ms()
+    # (L, E, D, F): experts → model axis (EP), D → data (fsdp)
+    spec = ms.param_spec("blocks/moe/w_in", (59, 160, 5120, 1536))
+    assert spec == P(None, "model", "data")
+    spec = ms.param_spec("blocks/moe/w_out", (59, 160, 1536, 5120))
+    assert spec == P(None, "model", None, "data")
+
+
+def test_heads_constraint_consistency():
+    """q layout must be shardable whenever the scores rule shards K or G —
+    the invariant behind the 5× collective win recorded in §Perf."""
+    ms = _mk_ms()
+    tp = 16
+    for K, G in [(1, 48), (8, 6), (8, 8), (128, 1), (8, 7), (20, 1)]:
+        expand = (K % tp != 0) and (G % tp != 0)
+        if expand:
+            H = K * G
+            target = -(-H // tp) * tp
+            assert target % tp == 0

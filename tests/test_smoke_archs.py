@@ -1,0 +1,86 @@
+"""Per-architecture smoke tests: reduced config, one forward + train-grad +
+prefill + decode step on CPU; asserts shapes and no NaNs.  (Deliverable f.)"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, smoke_config
+from repro.models import model as M
+
+BATCH, SEQ = 2, 32
+
+
+def _batch(cfg, key):
+    tok = jax.random.randint(key, (BATCH, SEQ), 0, cfg.vocab)
+    batch = {"tokens": tok, "labels": jnp.roll(tok, -1, axis=1)}
+    if cfg.is_encdec:
+        batch["enc_frames"] = jax.random.normal(
+            key, (BATCH, cfg.enc_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.fixture(scope="module", params=ASSIGNED_ARCHS)
+def arch(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def setup(arch):
+    cfg = smoke_config(get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key, dtype=jnp.float32)
+    return cfg, params, _batch(cfg, key)
+
+
+def test_forward_shapes(setup):
+    cfg, params, batch = setup
+    logits, metrics = M.forward(cfg, params, batch["tokens"],
+                                enc_frames=batch.get("enc_frames"))
+    assert logits.shape == (BATCH, SEQ, cfg.vocab_padded)
+    assert jnp.isfinite(logits).all(), "NaN/Inf in logits"
+
+
+def test_train_step_grad(setup):
+    cfg, params, batch = setup
+    (loss, aux), grads = jax.value_and_grad(
+        lambda p: M.loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert jnp.isfinite(loss)
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+
+
+def test_prefill_then_decode_matches_forward(setup):
+    """Decode path is numerically consistent with the full forward."""
+    cfg, params, batch = setup
+    tokens = batch["tokens"]
+    full_logits, _ = M.forward(cfg, params, tokens,
+                               enc_frames=batch.get("enc_frames"))
+
+    cache = M.init_cache(cfg, BATCH, SEQ + 8, dtype=jnp.float32)
+    pre = tokens[:, : SEQ - 1]
+    logits_pre, cache = M.prefill(cfg, params, pre, cache,
+                                  enc_frames=batch.get("enc_frames"))
+    lengths = jnp.full((BATCH,), SEQ - 1, jnp.int32)
+    logits_dec, cache = M.decode_step(cfg, params, tokens[:, SEQ - 1:SEQ],
+                                      lengths, cache)
+    assert logits_dec.shape == (BATCH, cfg.vocab_padded)
+    assert jnp.isfinite(logits_dec).all()
+    # SSM prefill carries state exactly; attention reads the same KV.
+    ref = full_logits[:, -1]
+    err = jnp.max(jnp.abs(logits_dec - ref)) / (jnp.max(jnp.abs(ref)) + 1e-6)
+    assert err < 5e-2, f"decode vs forward mismatch: rel {err:.3e}"
+
+
+def test_prefill_last_logits_match_forward(setup):
+    cfg, params, batch = setup
+    tokens = batch["tokens"]
+    full_logits, _ = M.forward(cfg, params, tokens,
+                               enc_frames=batch.get("enc_frames"))
+    cache = M.init_cache(cfg, BATCH, SEQ + 8, dtype=jnp.float32)
+    logits_pre, _ = M.prefill(cfg, params, tokens, cache,
+                              enc_frames=batch.get("enc_frames"))
+    ref = full_logits[:, -1]
+    err = jnp.max(jnp.abs(logits_pre - ref)) / (jnp.max(jnp.abs(ref)) + 1e-6)
+    assert err < 1e-3, f"prefill vs forward mismatch: rel {err:.3e}"
