@@ -8,10 +8,14 @@ tiny per-service model, comparing the three architectures of Fig. 1:
 
 Run all:      PYTHONPATH=src python -m benchmarks.run
 Run a subset: PYTHONPATH=src python -m benchmarks.run table1 fig8
+Machine-readable: add ``--json OUT.json`` to dump every emitted row
+(``admit`` additionally always writes BENCH_admit.json, the fused-vs-staged
+admission trajectory record — see benchmarks/README.md).
 """
 
 from __future__ import annotations
 
+import json
 import resource
 import sys
 import time
@@ -169,31 +173,57 @@ def bench_fig12():
 
 def bench_table2():
     """Table 2 analogue: decompose the XLB step — routing/balancing vs model
-    decode — showing essential-LB work is a small fraction (paper: ~20%)."""
+    decode — showing essential-LB work is a small fraction (paper: ~20%).
+    ``route+balance_us`` is the engine's real path (the fused admit kernel);
+    the pre-fusion staged jnp chain is kept as ``route+balance_staged_us``."""
     import jax
     import jax.numpy as jnp
     from benchmarks import common
     from repro.core import policies, router
+    from repro.core.routing_table import MAX_EPS_PER_CLUSTER
+    from repro.kernels import ops
 
     st = common.build_routing(4)
-    svc = jnp.zeros((64,), jnp.int32)
-    feats = jnp.zeros((64, 8), jnp.int32)
+    R = 64
+    svc = jnp.zeros((R,), jnp.int32)
+    feats = jnp.zeros((R, 8), jnp.int32)
+    rid = jnp.arange(R, dtype=jnp.int32)
+    msgb = jnp.full((R,), 128, jnp.int32)
+    free = jnp.ones((4, 16), bool)
 
     @jax.jit
-    def lb_only(st, svc, feats, key):
+    def lb_fused(st, key):
+        kr, kw = jax.random.split(key)
+        rnd = jax.random.randint(kr, (R,), 0, 1 << 30, dtype=jnp.int32)
+        gum = jax.random.gumbel(kw, (R, MAX_EPS_PER_CLUSTER), jnp.float32)
+        res = ops.admit(rid, svc, feats, msgb, st, free, rnd, gum)
+        return res.endpoint, st._replace(ep_load=res.ep_load,
+                                         rr_cursor=res.rr_cursor)
+
+    @jax.jit
+    def lb_staged(st, svc, feats, key):
         cl = router.match_cluster(st, svc, feats)
         sel, st = policies.select(st, cl, key)
         return sel.endpoint, st
 
     key = jax.random.PRNGKey(0)
-    out, _ = lb_only(st, svc, feats, key)                  # warm
+    out, _ = lb_fused(st, key)                             # warm
     jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(50):
-        out, _ = lb_only(st, svc, feats, key)
+        out, _ = lb_fused(st, key)
     jax.block_until_ready(out)
     lb_us = (time.perf_counter() - t0) / 50 * 1e6
     emit("table2", "xlb", "route+balance_us", lb_us)
+
+    out, _ = lb_staged(st, svc, feats, key)                # warm
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(50):
+        out, _ = lb_staged(st, svc, feats, key)
+    jax.block_until_ready(out)
+    emit("table2", "xlb", "route+balance_staged_us",
+         (time.perf_counter() - t0) / 50 * 1e6)
 
     svc_e = common.make_service("xlb", 2, 8, 4)
     svc_e.submit(list(range(8)))
@@ -206,7 +236,69 @@ def bench_table2():
     emit("table2", "xlb", "lb_fraction_pct", 100.0 * lb_us / step_us)
 
 
+def bench_admit():
+    """Admission microbenchmark: fused Pallas kernel vs the staged jnp chain
+    (match → select → allocate, three full-batch argsorts), sweeping the
+    admission batch.  Always writes BENCH_admit.json (perf trajectory)."""
+    import jax
+    import jax.numpy as jnp
+    from benchmarks import common
+    from repro.core import policies, request_map, router
+    from repro.core.routing_table import MAX_EPS_PER_CLUSTER
+    from repro.kernels import ops
+
+    n_instances, slots = 8, 64
+    st = common.build_routing(n_instances)
+    free = jnp.ones((n_instances, slots), bool)
+    record = {"batch": [], "staged_us": [], "fused_us": [], "speedup": []}
+    for R in (64, 256, 1024, 4096):
+        svc = jnp.zeros((R,), jnp.int32)
+        feats = jnp.zeros((R, 8), jnp.int32)
+        rid = jnp.arange(R, dtype=jnp.int32)
+        msgb = jnp.full((R,), 128, jnp.int32)
+
+        @jax.jit
+        def staged(st, key):
+            cl = router.match_cluster(st, svc, feats)
+            sel, st = policies.select(st, cl, key)
+            a = request_map.allocate_slots(sel.instance, free)
+            return a.slot, st
+
+        @jax.jit
+        def fused(st, key):
+            kr, kw = jax.random.split(key)
+            rnd = jax.random.randint(kr, (R,), 0, 1 << 30, dtype=jnp.int32)
+            gum = jax.random.gumbel(kw, (R, MAX_EPS_PER_CLUSTER),
+                                    jnp.float32)
+            res = ops.admit(rid, svc, feats, msgb, st, free, rnd, gum)
+            return res.slot, st._replace(ep_load=res.ep_load,
+                                         rr_cursor=res.rr_cursor)
+
+        key = jax.random.PRNGKey(0)
+        reps = max(10, 2048 // R)
+        times = {}
+        for name, fn in (("staged", staged), ("fused", fused)):
+            out, _ = fn(st, key)                       # compile outside timing
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                out, _ = fn(st, key)
+            jax.block_until_ready(out)
+            times[name] = (time.perf_counter() - t0) / reps * 1e6
+            emit("admit", name, f"us@{R}", times[name])
+        emit("admit", "fused", f"speedup@{R}", times["staged"] / times["fused"])
+        record["batch"].append(R)
+        record["staged_us"].append(round(times["staged"], 2))
+        record["fused_us"].append(round(times["fused"], 2))
+        record["speedup"].append(round(times["staged"] / times["fused"], 3))
+    with open("BENCH_admit.json", "w") as f:
+        json.dump(record, f, indent=2)
+        f.write("\n")
+    print("# wrote BENCH_admit.json", flush=True)
+
+
 BENCHES = {
+    "admit": bench_admit,
     "table1": bench_table1, "table2": bench_table2, "fig5": bench_fig5,
     "fig6": bench_fig6, "fig7": bench_fig7, "fig8": bench_fig8,
     "fig9": bench_fig9, "fig10": bench_fig10, "fig11": bench_fig11,
@@ -215,7 +307,20 @@ BENCHES = {
 
 
 def main() -> None:
-    names = sys.argv[1:] or list(BENCHES)
+    args = sys.argv[1:]
+    json_out = None
+    if "--json" in args:
+        i = args.index("--json")
+        if i + 1 >= len(args):
+            sys.exit("usage: python -m benchmarks.run [BENCH ...] "
+                     "--json OUT.json")
+        json_out = args[i + 1]
+        args = args[:i] + args[i + 2:]
+    names = args or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        sys.exit(f"unknown bench {', '.join(unknown)}; "
+                 f"choose from: {', '.join(BENCHES)}")
     print("bench,mode,metric,value")
     for n in names:
         BENCHES[n]()
@@ -223,6 +328,12 @@ def main() -> None:
     if "xlb" in t1 and t1.get("istio"):
         print(f"# headline: xlb/istio throughput = "
               f"{t1['xlb'] / t1['istio']:.2f}x  (paper: >=1.5x)")
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump([{"bench": b, "mode": m, "metric": k, "value": v}
+                       for b, m, k, v in ROWS], f, indent=2)
+            f.write("\n")
+        print(f"# wrote {json_out}", flush=True)
 
 
 if __name__ == "__main__":

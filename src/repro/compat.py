@@ -1,0 +1,45 @@
+"""jax version compatibility shims (installed floor: jax 0.4.x).
+
+Every cross-version difference the repo touches lives here — don't spot-fix
+call sites.  Current shims:
+
+  * ``shard_map``  — top-level export (>= 0.6) vs ``jax.experimental``;
+    the old keyword ``check_rep`` is exposed under its new name
+    ``check_vma``.
+  * ``axis_size``  — ``jax.lax.axis_size`` (>= 0.5) vs ``psum(1, axis)``
+    (static under shard_map tracing on 0.4.x).
+  * ``make_mesh``  — drops the ``axis_types=`` kwarg on versions without
+    ``jax.sharding.AxisType`` (0.4.x treats every axis as Auto).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+try:                                    # jax >= 0.6: top-level export
+    from jax import shard_map
+except ImportError:                     # jax 0.4.x: experimental namespace,
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    @functools.wraps(_shard_map_legacy)
+    def shard_map(f, /, *, check_vma: bool = True, **kwargs):
+        return _shard_map_legacy(f, check_rep=check_vma, **kwargs)
+
+
+def axis_size(axis) -> int:
+    """Static size of a mapped mesh axis (callable inside shard_map)."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    return jax.lax.psum(1, axis)        # jax 0.4.x: psum of 1 is static
+
+
+def make_mesh(shape, axes, *, auto: bool = True):
+    """jax.make_mesh with explicit-Auto axis types where supported."""
+    try:
+        from jax.sharding import AxisType
+    except ImportError:                 # jax 0.4.x: every axis is Auto
+        return jax.make_mesh(shape, axes)
+    types = (AxisType.Auto if auto else AxisType.Explicit,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=types)

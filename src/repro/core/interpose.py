@@ -26,8 +26,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import policies, request_map, router
-from repro.core.routing_table import FlowMetrics, RoutingState
+from repro.core import policies, request_map
+from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, FlowMetrics,
+                                      RoutingState)
+from repro.kernels import ops
 from repro.models import model as M
 from repro.models.transformer import DEFAULT_CTX
 
@@ -95,26 +97,32 @@ class Engine:
         )
 
     # ------------------------------------------------------------------ #
-    # admit: routing + balancing + slot allocation, fully in-graph
+    # admit: routing + balancing + slot allocation — one fused Pallas
+    # kernel (route → balance → slot-allocate → metrics), the paper's
+    # single in-kernel tail-call chain.  The staged jnp chain lives on in
+    # core/router.py + core/policies.py + core/request_map.py (the sidecar
+    # baselines and the bench_admit comparison drive it from there).
     # ------------------------------------------------------------------ #
     def admit(self, state: EngineState, reqs: RequestBatch) -> EngineState:
         rstate, pool, metrics = state.routing, state.pool, state.metrics
         key, sub = jax.random.split(state.key)
-        valid = reqs.req_id >= 0
+        kr, kw, _ = jax.random.split(sub, 3)
+        R = reqs.req_id.shape[0]
+        # host PRNG draws feed the kernel so random/weighted stay on the
+        # engine's key stream (and match the admit_ref oracle bit-exactly)
+        rnd = jax.random.randint(kr, (R,), 0, 1 << 30, dtype=jnp.int32)
+        gumbel = jax.random.gumbel(kw, (R, MAX_EPS_PER_CLUSTER), jnp.float32)
 
-        cluster = router.match_cluster(rstate, reqs.svc, reqs.features)
-        cluster = jnp.where(valid, cluster, -1)
-        sel, rstate = policies.select(rstate, cluster, sub)
-
-        assign = request_map.allocate_slots(sel.instance, ~pool.active)
-        ok = assign.ok & valid
-        assign = request_map.SlotAssignment(assign.instance, assign.slot, ok)
+        res = ops.admit(reqs.req_id, reqs.svc, reqs.features, reqs.msg_bytes,
+                        rstate, ~pool.active, rnd, gumbel)
+        ok = res.ok > 0
+        assign = request_map.SlotAssignment(res.instance, res.slot, ok)
 
         pool = PoolState(
             req_id=request_map.scatter_to_pool(pool.req_id, assign,
                                                reqs.req_id),
             endpoint=request_map.scatter_to_pool(pool.endpoint, assign,
-                                                 sel.endpoint),
+                                                 res.endpoint),
             svc=request_map.scatter_to_pool(pool.svc, assign, reqs.svc),
             length=request_map.scatter_to_pool(pool.length, assign,
                                                jnp.zeros_like(reqs.req_id)),
@@ -122,18 +130,14 @@ class Engine:
             active=request_map.scatter_to_pool(pool.active, assign,
                                                jnp.ones_like(ok)),
         )
-        # held requests whose balancing succeeded release their counter
-        held = valid & (sel.endpoint >= 0) & ~ok
-        rstate = policies.release(rstate, sel.endpoint, held)
-
+        # load counters, rr cursors, held release and flow metrics all come
+        # fused out of the kernel — no post-pass scatters
+        rstate = rstate._replace(ep_load=res.ep_load, rr_cursor=res.rr_cursor)
         metrics = metrics._replace(
-            requests=metrics.requests.at[jnp.maximum(reqs.svc, 0)].add(
-                ok.astype(jnp.int32), mode="drop"),
-            tx_bytes=metrics.tx_bytes.at[jnp.maximum(reqs.svc, 0)].add(
-                jnp.where(ok, reqs.msg_bytes, 0), mode="drop"),
-            no_route_match=metrics.no_route_match
-            + (valid & (cluster < 0)).sum(),
-            overflow=metrics.overflow + held.sum(),
+            requests=metrics.requests + res.svc_requests,
+            tx_bytes=metrics.tx_bytes + res.svc_tx_bytes,
+            no_route_match=metrics.no_route_match + res.no_route,
+            overflow=metrics.overflow + res.held,
         )
         return EngineState(rstate, pool, state.cache, metrics, key)
 

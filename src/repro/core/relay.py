@@ -153,7 +153,8 @@ def sharded_apply(x, idx, weights, n_dest: int, capacity: int, axis: str,
     x: (N_loc, D) local rows; idx: (N_loc,) global destination ids.
     Returns (out (N_loc,D), meta).
     """
-    M = jax.lax.axis_size(axis)
+    from repro.compat import axis_size
+    M = axis_size(axis)
     E_loc = n_dest // M
     # local dispatch into per-destination pools with per-source capacity
     buf, meta = relay_dispatch(x, idx, n_dest, capacity)       # (E, C, D)

@@ -1,0 +1,21 @@
+"""Backend-aware execution defaults shared by every Pallas kernel.
+
+Off-TPU (CPU CI, local runs) the kernels execute through the Pallas
+interpreter — bit-accurate against the BlockSpec pipeline; on a real TPU
+backend they lower to Mosaic.  Callers pass ``interpret=None`` to get the
+auto-selected mode, or force a bool explicitly (tests, debugging).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True when the default backend cannot compile Mosaic kernels."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None → backend auto-selection; a bool is passed through untouched."""
+    return default_interpret() if interpret is None else bool(interpret)

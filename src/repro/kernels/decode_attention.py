@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -64,7 +66,8 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
-                     scale: float | None = None, interpret: bool = True):
+                     scale: float | None = None,
+                     interpret: bool | None = None):
     """q: (B, H, hd); k/v_cache: (B, S, K, hd); lengths: (B,) — new token sits
     at position ``lengths[b]`` (already written into the cache).
 
@@ -100,6 +103,6 @@ def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512,
             pltpu.VMEM((G,), jnp.float32),
             pltpu.VMEM((G, hd), jnp.float32),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(lens, qp, kt, vt)
     return out.reshape(B, K * G, hd)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -75,7 +77,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_k: int = 128, scale: float | None = None,
-                    interpret: bool = True):
+                    interpret: bool | None = None):
     """q: (B, S, H, hd); k/v: (B, S, K, hd) with H = K·G.  → (B, S, H, hd).
 
     VMEM working set per program:
@@ -115,6 +117,6 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
             pltpu.VMEM((block_q,), jnp.float32),       # running denom
             pltpu.VMEM((block_q, hd), jnp.float32),    # output accumulator
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qt, kt, vt)
     return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,8 +1,9 @@
 """jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (the kernels execute their bodies in
-Python through the Pallas interpreter — bit-accurate against the BlockSpec
-pipeline), and to False on real TPU backends where they lower to Mosaic.
+Backend selection is shared (``kernels.backend``): every kernel defaults to
+``interpret=None``, which the wrapper resolves to the Pallas interpreter
+off-TPU (bit-accurate against the BlockSpec pipeline) and to a real Mosaic
+compile on TPU backends.
 """
 
 from __future__ import annotations
@@ -14,40 +15,40 @@ import jax
 from repro.kernels import (decode_attention as _da, flash_attention as _fa,
                            relay_dispatch as _rd, route_match as _rm,
                            ssd_scan as _ss)
-
-
-def _default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.backend import default_interpret  # re-export  # noqa: F401
+from repro.kernels.route_match import AdmitResult  # re-export  # noqa: F401
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
 def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
                     block_k: int = 128):
     return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
-                               block_k=block_k,
-                               interpret=_default_interpret())
+                               block_k=block_k)
 
 
 @partial(jax.jit, static_argnames=("block_k",))
 def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 512):
-    return _da.decode_attention(q, k_cache, v_cache, lengths,
-                                block_k=block_k,
-                                interpret=_default_interpret())
+    return _da.decode_attention(q, k_cache, v_cache, lengths, block_k=block_k)
 
 
 @partial(jax.jit, static_argnames=("chunk",))
 def ssd_scan(xdt, a_log, Bm, Cm, *, chunk: int = 128):
-    return _ss.ssd_scan(xdt, a_log, Bm, Cm, chunk=chunk,
-                        interpret=_default_interpret())
+    return _ss.ssd_scan(xdt, a_log, Bm, Cm, chunk=chunk)
 
 
 @partial(jax.jit, static_argnames=("block_r",))
 def route_match(svc, features, state, *, block_r: int = 256):
-    return _rm.route_match(svc, features, state, block_r=block_r,
-                           interpret=_default_interpret())
+    return _rm.route_match(svc, features, state, block_r=block_r)
+
+
+@partial(jax.jit, static_argnames=("block_r",))
+def admit(req_id, svc, features, msg_bytes, state, free_mask, rnd, gumbel, *,
+          block_r: int = 256) -> AdmitResult:
+    """Fused admission datapath: match → balance → slot-allocate → metrics."""
+    return _rm.admit(req_id, svc, features, msg_bytes, state, free_mask,
+                     rnd, gumbel, block_r=block_r)
 
 
 @partial(jax.jit, static_argnames=("n_dest", "block_n"))
 def relay_slots(idx, n_dest: int, *, block_n: int = 1024):
-    return _rd.relay_slots(idx, n_dest, block_n=block_n,
-                           interpret=_default_interpret())
+    return _rd.relay_slots(idx, n_dest, block_n=block_n)

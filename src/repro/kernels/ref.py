@@ -86,3 +86,130 @@ def route_match_ref(svc, features, state):
 def relay_slots_ref(idx, n_dest: int):
     from repro.core import relay
     return relay.positions_sort(idx, n_dest)
+
+
+def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
+              gumbel):
+    """Sequential per-request reference for the fused admit kernel.
+
+    Processes the batch in arrival order with *live* counters: every
+    routable request advances its cluster's rr cursor and bumps its chosen
+    endpoint's load immediately (the next request sees it); requests that
+    find no free pool slot are held and release their counter at the end of
+    the batch.  Bit-exact contract with ``route_match.admit``.
+    """
+    import numpy as np
+
+    from repro.core.routing_table import (MAX_EPS_PER_CLUSTER,
+                                          MAX_RULES_PER_SVC,
+                                          POLICY_LEAST_REQUEST,
+                                          POLICY_RANDOM, POLICY_WEIGHTED,
+                                          WILDCARD)
+    from repro.kernels.route_match import BIG, AdmitResult
+
+    rid = np.asarray(req_id, np.int64)
+    feats = np.asarray(features, np.int64)
+    mb = np.asarray(msg_bytes, np.int64)
+    rndv = np.asarray(rnd, np.int64)
+    rs = np.asarray(state.svc_rule_start, np.int64)
+    rc = np.asarray(state.svc_rule_count, np.int64)
+    rf = np.asarray(state.rule_field, np.int64)
+    rv = np.asarray(state.rule_value, np.int64)
+    rcl = np.asarray(state.rule_cluster, np.int64)
+    cs = np.asarray(state.cluster_ep_start, np.int64)
+    cc = np.asarray(state.cluster_ep_count, np.int64)
+    cp = np.asarray(state.cluster_policy, np.int64)
+    einst = np.asarray(state.ep_instance, np.int64)
+    free = np.asarray(free_mask).astype(bool)
+    R = rid.shape[0]
+    S, MR, E = rs.shape[0], rf.shape[0], einst.shape[0]
+    I = free.shape[0]
+    WE = MAX_EPS_PER_CLUSTER
+    sv = np.clip(np.asarray(svc, np.int64), 0, S - 1)
+
+    # weighted offsets are state-independent: use the kernel's exact float
+    # expression (via jnp) so f32 rounding and argmax tie-breaks agree
+    cl0 = np.zeros((R,), np.int64)
+    for r in range(R):
+        if rid[r] < 0:
+            continue
+        start, count = rs[sv[r]], rc[sv[r]]
+        for t in range(MAX_RULES_PER_SVC):
+            if t >= count:
+                continue
+            ix = min(max(start + t, 0), MR - 1)
+            if rv[ix] == WILDCARD or rv[ix] == feats[r, rf[ix]]:
+                cl0[r] = rcl[ix] + 1        # +1: 0 stays "no match"
+                break
+    clm = np.maximum(cl0 - 1, 0)
+    win = jnp.arange(WE, dtype=jnp.int32)
+    eidx_all = jnp.clip(jnp.asarray(cs[clm], jnp.int32)[:, None]
+                        + win[None, :], 0, E - 1)
+    eok_all = win[None, :] < jnp.asarray(cc[clm], jnp.int32)[:, None]
+    w = jnp.where(eok_all, state.ep_weight[eidx_all], 0.0)
+    wt_off = np.asarray(jnp.argmax(
+        jnp.where(eok_all, jnp.log(w + 1e-9) + jnp.asarray(gumbel),
+                  -jnp.inf), axis=1), np.int64)
+
+    loads = np.asarray(state.ep_load, np.int64).copy()
+    cur = np.asarray(state.rr_cursor, np.int64).copy()
+    icnt = np.zeros((I,), np.int64)
+    cluster = np.full((R,), -1, np.int64)
+    ep_out = np.full((R,), -1, np.int64)
+    inst_out = np.full((R,), -1, np.int64)
+    slot_out = np.full((R,), -1, np.int64)
+    ok_out = np.zeros((R,), np.int64)
+    sreq = np.zeros((S,), np.int64)
+    stx = np.zeros((S,), np.int64)
+    no_route = held_n = 0
+    held_eps: list = []
+
+    for r in range(R):
+        if rid[r] < 0:
+            continue
+        if cl0[r] == 0:
+            no_route += 1
+            continue
+        c = cl0[r] - 1
+        cluster[r] = c
+        count = cc[c]
+        if count <= 0:
+            continue                        # empty cluster: unroutable
+        pol = cp[c]
+        if pol == POLICY_RANDOM:
+            off = rndv[r] % count
+        elif pol == POLICY_LEAST_REQUEST:
+            wl = [loads[min(max(cs[c] + j, 0), E - 1)] if j < count else BIG
+                  for j in range(WE)]
+            off = int(np.argmin(wl))
+        elif pol == POLICY_WEIGHTED:
+            off = wt_off[r]
+        else:                               # POLICY_RR and unknown → rr
+            off = cur[c] % count
+        ep = min(max(cs[c] + off, 0), E - 1)
+        cur[c] = (cur[c] + 1) % count
+        loads[ep] += 1
+        ep_out[r] = ep
+        inst = einst[ep]
+        inst_out[r] = inst
+        ic = min(max(inst, 0), I - 1)
+        rank = icnt[ic]
+        icnt[ic] += 1
+        free_slots = np.flatnonzero(free[ic])
+        if rank < free_slots.shape[0]:
+            ok_out[r] = 1
+            slot_out[r] = free_slots[rank]
+            sreq[sv[r]] += 1
+            stx[sv[r]] += mb[r]
+        else:
+            held_n += 1
+            held_eps.append(ep)
+    for e in held_eps:                      # batch-end release of held
+        loads[e] -= 1
+    cur = cur % np.maximum(cc, 1)           # kernel reduces every cursor
+
+    i32 = lambda a: np.asarray(a, np.int32)
+    return AdmitResult(i32(cluster), i32(ep_out), i32(inst_out),
+                       i32(slot_out), i32(ok_out), i32(loads), i32(cur),
+                       i32(sreq), i32(stx), np.int32(no_route),
+                       np.int32(held_n))

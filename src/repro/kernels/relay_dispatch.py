@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _relay_kernel(idx_ref, slot_ref, load_ref, counts_ref, *, n_dest: int,
                   block_n: int):
@@ -47,7 +49,7 @@ def _relay_kernel(idx_ref, slot_ref, load_ref, counts_ref, *, n_dest: int,
 
 
 def relay_slots(idx, n_dest: int, *, block_n: int = 1024,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """idx: (N,) int32 → (slot (N,), load (E,)).  Oracle: relay.positions_*."""
     N = idx.shape[0]
     block_n = min(block_n, N)
@@ -62,6 +64,6 @@ def relay_slots(idx, n_dest: int, *, block_n: int = 1024,
         out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32),
                    jax.ShapeDtypeStruct((n_dest,), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((n_dest,), jnp.int32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(idx.astype(jnp.int32))
     return slot, load

@@ -1,44 +1,68 @@
-"""XLB datapath hot loop — rule match + least-request select — as one fused
-Pallas kernel (the paper's filter_manager → route_manager → load_balancer
-tail-call chain, Figure 4).
+"""XLB datapath hot loop as fused Pallas kernels (the paper's filter_manager
+→ route_manager → load_balancer tail-call chain, Figure 4).
 
-The eBPF version walks ROUTE_MAX_NUM rules per request and scans endpoint
-load counters; the TPU version processes a (BR) tile of requests against the
-full (bounded) rule window and endpoint window in VMEM with masked vector
-ops — the verifier's static bounds become the static block shapes.
+Two entry points:
 
-Per request r:
-  1. rules[svc_start[svc_r] .. +count]: first i where field matches → cluster
-  2. endpoints[cluster_start .. +count]: argmin load (least-request)
-Outputs: cluster id (-1 = no_route_match), endpoint id (-1 = unroutable).
+``route_match``
+  rule match + least-request endpoint scan only (the original kernel, kept
+  as the small building block and for the kernel test sweeps).
 
-Grid: (R / BR,).  Tables are small (≤ 64×… int32) and stay VMEM-resident
-across the whole grid — they are the eBPF maps pinned in kernel memory.
+``admit``
+  the full in-kernel admission datapath: rule match → per-cluster policy
+  dispatch (round-robin / random / least-request / weighted) → endpoint
+  selection with *sequentially consistent* load counters → free-slot
+  allocation → fused per-service metrics.  The mutable LB state (``ep_load``,
+  ``rr_cursor``, per-instance slot cursors) is carried in VMEM scratch across
+  the sequential grid — the same running-counter trick as
+  ``kernels/relay_dispatch.py`` — so a request admitted in tile ``i`` is
+  visible to every decision in tile ``i+1``, exactly like the eBPF map a
+  per-packet program updates in place.
+
+Sequential least-request without a per-request scan: request ``r`` with
+in-tile cluster rank ``ρ`` takes the endpoint owning the ``ρ``-th smallest
+"ticket" of the multiset ``{load_j + t : t ≥ 0}`` ordered by (value, j) —
+the water-filling closed form of "argmin then increment" — found by a
+static-depth binary search over ticket values.  This replaces the three
+full-batch argsorts of the staged jnp path with O(B·W·log B) vector ops.
+
+Grid: (R / BR,) sequential.  Tables are small (≤ 512 int32) and stay
+VMEM-resident across the whole grid — the eBPF maps pinned in kernel memory.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
 from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, MAX_RULES_PER_SVC,
-                                      WILDCARD)
+                                      POLICY_LEAST_REQUEST, POLICY_RANDOM,
+                                      POLICY_RR, POLICY_WEIGHTED, WILDCARD)
 
 BIG = 2**30        # python literal — a jnp scalar here would be captured as
                    # a constant by the Pallas kernel (verifier-rejected)
 
 
-def _route_kernel(svc_ref, feat_ref, rs_ref, rc_ref, rf_ref, rv_ref,
-                  rcl_ref, cs_ref, cc_ref, load_ref, cluster_ref, ep_ref, *,
-                  block_r: int):
-    svc = svc_ref[...]                                 # (BR,)
-    feats = feat_ref[...]                              # (BR, F)
-    W = MAX_RULES_PER_SVC
+def _table_spec(shape: tuple) -> pl.BlockSpec:
+    """Whole-array BlockSpec for a VMEM-resident table: every grid step maps
+    block (0, ..., 0) with rank matching the table (a closure per table, so a
+    2-D table can never silently bind a 1-D index map)."""
 
+    def index_map(r):
+        return (0,) * len(shape)
+
+    return pl.BlockSpec(shape, index_map)
+
+
+def _match_stage(svc, feats, rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref, *,
+                 block_r: int):
+    """Vectorised bounded rule-chain walk: first matching rule → cluster."""
+    W = MAX_RULES_PER_SVC
     start = rs_ref[svc]                                # (BR,)
     count = rc_ref[svc]
     win = jax.lax.broadcasted_iota(jnp.int32, (block_r, W), 1)
@@ -51,7 +75,20 @@ def _route_kernel(svc_ref, feat_ref, rs_ref, rc_ref, rf_ref, rv_ref,
     any_hit = hit.any(axis=1)
     first = jnp.argmax(hit, axis=1)
     rix = jnp.take_along_axis(idx, first[:, None], axis=1)[:, 0]
-    cluster = jnp.where(any_hit, rcl_ref[rix], -1)
+    return jnp.where(any_hit, rcl_ref[rix], -1)
+
+
+# --------------------------------------------------------------------------- #
+# route_match: match + least-request scan (stateless building block)
+# --------------------------------------------------------------------------- #
+
+
+def _route_kernel(svc_ref, feat_ref, rs_ref, rc_ref, rf_ref, rv_ref,
+                  rcl_ref, cs_ref, cc_ref, load_ref, cluster_ref, ep_ref, *,
+                  block_r: int):
+    svc = svc_ref[...]                                 # (BR,)
+    cluster = _match_stage(svc, feat_ref[...], rs_ref, rc_ref, rf_ref,
+                           rv_ref, rcl_ref, block_r=block_r)
     cluster_ref[...] = cluster
 
     # least-request over the endpoint window (paper: full scan; small N)
@@ -69,7 +106,7 @@ def _route_kernel(svc_ref, feat_ref, rs_ref, rc_ref, rf_ref, rv_ref,
 
 
 def route_match(svc, features, state, *, block_r: int = 256,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """svc: (R,) i32; features: (R, F) i32; state: RoutingState.
 
     Returns (cluster (R,), endpoint (R,)) — least-request selection.
@@ -81,18 +118,259 @@ def route_match(svc, features, state, *, block_r: int = 256,
     tables = [state.svc_rule_start, state.svc_rule_count, state.rule_field,
               state.rule_value, state.rule_cluster, state.cluster_ep_start,
               state.cluster_ep_count, state.ep_load]
-    table_specs = [
-        pl.BlockSpec(t.shape, lambda r, _n=len(t.shape): (0,) * _n)
-        for t in tables]
     cluster, ep = pl.pallas_call(
         functools.partial(_route_kernel, block_r=block_r),
         grid=grid,
         in_specs=[pl.BlockSpec((block_r,), lambda r: (r,)),
-                  pl.BlockSpec((block_r, F), lambda r: (r, 0))] + table_specs,
+                  pl.BlockSpec((block_r, F), lambda r: (r, 0))]
+                 + [_table_spec(t.shape) for t in tables],
         out_specs=[pl.BlockSpec((block_r,), lambda r: (r,)),
                    pl.BlockSpec((block_r,), lambda r: (r,))],
         out_shape=[jax.ShapeDtypeStruct((R,), jnp.int32),
                    jax.ShapeDtypeStruct((R,), jnp.int32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(svc, features, *tables)
     return cluster, ep
+
+
+# --------------------------------------------------------------------------- #
+# admit: the fused route → balance → slot-allocate datapath
+# --------------------------------------------------------------------------- #
+
+
+class AdmitResult(NamedTuple):
+    """Everything ``Engine.admit`` needs from one fused kernel launch."""
+
+    cluster: jax.Array       # (R,) i32 destination cluster (-1 = no match)
+    endpoint: jax.Array      # (R,) i32 global endpoint (-1 = unroutable)
+    instance: jax.Array      # (R,) i32 instance lane (-1 = unroutable)
+    slot: jax.Array          # (R,) i32 pool slot (-1 = held / unroutable)
+    ok: jax.Array            # (R,) i32 1 = admitted into a pool slot
+    ep_load: jax.Array       # (E,) i32 updated outstanding-request counters
+    rr_cursor: jax.Array     # (CL,) i32 updated round-robin cursors
+    svc_requests: jax.Array  # (S,) i32 admitted requests per service
+    svc_tx_bytes: jax.Array  # (S,) i32 admitted payload bytes per service
+    no_route: jax.Array      # () i32 valid requests with no rule match
+    held: jax.Array          # () i32 routable requests without a free slot
+
+
+def _admit_kernel(rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref,
+                  rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref,
+                  cs_ref, cc_ref, cp_ref, einst_ref, ew_ref,
+                  load0_ref, cur0_ref, free_ref,
+                  cluster_ref, ep_ref, inst_ref, slot_ref, ok_ref,
+                  loadout_ref, curout_ref, sreq_ref, stx_ref, cnt_ref,
+                  load_s, held_s, cur_s, icnt_s, sreq_s, stx_s, cnt_s, *,
+                  block_r: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        load_s[...] = load0_ref[...]
+        held_s[...] = jnp.zeros_like(held_s)
+        cur_s[...] = cur0_ref[...]
+        icnt_s[...] = jnp.zeros_like(icnt_s)
+        sreq_s[...] = jnp.zeros_like(sreq_s)
+        stx_s[...] = jnp.zeros_like(stx_s)
+        cnt_s[...] = jnp.zeros_like(cnt_s)
+
+    S = rs_ref.shape[0]
+    CL = cc_ref.shape[0]
+    E = load0_ref.shape[0]
+    I, C = free_ref.shape
+    WE = MAX_EPS_PER_CLUSTER
+
+    # ---- stage 1: content match (vectorised rule-chain walk) ---------- #
+    valid = rid_ref[...] >= 0
+    svc = jnp.clip(svc_ref[...], 0, S - 1)
+    cluster = _match_stage(svc, feat_ref[...], rs_ref, rc_ref, rf_ref,
+                           rv_ref, rcl_ref, block_r=block_r)
+    cluster = jnp.where(valid, cluster, -1)
+
+    cl = jnp.maximum(cluster, 0)
+    count = cc_ref[cl]                                 # (BR,)
+    estart = cs_ref[cl]
+    policy = cp_ref[cl]
+    routable = valid & (cluster >= 0) & (count > 0)
+    count1 = jnp.maximum(count, 1)
+
+    ewin = jax.lax.broadcasted_iota(jnp.int32, (block_r, WE), 1)
+    eidx = jnp.clip(estart[:, None] + ewin, 0, E - 1)  # (BR, WE)
+    eok = ewin < count[:, None]
+
+    # in-tile arrival rank within each cluster (counting-sort one-hot
+    # cumsum, cf. relay_dispatch) — only routable requests consume ranks
+    oh_c = (routable[:, None] & (cl[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_r, CL), 1))).astype(jnp.int32)
+    rank_c = jnp.sum((jnp.cumsum(oh_c, axis=0) - oh_c) * oh_c, axis=1)
+
+    # ---- stage 2: policy dispatch ------------------------------------- #
+    # round-robin: carried cursor + arrival rank ≡ cursor++ per request
+    rr_off = (cur_s[...][cl] + rank_c) % count1
+    # random: host-precomputed draw (keeps the host PRNG stream)
+    rnd_off = rnd_ref[...] % count1
+    # weighted: Gumbel-max over log-weights (noise precomputed on host)
+    w = jnp.where(eok, ew_ref[eidx], 0.0)
+    wt_off = jnp.argmax(jnp.where(eok, jnp.log(w + 1e-9) + gum_ref[...],
+                                  -jnp.inf), axis=1).astype(jnp.int32)
+    # least-request, sequentially consistent: request with cluster rank ρ
+    # owns the ρ-th smallest ticket of {load_j + t : t ≥ 0} ordered by
+    # (value, j) — binary-search the ticket value v, then take the m-th
+    # endpoint among those with load_j <= v
+    load = jnp.where(eok, load_s[...][eidx], BIG)      # (BR, WE)
+    lo = jnp.min(load, axis=1)                         # (BR,)
+    hi = lo + rank_c
+    tgt = rank_c + 1
+    for _ in range(max(block_r, 2).bit_length()):
+        mid = (lo + hi) // 2
+        n_mid = jnp.sum(jnp.maximum(mid[:, None] - load + 1, 0), axis=1)
+        ge = n_mid >= tgt
+        hi = jnp.where(ge, mid, hi)
+        lo = jnp.where(ge, lo, mid + 1)
+    v = lo
+    n_prev = jnp.sum(jnp.maximum(v[:, None] - load, 0), axis=1)
+    m = rank_c - n_prev                                # rank among value-v ties
+    elig = (load <= v[:, None])
+    ec = jnp.cumsum(elig.astype(jnp.int32), axis=1)
+    lr_off = jnp.argmax(elig & (ec == (m + 1)[:, None]),
+                        axis=1).astype(jnp.int32)
+
+    off = jnp.select(
+        [policy == POLICY_RR, policy == POLICY_RANDOM,
+         policy == POLICY_LEAST_REQUEST, policy == POLICY_WEIGHTED],
+        [rr_off, rnd_off, lr_off, wt_off], rr_off).astype(jnp.int32)
+    ep = jnp.take_along_axis(eidx, off[:, None], axis=1)[:, 0]
+    ep = jnp.where(routable, ep, -1)
+    epc = jnp.maximum(ep, 0)
+    inst = jnp.where(routable, einst_ref[epc], -1)
+    instc = jnp.clip(inst, 0, I - 1)
+
+    # ---- stage 3: free-slot allocation (counting-sort fold) ----------- #
+    oh_i = (routable[:, None] & (instc[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_r, I), 1))).astype(jnp.int32)
+    rank_i = (icnt_s[...][instc]
+              + jnp.sum((jnp.cumsum(oh_i, axis=0) - oh_i) * oh_i, axis=1))
+    rows = free_ref[...][instc]                        # (BR, C) free=1
+    prefix = jnp.cumsum(rows, axis=1)
+    n_free = prefix[:, C - 1]
+    ok = routable & (rank_i < n_free)
+    hit = (rows > 0) & (prefix == (rank_i + 1)[:, None])
+    slot = jnp.where(ok, jnp.argmax(hit, axis=1).astype(jnp.int32), -1)
+    held = routable & ~ok
+
+    # ---- per-request outputs ------------------------------------------ #
+    cluster_ref[...] = cluster
+    ep_ref[...] = ep
+    inst_ref[...] = inst
+    slot_ref[...] = slot
+    ok_ref[...] = ok.astype(jnp.int32)
+
+    # ---- carried LB state + fused metrics ----------------------------- #
+    oh_e = (routable[:, None] & (epc[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_r, E), 1))).astype(jnp.int32)
+    load_s[...] = load_s[...] + jnp.sum(oh_e, axis=0)
+    held_s[...] = held_s[...] + jnp.sum(
+        oh_e * held.astype(jnp.int32)[:, None], axis=0)
+    cur_s[...] = (cur_s[...] + jnp.sum(oh_c, axis=0)) % jnp.maximum(
+        cc_ref[...], 1)
+    icnt_s[...] = icnt_s[...] + jnp.sum(oh_i, axis=0)
+    oh_s = (ok[:, None] & (svc[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_r, S), 1))).astype(jnp.int32)
+    sreq_s[...] = sreq_s[...] + jnp.sum(oh_s, axis=0)
+    stx_s[...] = stx_s[...] + jnp.sum(oh_s * bytes_ref[...][:, None], axis=0)
+    cnt_s[...] = cnt_s[...] + jnp.stack(
+        [jnp.sum((valid & (cluster < 0)).astype(jnp.int32)),
+         jnp.sum(held.astype(jnp.int32))])
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _emit():
+        # held requests release their counter (connection close of the
+        # paper's hold queue) — folded into the final emit
+        loadout_ref[...] = load_s[...] - held_s[...]
+        curout_ref[...] = cur_s[...]
+        sreq_ref[...] = sreq_s[...]
+        stx_ref[...] = stx_s[...]
+        cnt_ref[...] = cnt_s[...]
+
+
+def admit(req_id, svc, features, msg_bytes, state, free_mask, rnd, gumbel, *,
+          block_r: int = 256, interpret: bool | None = None) -> AdmitResult:
+    """Fused admission datapath over a request batch.
+
+    req_id/svc/msg_bytes/rnd: (R,) i32 (req_id < 0 = padding; rnd = host
+    PRNG draws for the random policy); features: (R, F) i32;
+    gumbel: (R, MAX_EPS_PER_CLUSTER) f32 noise for the weighted policy;
+    state: RoutingState; free_mask: (I, C) — nonzero/True = free slot.
+
+    Sequential semantics (cross-checked bit-exactly against
+    ``kernels.ref.admit_ref``): requests are processed in arrival order;
+    every routable request advances its cluster's rr cursor and increments
+    its endpoint's load counter immediately; requests that find no free pool
+    slot are *held* and release their counter at the end of the batch.
+    """
+    R0, F = features.shape
+    if R0 == 0:                         # empty batch: nothing to admit
+        z = jnp.zeros((0,), jnp.int32)
+        zs = jnp.zeros_like(state.svc_rule_start)
+        return AdmitResult(
+            z, z, z, z, z, state.ep_load,
+            state.rr_cursor % jnp.maximum(state.cluster_ep_count, 1),
+            zs, zs, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+    block_r = min(block_r, R0)
+    # pad ragged batches with req_id=-1 rows (inert in-kernel: no counter
+    # or metric touches) and slice the per-request outputs back afterwards
+    R = -(-R0 // block_r) * block_r
+    if R != R0:
+        pad = R - R0
+        req_id = jnp.concatenate([req_id, jnp.full((pad,), -1, jnp.int32)])
+        svc = jnp.concatenate([svc, jnp.zeros((pad,), svc.dtype)])
+        features = jnp.concatenate(
+            [features, jnp.zeros((pad, F), features.dtype)])
+        msg_bytes = jnp.concatenate(
+            [msg_bytes, jnp.zeros((pad,), msg_bytes.dtype)])
+        rnd = jnp.concatenate([rnd, jnp.zeros((pad,), rnd.dtype)])
+        gumbel = jnp.concatenate(
+            [gumbel, jnp.zeros((pad, gumbel.shape[1]), gumbel.dtype)])
+    grid = (R // block_r,)
+    free_i32 = free_mask.astype(jnp.int32)
+    tables = [state.svc_rule_start, state.svc_rule_count, state.rule_field,
+              state.rule_value, state.rule_cluster, state.cluster_ep_start,
+              state.cluster_ep_count, state.cluster_policy,
+              state.ep_instance, state.ep_weight, state.ep_load,
+              state.rr_cursor, free_i32]
+    S = state.svc_rule_start.shape[0]
+    CL = state.cluster_ep_count.shape[0]
+    E = state.ep_load.shape[0]
+    I = free_mask.shape[0]
+    req = pl.BlockSpec((block_r,), lambda r: (r,))
+    o = pl.pallas_call(
+        functools.partial(_admit_kernel, block_r=block_r),
+        grid=grid,
+        in_specs=[req, req,
+                  pl.BlockSpec((block_r, F), lambda r: (r, 0)),
+                  req, req,
+                  pl.BlockSpec((block_r, MAX_EPS_PER_CLUSTER),
+                               lambda r: (r, 0))]
+                 + [_table_spec(t.shape) for t in tables],
+        out_specs=[req] * 5 + [_table_spec((E,)), _table_spec((CL,)),
+                               _table_spec((S,)), _table_spec((S,)),
+                               _table_spec((2,))],
+        out_shape=[jax.ShapeDtypeStruct((R,), jnp.int32)] * 5
+                  + [jax.ShapeDtypeStruct((E,), jnp.int32),
+                     jax.ShapeDtypeStruct((CL,), jnp.int32),
+                     jax.ShapeDtypeStruct((S,), jnp.int32),
+                     jax.ShapeDtypeStruct((S,), jnp.int32),
+                     jax.ShapeDtypeStruct((2,), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((E,), jnp.int32),
+                        pltpu.VMEM((E,), jnp.int32),
+                        pltpu.VMEM((CL,), jnp.int32),
+                        pltpu.VMEM((I,), jnp.int32),
+                        pltpu.VMEM((S,), jnp.int32),
+                        pltpu.VMEM((S,), jnp.int32),
+                        pltpu.VMEM((2,), jnp.int32)],
+        interpret=resolve_interpret(interpret),
+    )(req_id.astype(jnp.int32), svc.astype(jnp.int32), features,
+      msg_bytes.astype(jnp.int32), rnd.astype(jnp.int32),
+      gumbel.astype(jnp.float32), *tables)
+    return AdmitResult(o[0][:R0], o[1][:R0], o[2][:R0], o[3][:R0], o[4][:R0],
+                       o[5], o[6], o[7], o[8], o[9][0], o[9][1])

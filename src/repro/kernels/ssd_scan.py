@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
+
 
 def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, o_ref, h_ref, *, chunk: int):
     ci = pl.program_id(1)
@@ -66,7 +68,7 @@ def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, o_ref, h_ref, *, chunk: int):
 
 
 def ssd_scan(xdt, a_log, Bm, Cm, *, chunk: int = 128,
-             interpret: bool = True):
+             interpret: bool | None = None):
     """xdt: (B, S, nh, hd) (= dt⊙x); a_log: (B, S, nh); Bm/Cm: (B, S, nh, N).
 
     Returns y: (B, S, nh, hd).  VMEM per program at (Q=128, hd=64, N=128):
@@ -95,6 +97,6 @@ def ssd_scan(xdt, a_log, Bm, Cm, *, chunk: int = 128,
         out_specs=pl.BlockSpec((1, chunk, hd), lambda h, c: (h, c, 0)),
         out_shape=jax.ShapeDtypeStruct((B * nh, S, hd), xdt.dtype),
         scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(xt, at, bt, ct)
     return out.reshape(B, nh, S, hd).transpose(0, 2, 1, 3)

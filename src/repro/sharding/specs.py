@@ -54,7 +54,9 @@ def fit_spec(mesh: Mesh, shape: Sequence[int], prefs: Sequence[Sequence],
                 continue
             sz = axis_size(mesh, cand)
             if sz > 1 and dim % sz == 0:
-                chosen = cand
+                # unwrap 1-tuples: P("data") and P(("data",)) shard the same
+                # but old PartitionSpec compares them unequal
+                chosen = axes[0] if len(axes) == 1 else cand
                 used.update(axes)
                 break
         out.append(chosen)

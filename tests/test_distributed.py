@@ -13,7 +13,7 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config, smoke_config
 from repro.models import moe as moe_mod
@@ -21,8 +21,8 @@ from repro.models import model as M
 from repro.models.transformer import RunCtx
 from repro.sharding.specs import MeshSpec
 
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(AxisType.Auto, AxisType.Auto))
+from repro.compat import make_mesh
+mesh = make_mesh((2, 2), ("data", "model"))
 ms = MeshSpec(mesh)
 
 # --- 1) EP relay (shard_map + all_to_all) == local scatter dispatch ------- #

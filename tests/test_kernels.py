@@ -6,7 +6,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST, Rule,
+from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, Cluster,
+                                      POLICY_LEAST_REQUEST, POLICY_RANDOM,
+                                      POLICY_RR, POLICY_WEIGHTED, Rule,
                                       ServiceConfig, build_state)
 
 TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
@@ -143,6 +145,183 @@ def test_route_match(R):
     cl_ref, ep_ref = ref.route_match_ref(svc, feats, st)
     np.testing.assert_array_equal(np.asarray(cluster), np.asarray(cl_ref))
     np.testing.assert_array_equal(np.asarray(ep), np.asarray(ep_ref))
+
+
+# --------------------------------------------------------------------------- #
+# fused admit kernel (XLB full admission datapath)
+# --------------------------------------------------------------------------- #
+
+
+def _admit_state(seed: int = 9, empty_cluster: bool = False):
+    """4 services × 2 clusters covering all four LB policies; optionally the
+    wildcard cluster of svc3 has no endpoints (ecount == 0)."""
+    from repro.core.routing_table import fnv1a
+    pols = [POLICY_RR, POLICY_RANDOM, POLICY_LEAST_REQUEST, POLICY_WEIGHTED]
+    # svc1/svc2 have no wildcard fallback → field-0 misses are NO_ROUTE
+    services = [ServiceConfig(f"svc{i}", rules=[
+        Rule(field=0, value="v2", cluster=f"cl{i}a"),
+    ] + ([Rule(field=1, value=None, cluster=f"cl{i}b")]
+         if i in (0, 3) else [])) for i in range(4)]
+    clusters = []
+    for i in range(4):
+        b_eps = [] if (empty_cluster and i == 3) else [(i * 2 + 2) % 8,
+                                                       (i * 2 + 3) % 8,
+                                                       (i * 2) % 8]
+        clusters += [
+            Cluster(f"cl{i}a", endpoints=[(i * 2) % 8, (i * 2 + 1) % 8],
+                    policy=pols[i]),
+            Cluster(f"cl{i}b", endpoints=b_eps, policy=pols[(i + 1) % 4],
+                    weights=[1.0, 6.0, 0.25][:len(b_eps)] or None)]
+    st, ids = build_state(services, clusters)
+    load = jax.random.randint(jax.random.PRNGKey(seed), st.ep_load.shape,
+                              0, 7)
+    return st._replace(ep_load=load.astype(jnp.int32)), ids, fnv1a
+
+
+def _admit_batch(R: int, seed: int, match_p: float = 0.6,
+                 valid_p: float = 0.85):
+    from repro.core.routing_table import fnv1a
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    svc = jax.random.randint(ks[0], (R,), 0, 4)
+    feats = jnp.zeros((R, 8), jnp.int32)
+    hit = jax.random.bernoulli(ks[1], match_p, (R,))
+    feats = feats.at[:, 0].set(jnp.where(hit, fnv1a("v2"), fnv1a("v9")))
+    # svc3's second rule is field-1 wildcard → always matches; knock out
+    # some rows entirely by mismatching field 0 AND removing svc-3 rows
+    rid = jnp.where(jax.random.bernoulli(ks[2], valid_p, (R,)),
+                    jnp.arange(R), -1).astype(jnp.int32)
+    msgb = jax.random.randint(ks[3], (R,), 1, 500)
+    rnd = jax.random.randint(ks[4], (R,), 0, 1 << 30, dtype=jnp.int32)
+    gum = jax.random.gumbel(ks[5], (R, MAX_EPS_PER_CLUSTER), jnp.float32)
+    return rid, svc, feats, msgb, rnd, gum
+
+
+def _assert_admit_matches(got, want):
+    for name in got._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                      np.asarray(getattr(want, name)),
+                                      err_msg=f"admit field {name!r}")
+
+
+@pytest.mark.parametrize("R,block_r", [(64, 64), (128, 32), (256, 64)])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_admit_matches_sequential_oracle(R, block_r, seed):
+    """Property cross-check: all four policies, NO_ROUTE rows, padding rows,
+    partially occupied pools (held requests), multi-tile scratch carry."""
+    st, _, _ = _admit_state(seed=seed + 10)
+    rid, svc, feats, msgb, rnd, gum = _admit_batch(R, seed)
+    I, C = 8, 4                                # small pool → forces held
+    free = jax.random.bernoulli(jax.random.PRNGKey(seed + 20), 0.5, (I, C))
+    got = ops.admit(rid, svc, feats, msgb, st, free, rnd, gum,
+                    block_r=block_r)
+    want = ref.admit_ref(rid, svc, feats, msgb, st, free, rnd, gum)
+    _assert_admit_matches(got, want)
+    # the batch actually exercised the interesting paths
+    assert int(np.asarray(got.no_route)) > 0
+    assert int(np.asarray(got.held)) > 0
+    assert int(np.asarray(got.ok).sum()) > 0
+
+
+def test_admit_ragged_batch_padding():
+    """R not a multiple of block_r: the wrapper pads with req_id=-1 rows and
+    slices outputs back — padding must stay inert (counters, metrics)."""
+    st, _, _ = _admit_state(seed=3)
+    R = 40                                     # 40 % 16 != 0
+    rid, svc, feats, msgb, rnd, gum = _admit_batch(R, seed=7)
+    free = jnp.ones((8, 4), bool)
+    got = ops.admit(rid, svc, feats, msgb, st, free, rnd, gum, block_r=16)
+    want = ref.admit_ref(rid, svc, feats, msgb, st, free, rnd, gum)
+    _assert_admit_matches(got, want)
+    assert got.cluster.shape == (R,)
+
+
+def test_admit_empty_batch():
+    """R == 0 short-circuits: no kernel launch, state passes through."""
+    st, _, _ = _admit_state(seed=4)
+    z = jnp.zeros((0,), jnp.int32)
+    got = ops.admit(z, z, jnp.zeros((0, 8), jnp.int32), z, st,
+                    jnp.ones((8, 4), bool), z,
+                    jnp.zeros((0, MAX_EPS_PER_CLUSTER), jnp.float32))
+    want = ref.admit_ref(z, z, jnp.zeros((0, 8), jnp.int32), z, st,
+                         jnp.ones((8, 4), bool), z,
+                         jnp.zeros((0, MAX_EPS_PER_CLUSTER), jnp.float32))
+    _assert_admit_matches(got, want)
+    np.testing.assert_array_equal(np.asarray(got.ep_load),
+                                  np.asarray(st.ep_load))
+
+
+def test_admit_empty_cluster_unroutable():
+    """ecount == 0 clusters yield endpoint/instance/slot = -1, no held or
+    no_route counts, and untouched load counters."""
+    st, ids, fnv1a = _admit_state(empty_cluster=True)
+    R = 64
+    svc = jnp.full((R,), 3, jnp.int32)         # svc3 → wildcard → empty cl3b
+    feats = jnp.zeros((R, 8), jnp.int32)       # field-0 miss → rule 2
+    feats = feats.at[:, 0].set(fnv1a("nope"))
+    rid = jnp.arange(R, dtype=jnp.int32)
+    msgb = jnp.full((R,), 10, jnp.int32)
+    rnd = jnp.zeros((R,), jnp.int32)
+    gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
+    free = jnp.ones((8, 4), bool)
+    got = ops.admit(rid, svc, feats, msgb, st, free, rnd, gum)
+    want = ref.admit_ref(rid, svc, feats, msgb, st, free, rnd, gum)
+    _assert_admit_matches(got, want)
+    assert np.all(np.asarray(got.cluster) == ids["clusters"]["cl3b"])
+    assert np.all(np.asarray(got.endpoint) == -1)
+    assert np.all(np.asarray(got.instance) == -1)
+    assert np.all(np.asarray(got.ok) == 0)
+    assert int(np.asarray(got.no_route)) == 0
+    assert int(np.asarray(got.held)) == 0
+    np.testing.assert_array_equal(np.asarray(got.ep_load),
+                                  np.asarray(st.ep_load))
+
+
+def test_admit_sequential_least_request_spreads():
+    """A burst at one least-request cluster must water-fill across its
+    endpoints (the argsort-emulation bug class: whole batch → one endpoint)."""
+    services = [ServiceConfig("s", rules=[Rule(0, None, "pool")])]
+    clusters = [Cluster("pool", endpoints=[0, 1, 2],
+                        policy=POLICY_LEAST_REQUEST)]
+    st, _ = build_state(services, clusters)
+    st = st._replace(ep_load=st.ep_load.at[0].set(0).at[1].set(4).at[2].set(9))
+    R = 32
+    rid = jnp.arange(R, dtype=jnp.int32)
+    svc = jnp.zeros((R,), jnp.int32)
+    feats = jnp.zeros((R, 8), jnp.int32)
+    z = jnp.zeros((R,), jnp.int32)
+    gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
+    free = jnp.ones((3, 32), bool)
+    got = ops.admit(rid, svc, feats, z + 1, st, free, z, gum, block_r=8)
+    want = ref.admit_ref(rid, svc, feats, z + 1, st, free, z, gum)
+    _assert_admit_matches(got, want)
+    # water-filling: loads 0/4/9 + 32 requests → final loads equalise
+    final = np.asarray(got.ep_load)[:3]
+    assert final.max() - final.min() <= 1
+    assert final.sum() == 13 + R
+
+
+def test_admit_table_blockspec_binds_2d():
+    """Index-map regression: every table BlockSpec must emit one block index
+    per dim ((0,) * ndim).  The (I, C) free_mask is the 2-D table — a 1-D
+    index map would mis-bind rows and corrupt slots on instance > 0."""
+    from repro.kernels.route_match import _table_spec
+    assert _table_spec((4,)).index_map(7) == (0,)
+    assert _table_spec((4, 5)).index_map(7) == (0, 0)
+    assert _table_spec((2, 3, 4)).index_map(1) == (0, 0, 0)
+    # end-to-end: all traffic to instance 2; its only free slots are 1 and 3
+    services = [ServiceConfig("s", rules=[Rule(0, None, "pool")])]
+    clusters = [Cluster("pool", endpoints=[2], policy=POLICY_RR)]
+    st, _ = build_state(services, clusters)
+    R = 8
+    rid = jnp.arange(R, dtype=jnp.int32)
+    z = jnp.zeros((R,), jnp.int32)
+    gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
+    free = jnp.zeros((4, 4), bool).at[2, 1].set(True).at[2, 3].set(True)
+    got = ops.admit(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1, st, free,
+                    z, gum)
+    assert list(np.asarray(got.slot)[:2]) == [1, 3]
+    assert int(np.asarray(got.ok).sum()) == 2
+    assert int(np.asarray(got.held)) == R - 2
 
 
 # --------------------------------------------------------------------------- #
