@@ -5,11 +5,13 @@ i-sock pools).  Both engine operations are compiled *into* the model program —
 the LB is a logical extension of the application:
 
   * ``admit``  — connection establishment + load balancing: content match →
-    policy select → slot allocation → scatter into pools.  No host round-trip:
+    policy select → slot allocation → pool commit, all inside one Pallas
+    kernel (kernels/route_match.py::admit_commit).  No host round-trip:
     the paper's "client TCP connection is bypassed".
   * ``step``   — one decode step for every active slot across all lanes in a
-    single batched program, then completion handling (release load counters,
-    free slots).
+    single batched program, then completion handling (done detect, load
+    release, rx metrics, slot free) as one fused Pallas kernel
+    (kernels/completion.py::complete).
 
 The sidecar baselines in core/sidecar.py implement the same contract with
 host-mediated routing + per-instance programs, reproducing the overhead
@@ -26,7 +28,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core import policies, request_map
 from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, FlowMetrics,
                                       RoutingState)
 from repro.kernels import ops
@@ -97,11 +98,12 @@ class Engine:
         )
 
     # ------------------------------------------------------------------ #
-    # admit: routing + balancing + slot allocation — one fused Pallas
-    # kernel (route → balance → slot-allocate → metrics), the paper's
-    # single in-kernel tail-call chain.  The staged jnp chain lives on in
-    # core/router.py + core/policies.py + core/request_map.py (the sidecar
-    # baselines and the bench_admit comparison drive it from there).
+    # admit: routing + balancing + slot allocation + pool commit — one
+    # fused Pallas kernel (route → balance → slot-allocate → pool write →
+    # metrics), the paper's single in-kernel tail-call chain ending in the
+    # sockmap update.  The staged jnp chain lives on in core/router.py +
+    # core/policies.py + core/request_map.py (the sidecar baselines and
+    # the bench_admit comparison drive it from there).
     # ------------------------------------------------------------------ #
     def admit(self, state: EngineState, reqs: RequestBatch) -> EngineState:
         rstate, pool, metrics = state.routing, state.pool, state.metrics
@@ -113,25 +115,17 @@ class Engine:
         rnd = jax.random.randint(kr, (R,), 0, 1 << 30, dtype=jnp.int32)
         gumbel = jax.random.gumbel(kw, (R, MAX_EPS_PER_CLUSTER), jnp.float32)
 
-        res = ops.admit(reqs.req_id, reqs.svc, reqs.features, reqs.msg_bytes,
-                        rstate, ~pool.active, rnd, gumbel)
-        ok = res.ok > 0
-        assign = request_map.SlotAssignment(res.instance, res.slot, ok)
-
-        pool = PoolState(
-            req_id=request_map.scatter_to_pool(pool.req_id, assign,
-                                               reqs.req_id),
-            endpoint=request_map.scatter_to_pool(pool.endpoint, assign,
-                                                 res.endpoint),
-            svc=request_map.scatter_to_pool(pool.svc, assign, reqs.svc),
-            length=request_map.scatter_to_pool(pool.length, assign,
-                                               jnp.zeros_like(reqs.req_id)),
-            token=request_map.scatter_to_pool(pool.token, assign, reqs.token),
-            active=request_map.scatter_to_pool(pool.active, assign,
-                                               jnp.ones_like(ok)),
-        )
+        res = ops.admit_commit(
+            reqs.req_id, reqs.svc, reqs.features, reqs.msg_bytes, reqs.token,
+            rstate, pool.req_id, pool.endpoint, pool.svc, pool.length,
+            pool.token, pool.active, rnd, gumbel)
+        # the six PoolState fields come committed straight out of the
+        # kernel — no scatter_to_pool post-pass on the fused path
+        pool = PoolState(res.pool_req_id, res.pool_endpoint, res.pool_svc,
+                         res.pool_length, res.pool_token,
+                         res.pool_active > 0)
         # load counters, rr cursors, held release and flow metrics all come
-        # fused out of the kernel — no post-pass scatters
+        # fused out of the kernel as well
         rstate = rstate._replace(ep_load=res.ep_load, rr_cursor=res.rr_cursor)
         metrics = metrics._replace(
             requests=metrics.requests + res.svc_requests,
@@ -142,7 +136,11 @@ class Engine:
         return EngineState(rstate, pool, state.cache, metrics, key)
 
     # ------------------------------------------------------------------ #
-    # step: one batched decode over all lanes; completion handling
+    # step: one batched decode over all lanes; completion handling (done
+    # detect → load release → rx metrics → slot free) runs as one fused
+    # Pallas kernel over the (I, C) pool — the paper's in-kernel close
+    # path.  The staged jnp chain it replaced is kept as the baseline in
+    # benchmarks/run.py::bench_step.
     # ------------------------------------------------------------------ #
     def step(self, params, state: EngineState) -> tuple[EngineState, dict]:
         pool, cache = state.pool, state.cache
@@ -154,23 +152,15 @@ class Engine:
                                       cache, ctx=self.ctx)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32).reshape(I, C)
 
-        new_len = jnp.where(pool.active, pool.length + 1, pool.length)
-        done = pool.active & ((nxt == self.eos) | (new_len >= self.max_len - 1))
-        rstate = policies.release(state.routing, pool.endpoint.reshape(B),
-                                  done.reshape(B))
-        metrics = state.metrics._replace(
-            rx_bytes=state.metrics.rx_bytes.at[
-                jnp.maximum(pool.svc, 0).reshape(B)].add(
-                jnp.where(pool.active, 2, 0).reshape(B), mode="drop"))
-        pool = PoolState(
-            req_id=jnp.where(done, -1, pool.req_id),
-            endpoint=jnp.where(done, -1, pool.endpoint),
-            svc=pool.svc,
-            length=jnp.where(done, 0, new_len),
-            token=jnp.where(pool.active, nxt, pool.token),
-            active=pool.active & ~done,
-        )
-        out = {"emitted": nxt, "done": done,
+        res = ops.complete(pool.req_id, pool.endpoint, pool.svc, pool.length,
+                           pool.token, pool.active, nxt,
+                           state.routing.ep_load, state.metrics.rx_bytes,
+                           eos=self.eos, max_len=self.max_len)
+        rstate = state.routing._replace(ep_load=res.ep_load)
+        metrics = state.metrics._replace(rx_bytes=res.rx_bytes)
+        pool = PoolState(res.req_id, res.endpoint, res.svc, res.length,
+                         res.token, res.active > 0)
+        out = {"emitted": nxt, "done": res.done > 0,
                "req_id": state.pool.req_id,     # ids that produced this tick
                "active": pool.active.sum()}
         return EngineState(rstate, pool, cache, metrics, state.key), out

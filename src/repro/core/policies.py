@@ -47,15 +47,26 @@ def select(state: RoutingState, cluster: jax.Array, key: jax.Array
     cluster: (B,) int32, may contain NO_ROUTE (-1) → endpoint -1.
     """
     B = cluster.shape[0]
-    routable = cluster >= 0
     cl = jnp.maximum(cluster, 0)
     idx, ok, count = _window(state, cl)
+    # matched-but-empty clusters (count == 0, e.g. after a delta refresh
+    # removed the last endpoint) are unroutable too — the clipped window
+    # would otherwise hand out an endpoint owned by a different cluster
+    # (kernel/oracle parity: _admit_kernel and admit_ref both require
+    # count > 0)
+    routable = (cluster >= 0) & (count > 0)
     policy = state.cluster_policy[cl]                       # (B,)
     kr, kw, kp = jax.random.split(key, 3)
 
     # --- round robin: cursor + stable rank of this request within its
-    # cluster this batch (the relay's counting sort gives the rank) -------- #
-    rank, _ = relay.positions_sort(cl, state.cluster_ep_start.shape[0])
+    # cluster this batch (the relay's counting sort gives the rank).
+    # Unroutable (NO_ROUTE) requests are steered to a sentinel bucket the
+    # way request_map.allocate_slots steers them to instance I — ranking
+    # them at max(cluster, 0) would inflate the arrival ranks of genuine
+    # cluster-0 traffic and skew rr/least-request offsets away from the
+    # fused kernel and the admit_ref oracle ------------------------------- #
+    n_cl = state.cluster_ep_start.shape[0]
+    rank, _ = relay.positions_sort(jnp.where(routable, cl, n_cl), n_cl + 1)
     rr_off = (state.rr_cursor[cl] + rank) % jnp.maximum(count, 1)
 
     # --- random ----------------------------------------------------------- #

@@ -5,6 +5,12 @@ request identifiers and maps them back to the original ids on the response
 path.  Here: requests admitted into instance pools get an internal id =
 (instance, slot); the original request id is stored per slot, and responses
 are returned to request order with one inverse gather.
+
+This module is the *staged baseline* implementation: the engine's fused
+path commits pool state inside the admit kernel
+(kernels/route_match.py::admit_commit) and never calls scatter_to_pool;
+the sidecar baselines and bench_admit still drive allocate_slots/
+scatter_to_pool as the pre-fusion comparison chain.
 """
 
 from __future__ import annotations

@@ -64,7 +64,10 @@ class HostRouter:
             off = int(self.rng.randint(count))
         elif pol == POLICY_WEIGHTED:
             w = t.ep_weight[start:start + count]
-            off = int(self.rng.choice(count, p=w / w.sum()))
+            s = float(w.sum())
+            # all-zero weights fall back to uniform (mirrors the kernel's
+            # log(w + 1e-9) guard) instead of NaN-crashing np.random.choice
+            off = int(self.rng.choice(count, p=w / s if s > 0 else None))
         else:                                   # least request
             off = int(np.argmin(t.ep_load[start:start + count]))
         ep = start + off

@@ -1,0 +1,140 @@
+"""Connection-completion datapath as one fused Pallas kernel (paper §4.1's
+close path: the response-side eBPF program that tears the connection down
+without a host round-trip).
+
+``complete`` fuses the whole post-decode completion chain of
+``Engine.step`` over the (I, C) connection pool:
+
+  * done detection      — an active slot finishes on EOS or on hitting the
+                          length budget (``new_len >= max_len - 1``);
+  * load release        — each finished slot decrements its endpoint's
+                          outstanding-request counter (``policies.release``);
+  * rx traffic metrics  — every active slot adds its per-token response
+                          bytes to its service's rx counter;
+  * slot free           — finished slots clear req_id/endpoint, zero their
+                          length, and drop out of the active set.
+
+Grid: (I / BI,) sequential over instance-lane tiles.  The endpoint-load
+decrements and per-service rx bytes accumulate in VMEM scratch across the
+grid and are folded into the (E,) / (S,) outputs on the last step — the same
+running-counter carry as the admit kernel (``kernels/route_match.py``).
+
+Sequential semantics are pinned by ``kernels.ref.complete_ref`` (bit-exact,
+property-tested in tests/test_kernels.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.backend import resolve_interpret
+from repro.kernels.route_match import _table_spec
+
+RX_BYTES_PER_TOKEN = 2     # response payload attributed per decoded token
+
+
+class CompleteResult(NamedTuple):
+    """Everything ``Engine.step`` needs from one fused completion launch."""
+
+    req_id: jax.Array     # (I, C) i32, -1 on freed slots
+    endpoint: jax.Array   # (I, C) i32, -1 on freed slots
+    svc: jax.Array        # (I, C) i32 (unchanged; stale slots keep svc)
+    length: jax.Array     # (I, C) i32, 0 on freed slots
+    token: jax.Array      # (I, C) i32 last emitted token
+    active: jax.Array     # (I, C) i32 0/1
+    done: jax.Array       # (I, C) i32 0/1 finished this step
+    ep_load: jax.Array    # (E,) i32 counters after release
+    rx_bytes: jax.Array   # (S,) i32 per-service rx metric after this step
+
+
+def _complete_kernel(preq_ref, pep_ref, psvc_ref, plen_ref, ptok_ref,
+                     pact_ref, nxt_ref, load0_ref, rx0_ref,
+                     oreq_ref, oep_ref, osvc_ref, olen_ref, otok_ref,
+                     oact_ref, done_ref, loadout_ref, rxout_ref,
+                     dec_s, rx_s, *, eos: int, max_len: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        dec_s[...] = jnp.zeros_like(dec_s)
+        rx_s[...] = jnp.zeros_like(rx_s)
+
+    E = load0_ref.shape[0]
+    S = rx0_ref.shape[0]
+    BI, C = preq_ref.shape
+    N = BI * C
+
+    act = pact_ref[...] > 0
+    nxt = nxt_ref[...]
+    new_len = jnp.where(act, plen_ref[...] + 1, plen_ref[...])
+    done = act & ((nxt == eos) | (new_len >= max_len - 1))
+
+    # ---- slot free ----------------------------------------------------- #
+    oreq_ref[...] = jnp.where(done, -1, preq_ref[...])
+    oep_ref[...] = jnp.where(done, -1, pep_ref[...])
+    osvc_ref[...] = psvc_ref[...]
+    olen_ref[...] = jnp.where(done, 0, new_len)
+    otok_ref[...] = jnp.where(act, nxt, ptok_ref[...])
+    oact_ref[...] = (act & ~done).astype(jnp.int32)
+    done_ref[...] = done.astype(jnp.int32)
+
+    # ---- load release (one-hot fold over endpoints) -------------------- #
+    epf = pep_ref[...].reshape(N)
+    rel = (done & (pep_ref[...] >= 0) & (pep_ref[...] < E)).reshape(N)
+    epc = jnp.clip(epf, 0, E - 1)
+    oh_e = (rel[:, None] & (epc[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (N, E), 1))).astype(jnp.int32)
+    dec_s[...] = dec_s[...] + jnp.sum(oh_e, axis=0)
+
+    # ---- rx traffic metrics (per active slot, svc >= S drops) ---------- #
+    svcf = jnp.maximum(psvc_ref[...], 0).reshape(N)
+    actf = act.reshape(N)
+    oh_s = (actf[:, None] & (svcf[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (N, S), 1))).astype(jnp.int32)
+    rx_s[...] = rx_s[...] + RX_BYTES_PER_TOKEN * jnp.sum(oh_s, axis=0)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _emit():
+        loadout_ref[...] = load0_ref[...] - dec_s[...]
+        rxout_ref[...] = rx0_ref[...] + rx_s[...]
+
+
+def complete(pool_req_id, pool_endpoint, pool_svc, pool_length, pool_token,
+             pool_active, nxt, ep_load, rx_bytes, *, eos: int, max_len: int,
+             block_i: int = 8,
+             interpret: bool | None = None) -> CompleteResult:
+    """Fused completion over the pool after one decode step.
+
+    pool_*: (I, C) connection state (active may be bool or i32); nxt: (I, C)
+    i32 tokens emitted this step; ep_load: (E,) i32; rx_bytes: (S,) i32.
+    ``eos`` / ``max_len`` are compile-time constants (engine attributes).
+    """
+    I, C = pool_req_id.shape
+    E = ep_load.shape[0]
+    S = rx_bytes.shape[0]
+    block_i = max(1, math.gcd(I, block_i))     # tiles must cover I exactly
+    grid = (I // block_i,)
+    lane = pl.BlockSpec((block_i, C), lambda i: (i, 0))
+    pool = [pool_req_id.astype(jnp.int32), pool_endpoint.astype(jnp.int32),
+            pool_svc.astype(jnp.int32), pool_length.astype(jnp.int32),
+            pool_token.astype(jnp.int32), pool_active.astype(jnp.int32)]
+    o = pl.pallas_call(
+        functools.partial(_complete_kernel, eos=eos, max_len=max_len),
+        grid=grid,
+        in_specs=[lane] * 7 + [_table_spec((E,)), _table_spec((S,))],
+        out_specs=[lane] * 7 + [_table_spec((E,)), _table_spec((S,))],
+        out_shape=[jax.ShapeDtypeStruct((I, C), jnp.int32)] * 7
+                  + [jax.ShapeDtypeStruct((E,), jnp.int32),
+                     jax.ShapeDtypeStruct((S,), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((E,), jnp.int32),
+                        pltpu.VMEM((S,), jnp.int32)],
+        interpret=resolve_interpret(interpret),
+    )(*pool, nxt.astype(jnp.int32), ep_load, rx_bytes)
+    return CompleteResult(*o)

@@ -12,11 +12,13 @@ from functools import partial
 
 import jax
 
-from repro.kernels import (decode_attention as _da, flash_attention as _fa,
-                           relay_dispatch as _rd, route_match as _rm,
-                           ssd_scan as _ss)
+from repro.kernels import (completion as _cp, decode_attention as _da,
+                           flash_attention as _fa, relay_dispatch as _rd,
+                           route_match as _rm, ssd_scan as _ss)
 from repro.kernels.backend import default_interpret  # re-export  # noqa: F401
-from repro.kernels.route_match import AdmitResult  # re-export  # noqa: F401
+from repro.kernels.completion import CompleteResult  # re-export  # noqa: F401
+from repro.kernels.route_match import (AdmitCommitResult,  # noqa: F401
+                                       AdmitResult)
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
@@ -47,6 +49,28 @@ def admit(req_id, svc, features, msg_bytes, state, free_mask, rnd, gumbel, *,
     """Fused admission datapath: match → balance → slot-allocate → metrics."""
     return _rm.admit(req_id, svc, features, msg_bytes, state, free_mask,
                      rnd, gumbel, block_r=block_r)
+
+
+@partial(jax.jit, static_argnames=("block_r",))
+def admit_commit(req_id, svc, features, msg_bytes, token, state,
+                 pool_req_id, pool_endpoint, pool_svc, pool_length,
+                 pool_token, pool_active, rnd, gumbel, *,
+                 block_r: int = 256) -> AdmitCommitResult:
+    """Fused admission + in-kernel pool commit (no post-pass scatters)."""
+    return _rm.admit_commit(req_id, svc, features, msg_bytes, token, state,
+                            pool_req_id, pool_endpoint, pool_svc, pool_length,
+                            pool_token, pool_active, rnd, gumbel,
+                            block_r=block_r)
+
+
+@partial(jax.jit, static_argnames=("eos", "max_len", "block_i"))
+def complete(pool_req_id, pool_endpoint, pool_svc, pool_length, pool_token,
+             pool_active, nxt, ep_load, rx_bytes, *, eos: int, max_len: int,
+             block_i: int = 8) -> CompleteResult:
+    """Fused completion: done detect → load release → rx metrics → free."""
+    return _cp.complete(pool_req_id, pool_endpoint, pool_svc, pool_length,
+                        pool_token, pool_active, nxt, ep_load, rx_bytes,
+                        eos=eos, max_len=max_len, block_i=block_i)
 
 
 @partial(jax.jit, static_argnames=("n_dest", "block_n"))

@@ -125,7 +125,8 @@ def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
     S, MR, E = rs.shape[0], rf.shape[0], einst.shape[0]
     I = free.shape[0]
     WE = MAX_EPS_PER_CLUSTER
-    sv = np.clip(np.asarray(svc, np.int64), 0, S - 1)
+    sv_raw = np.asarray(svc, np.int64)
+    sv = np.clip(sv_raw, 0, S - 1)
 
     # weighted offsets are state-independent: use the kernel's exact float
     # expression (via jnp) so f32 rounding and argmax tie-breaks agree
@@ -199,8 +200,9 @@ def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
         if rank < free_slots.shape[0]:
             ok_out[r] = 1
             slot_out[r] = free_slots[rank]
-            sreq[sv[r]] += 1
-            stx[sv[r]] += mb[r]
+            if sv_raw[r] < S:                   # metrics drop svc >= S
+                sreq[sv[r]] += 1
+                stx[sv[r]] += mb[r]
         else:
             held_n += 1
             held_eps.append(ep)
@@ -213,3 +215,82 @@ def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
                        i32(slot_out), i32(ok_out), i32(loads), i32(cur),
                        i32(sreq), i32(stx), np.int32(no_route),
                        np.int32(held_n))
+
+
+def admit_commit_ref(req_id, svc, features, msg_bytes, token, state,
+                     pool_req_id, pool_endpoint, pool_svc, pool_length,
+                     pool_token, pool_active, rnd, gumbel):
+    """Sequential reference for ``route_match.admit_commit``: ``admit_ref``
+    grown with the pool writeback — each admitted request (arrival order)
+    writes req_id/endpoint/svc/length=0/token/active=1 at its
+    (instance, slot).  Bit-exact contract with the fused kernel."""
+    import numpy as np
+
+    from repro.kernels.route_match import AdmitCommitResult
+
+    free = ~np.asarray(pool_active).astype(bool)
+    base = admit_ref(req_id, svc, features, msg_bytes, state, free, rnd,
+                     gumbel)
+    preq = np.asarray(pool_req_id, np.int32).copy()
+    pep = np.asarray(pool_endpoint, np.int32).copy()
+    psvc = np.asarray(pool_svc, np.int32).copy()
+    plen = np.asarray(pool_length, np.int32).copy()
+    ptok = np.asarray(pool_token, np.int32).copy()
+    pact = np.asarray(pool_active).astype(np.int32).copy()
+    rid = np.asarray(req_id, np.int32)
+    sv = np.asarray(svc, np.int32)
+    tok = np.asarray(token, np.int32)
+    for r in range(rid.shape[0]):
+        if not base.ok[r]:
+            continue
+        i, s = int(base.instance[r]), int(base.slot[r])
+        preq[i, s] = rid[r]
+        pep[i, s] = base.endpoint[r]
+        psvc[i, s] = sv[r]
+        plen[i, s] = 0
+        ptok[i, s] = tok[r]
+        pact[i, s] = 1
+    return AdmitCommitResult(*base, preq, pep, psvc, plen, ptok, pact)
+
+
+def complete_ref(pool_req_id, pool_endpoint, pool_svc, pool_length,
+                 pool_token, pool_active, nxt, ep_load, rx_bytes, *,
+                 eos: int, max_len: int):
+    """Sequential per-slot reference for the fused completion kernel
+    (``kernels.completion.complete``): done detect (EOS / length budget) →
+    endpoint load release → per-service rx metrics → slot free."""
+    import numpy as np
+
+    from repro.kernels.completion import RX_BYTES_PER_TOKEN, CompleteResult
+
+    preq = np.asarray(pool_req_id, np.int32).copy()
+    pep = np.asarray(pool_endpoint, np.int32).copy()
+    psvc = np.asarray(pool_svc, np.int32).copy()
+    plen = np.asarray(pool_length, np.int32).copy()
+    ptok = np.asarray(pool_token, np.int32).copy()
+    pact = np.asarray(pool_active).astype(bool).copy()
+    nx = np.asarray(nxt, np.int32)
+    loads = np.asarray(ep_load, np.int32).copy()
+    rx = np.asarray(rx_bytes, np.int32).copy()
+    I, C = preq.shape
+    E, S = loads.shape[0], rx.shape[0]
+    done = np.zeros((I, C), np.int32)
+    for i in range(I):
+        for c in range(C):
+            if not pact[i, c]:
+                continue
+            sv = max(int(psvc[i, c]), 0)
+            if sv < S:                          # mode="drop" semantics
+                rx[sv] += RX_BYTES_PER_TOKEN
+            plen[i, c] += 1
+            ptok[i, c] = nx[i, c]
+            if nx[i, c] == eos or plen[i, c] >= max_len - 1:
+                done[i, c] = 1
+                if 0 <= pep[i, c] < E:
+                    loads[pep[i, c]] -= 1
+                preq[i, c] = -1
+                pep[i, c] = -1
+                plen[i, c] = 0
+                pact[i, c] = False
+    return CompleteResult(preq, pep, psvc, plen, ptok,
+                          pact.astype(np.int32), done, loads, rx)

@@ -18,6 +18,16 @@ Two entry points:
   visible to every decision in tile ``i+1``, exactly like the eBPF map a
   per-packet program updates in place.
 
+``admit_commit``
+  ``admit`` plus the pool-commit stage: admitted requests write all six
+  per-(instance, slot) connection-state fields (req_id, endpoint, svc,
+  length, token, active) directly inside the kernel, so ``Engine.admit``
+  needs no post-pass scatters at all — the whole connect path is one Pallas
+  program.  The (I, C) pool rides in the revisited whole-array output
+  blocks; each tile folds its writes in with a one-hot mask (slots are
+  collision-free by construction: the slot allocator hands out each free
+  slot at most once per batch).
+
 Sequential least-request without a per-request scan: request ``r`` with
 in-tile cluster rank ``ρ`` takes the endpoint owning the ``ρ``-th smallest
 "ticket" of the multiset ``{load_j + t : t ≥ 0}`` ordered by (value, j) —
@@ -154,14 +164,25 @@ class AdmitResult(NamedTuple):
     held: jax.Array          # () i32 routable requests without a free slot
 
 
-def _admit_kernel(rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref,
-                  rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref,
-                  cs_ref, cc_ref, cp_ref, einst_ref, ew_ref,
-                  load0_ref, cur0_ref, free_ref,
-                  cluster_ref, ep_ref, inst_ref, slot_ref, ok_ref,
-                  loadout_ref, curout_ref, sreq_ref, stx_ref, cnt_ref,
-                  load_s, held_s, cur_s, icnt_s, sreq_s, stx_s, cnt_s, *,
-                  block_r: int):
+def _admit_kernel(*refs, block_r: int, commit: bool):
+    if commit:
+        (rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref, tok_ref,
+         rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref,
+         cs_ref, cc_ref, cp_ref, einst_ref, ew_ref,
+         load0_ref, cur0_ref, free_ref,
+         preq0_ref, pep0_ref, psvc0_ref, plen0_ref, ptok0_ref,
+         cluster_ref, ep_ref, inst_ref, slot_ref, ok_ref,
+         loadout_ref, curout_ref, sreq_ref, stx_ref, cnt_ref,
+         preq_ref, pep_ref, psvc_ref, plen_ref, ptok_ref, pact_ref,
+         load_s, held_s, cur_s, icnt_s, sreq_s, stx_s, cnt_s) = refs
+    else:
+        (rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref,
+         rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref,
+         cs_ref, cc_ref, cp_ref, einst_ref, ew_ref,
+         load0_ref, cur0_ref, free_ref,
+         cluster_ref, ep_ref, inst_ref, slot_ref, ok_ref,
+         loadout_ref, curout_ref, sreq_ref, stx_ref, cnt_ref,
+         load_s, held_s, cur_s, icnt_s, sreq_s, stx_s, cnt_s) = refs
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -173,6 +194,15 @@ def _admit_kernel(rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref,
         sreq_s[...] = jnp.zeros_like(sreq_s)
         stx_s[...] = jnp.zeros_like(stx_s)
         cnt_s[...] = jnp.zeros_like(cnt_s)
+        if commit:
+            # the pool rides in whole-array output blocks revisited by every
+            # grid step: seed from the incoming pool, fold writes per tile
+            preq_ref[...] = preq0_ref[...]
+            pep_ref[...] = pep0_ref[...]
+            psvc_ref[...] = psvc0_ref[...]
+            plen_ref[...] = plen0_ref[...]
+            ptok_ref[...] = ptok0_ref[...]
+            pact_ref[...] = 1 - free_ref[...]
 
     S = rs_ref.shape[0]
     CL = cc_ref.shape[0]
@@ -265,6 +295,27 @@ def _admit_kernel(rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref,
     slot_ref[...] = slot
     ok_ref[...] = ok.astype(jnp.int32)
 
+    # ---- stage 4 (commit mode): pool writeback ------------------------ #
+    if commit:
+        # one-hot over flattened (I*C) pool cells; the slot allocator never
+        # hands the same (inst, slot) to two requests in one batch, so each
+        # cell has at most one writer and a plain sum recovers its value
+        flat = instc * C + jnp.where(ok, slot, 0)
+        oh_p = (ok[:, None] & (flat[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, (block_r, I * C), 1))).astype(jnp.int32)
+        wrote = jnp.sum(oh_p, axis=0).reshape(I, C) > 0
+
+        def fold(ref, vals):
+            v = jnp.sum(oh_p * vals[:, None], axis=0).reshape(I, C)
+            ref[...] = jnp.where(wrote, v, ref[...])
+
+        fold(preq_ref, rid_ref[...])
+        fold(pep_ref, ep)
+        fold(psvc_ref, svc_ref[...])        # raw svc, as the engine stores it
+        fold(plen_ref, jnp.zeros_like(slot))
+        fold(ptok_ref, tok_ref[...])
+        pact_ref[...] = jnp.where(wrote, 1, pact_ref[...])
+
     # ---- carried LB state + fused metrics ----------------------------- #
     oh_e = (routable[:, None] & (epc[:, None] == jax.lax.broadcasted_iota(
         jnp.int32, (block_r, E), 1))).astype(jnp.int32)
@@ -274,8 +325,11 @@ def _admit_kernel(rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref,
     cur_s[...] = (cur_s[...] + jnp.sum(oh_c, axis=0)) % jnp.maximum(
         cc_ref[...], 1)
     icnt_s[...] = icnt_s[...] + jnp.sum(oh_i, axis=0)
-    oh_s = (ok[:, None] & (svc[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (block_r, S), 1))).astype(jnp.int32)
+    # per-service metrics drop svc >= S (the staged scatter's mode="drop")
+    # instead of folding rogue ids into service S-1 via the table clip
+    oh_s = ((ok & (svc_ref[...] < S))[:, None]
+            & (svc[:, None] == jax.lax.broadcasted_iota(
+                jnp.int32, (block_r, S), 1))).astype(jnp.int32)
     sreq_s[...] = sreq_s[...] + jnp.sum(oh_s, axis=0)
     stx_s[...] = stx_s[...] + jnp.sum(oh_s * bytes_ref[...][:, None], axis=0)
     cnt_s[...] = cnt_s[...] + jnp.stack(
@@ -291,6 +345,118 @@ def _admit_kernel(rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref,
         sreq_ref[...] = sreq_s[...]
         stx_ref[...] = stx_s[...]
         cnt_ref[...] = cnt_s[...]
+
+
+class AdmitCommitResult(NamedTuple):
+    """``AdmitResult`` plus the committed (I, C) connection pools."""
+
+    cluster: jax.Array
+    endpoint: jax.Array
+    instance: jax.Array
+    slot: jax.Array
+    ok: jax.Array
+    ep_load: jax.Array
+    rr_cursor: jax.Array
+    svc_requests: jax.Array
+    svc_tx_bytes: jax.Array
+    no_route: jax.Array
+    held: jax.Array
+    pool_req_id: jax.Array   # (I, C) i32
+    pool_endpoint: jax.Array
+    pool_svc: jax.Array
+    pool_length: jax.Array
+    pool_token: jax.Array
+    pool_active: jax.Array   # (I, C) i32 (0/1)
+
+
+def _pad_rows(block_r: int, req_id, svc, features, msg_bytes, rnd, gumbel,
+              token=None):
+    """Pad ragged batches with req_id=-1 rows (inert in-kernel: no counter,
+    metric or pool touches); callers slice per-request outputs back."""
+    R0, F = features.shape
+    R = -(-R0 // block_r) * block_r
+    if R != R0:
+        pad = R - R0
+        req_id = jnp.concatenate([req_id, jnp.full((pad,), -1, jnp.int32)])
+        svc = jnp.concatenate([svc, jnp.zeros((pad,), svc.dtype)])
+        features = jnp.concatenate(
+            [features, jnp.zeros((pad, F), features.dtype)])
+        msg_bytes = jnp.concatenate(
+            [msg_bytes, jnp.zeros((pad,), msg_bytes.dtype)])
+        rnd = jnp.concatenate([rnd, jnp.zeros((pad,), rnd.dtype)])
+        gumbel = jnp.concatenate(
+            [gumbel, jnp.zeros((pad, gumbel.shape[1]), gumbel.dtype)])
+        if token is not None:
+            token = jnp.concatenate([token, jnp.zeros((pad,), token.dtype)])
+    return R, req_id, svc, features, msg_bytes, rnd, gumbel, token
+
+
+def _launch_admit(req_id, svc, features, msg_bytes, state, free_i32, rnd,
+                  gumbel, token, pool, *, block_r: int,
+                  interpret: bool | None):
+    """Shared pallas_call plumbing for ``admit`` (pool=None) and
+    ``admit_commit`` (pool = 5 incoming (I, C) i32 arrays)."""
+    commit = pool is not None
+    R0, F = features.shape
+    R, req_id, svc, features, msg_bytes, rnd, gumbel, token = _pad_rows(
+        block_r, req_id, svc, features, msg_bytes, rnd, gumbel, token)
+    grid = (R // block_r,)
+    tables = [state.svc_rule_start, state.svc_rule_count, state.rule_field,
+              state.rule_value, state.rule_cluster, state.cluster_ep_start,
+              state.cluster_ep_count, state.cluster_policy,
+              state.ep_instance, state.ep_weight, state.ep_load,
+              state.rr_cursor, free_i32]
+    S = state.svc_rule_start.shape[0]
+    CL = state.cluster_ep_count.shape[0]
+    E = state.ep_load.shape[0]
+    I, C = free_i32.shape
+    req = pl.BlockSpec((block_r,), lambda r: (r,))
+    in_arrays = [req_id.astype(jnp.int32), svc.astype(jnp.int32), features,
+                 msg_bytes.astype(jnp.int32), rnd.astype(jnp.int32),
+                 gumbel.astype(jnp.float32)]
+    in_specs = [req, req,
+                pl.BlockSpec((block_r, F), lambda r: (r, 0)),
+                req, req,
+                pl.BlockSpec((block_r, MAX_EPS_PER_CLUSTER),
+                             lambda r: (r, 0))]
+    if commit:
+        in_arrays.append(token.astype(jnp.int32))
+        in_specs.append(req)
+    in_arrays += tables
+    in_specs += [_table_spec(t.shape) for t in tables]
+    if commit:
+        in_arrays += list(pool)
+        in_specs += [_table_spec((I, C))] * 5
+    out_specs = [req] * 5 + [_table_spec((E,)), _table_spec((CL,)),
+                             _table_spec((S,)), _table_spec((S,)),
+                             _table_spec((2,))]
+    out_shape = [jax.ShapeDtypeStruct((R,), jnp.int32)] * 5 \
+        + [jax.ShapeDtypeStruct((E,), jnp.int32),
+           jax.ShapeDtypeStruct((CL,), jnp.int32),
+           jax.ShapeDtypeStruct((S,), jnp.int32),
+           jax.ShapeDtypeStruct((S,), jnp.int32),
+           jax.ShapeDtypeStruct((2,), jnp.int32)]
+    if commit:
+        out_specs += [_table_spec((I, C))] * 6
+        out_shape += [jax.ShapeDtypeStruct((I, C), jnp.int32)] * 6
+    o = pl.pallas_call(
+        functools.partial(_admit_kernel, block_r=block_r, commit=commit),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((E,), jnp.int32),
+                        pltpu.VMEM((E,), jnp.int32),
+                        pltpu.VMEM((CL,), jnp.int32),
+                        pltpu.VMEM((I,), jnp.int32),
+                        pltpu.VMEM((S,), jnp.int32),
+                        pltpu.VMEM((S,), jnp.int32),
+                        pltpu.VMEM((2,), jnp.int32)],
+        interpret=resolve_interpret(interpret),
+    )(*in_arrays)
+    head = (o[0][:R0], o[1][:R0], o[2][:R0], o[3][:R0], o[4][:R0],
+            o[5], o[6], o[7], o[8], o[9][0], o[9][1])
+    return head + tuple(o[10:])
 
 
 def admit(req_id, svc, features, msg_bytes, state, free_mask, rnd, gumbel, *,
@@ -317,60 +483,42 @@ def admit(req_id, svc, features, msg_bytes, state, free_mask, rnd, gumbel, *,
             state.rr_cursor % jnp.maximum(state.cluster_ep_count, 1),
             zs, zs, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
     block_r = min(block_r, R0)
-    # pad ragged batches with req_id=-1 rows (inert in-kernel: no counter
-    # or metric touches) and slice the per-request outputs back afterwards
-    R = -(-R0 // block_r) * block_r
-    if R != R0:
-        pad = R - R0
-        req_id = jnp.concatenate([req_id, jnp.full((pad,), -1, jnp.int32)])
-        svc = jnp.concatenate([svc, jnp.zeros((pad,), svc.dtype)])
-        features = jnp.concatenate(
-            [features, jnp.zeros((pad, F), features.dtype)])
-        msg_bytes = jnp.concatenate(
-            [msg_bytes, jnp.zeros((pad,), msg_bytes.dtype)])
-        rnd = jnp.concatenate([rnd, jnp.zeros((pad,), rnd.dtype)])
-        gumbel = jnp.concatenate(
-            [gumbel, jnp.zeros((pad, gumbel.shape[1]), gumbel.dtype)])
-    grid = (R // block_r,)
-    free_i32 = free_mask.astype(jnp.int32)
-    tables = [state.svc_rule_start, state.svc_rule_count, state.rule_field,
-              state.rule_value, state.rule_cluster, state.cluster_ep_start,
-              state.cluster_ep_count, state.cluster_policy,
-              state.ep_instance, state.ep_weight, state.ep_load,
-              state.rr_cursor, free_i32]
-    S = state.svc_rule_start.shape[0]
-    CL = state.cluster_ep_count.shape[0]
-    E = state.ep_load.shape[0]
-    I = free_mask.shape[0]
-    req = pl.BlockSpec((block_r,), lambda r: (r,))
-    o = pl.pallas_call(
-        functools.partial(_admit_kernel, block_r=block_r),
-        grid=grid,
-        in_specs=[req, req,
-                  pl.BlockSpec((block_r, F), lambda r: (r, 0)),
-                  req, req,
-                  pl.BlockSpec((block_r, MAX_EPS_PER_CLUSTER),
-                               lambda r: (r, 0))]
-                 + [_table_spec(t.shape) for t in tables],
-        out_specs=[req] * 5 + [_table_spec((E,)), _table_spec((CL,)),
-                               _table_spec((S,)), _table_spec((S,)),
-                               _table_spec((2,))],
-        out_shape=[jax.ShapeDtypeStruct((R,), jnp.int32)] * 5
-                  + [jax.ShapeDtypeStruct((E,), jnp.int32),
-                     jax.ShapeDtypeStruct((CL,), jnp.int32),
-                     jax.ShapeDtypeStruct((S,), jnp.int32),
-                     jax.ShapeDtypeStruct((S,), jnp.int32),
-                     jax.ShapeDtypeStruct((2,), jnp.int32)],
-        scratch_shapes=[pltpu.VMEM((E,), jnp.int32),
-                        pltpu.VMEM((E,), jnp.int32),
-                        pltpu.VMEM((CL,), jnp.int32),
-                        pltpu.VMEM((I,), jnp.int32),
-                        pltpu.VMEM((S,), jnp.int32),
-                        pltpu.VMEM((S,), jnp.int32),
-                        pltpu.VMEM((2,), jnp.int32)],
-        interpret=resolve_interpret(interpret),
-    )(req_id.astype(jnp.int32), svc.astype(jnp.int32), features,
-      msg_bytes.astype(jnp.int32), rnd.astype(jnp.int32),
-      gumbel.astype(jnp.float32), *tables)
-    return AdmitResult(o[0][:R0], o[1][:R0], o[2][:R0], o[3][:R0], o[4][:R0],
-                       o[5], o[6], o[7], o[8], o[9][0], o[9][1])
+    # booleanize: the kernel cumsums the mask as per-slot counts, so an
+    # integer mask cell > 1 would double-count free slots
+    o = _launch_admit(req_id, svc, features, msg_bytes, state,
+                      (free_mask != 0).astype(jnp.int32), rnd, gumbel,
+                      None, None, block_r=block_r, interpret=interpret)
+    return AdmitResult(*o)
+
+
+def admit_commit(req_id, svc, features, msg_bytes, token, state,
+                 pool_req_id, pool_endpoint, pool_svc, pool_length,
+                 pool_token, pool_active, rnd, gumbel, *,
+                 block_r: int = 256,
+                 interpret: bool | None = None) -> AdmitCommitResult:
+    """``admit`` + in-kernel pool commit (the paper's full connect path).
+
+    Same contract as ``admit`` with the free-slot mask derived from
+    ``pool_active`` (~active = free); admitted requests additionally write
+    req_id/endpoint/svc/length=0/token/active=1 at their (instance, slot)
+    inside the kernel — no ``scatter_to_pool`` post-pass.  Bit-exact against
+    ``kernels.ref.admit_commit_ref``.
+    """
+    R0, F = features.shape
+    active_i32 = (pool_active != 0).astype(jnp.int32)   # booleanized 0/1
+    pool = (pool_req_id.astype(jnp.int32), pool_endpoint.astype(jnp.int32),
+            pool_svc.astype(jnp.int32), pool_length.astype(jnp.int32),
+            pool_token.astype(jnp.int32))
+    if R0 == 0:                         # empty batch: pool passes through
+        z = jnp.zeros((0,), jnp.int32)
+        zs = jnp.zeros_like(state.svc_rule_start)
+        return AdmitCommitResult(
+            z, z, z, z, z, state.ep_load,
+            state.rr_cursor % jnp.maximum(state.cluster_ep_count, 1),
+            zs, zs, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            *pool, active_i32)
+    block_r = min(block_r, R0)
+    o = _launch_admit(req_id, svc, features, msg_bytes, state,
+                      1 - active_i32, rnd, gumbel, token, pool,
+                      block_r=block_r, interpret=interpret)
+    return AdmitCommitResult(*o)

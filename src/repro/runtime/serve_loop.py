@@ -59,6 +59,7 @@ class ServeLoop:
         self.queue: collections.deque[Request] = collections.deque()
         self.inflight: dict[int, Request] = {}
         self.done: list[Request] = []
+        self.dropped: list[Request] = []    # gave up after max retries
 
     # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
@@ -113,10 +114,13 @@ class ServeLoop:
             if r.req_id not in serviced and r.req_id in self.inflight:
                 self.inflight.pop(r.req_id)
                 r.retries += 1
-                if r.retries < 64:               # unroutable requests drop
+                if r.retries < 64:
                     self.queue.appendleft(r)
+                else:                            # unroutable requests drop,
+                    r.t_done = time.perf_counter()   # but stay accounted:
+                    self.dropped.append(r)       # submitted == done+dropped
         return {"active": int(out["active"]), "queued": len(self.queue),
-                "done": len(self.done)}
+                "done": len(self.done), "dropped": len(self.dropped)}
 
     def drain(self, max_ticks: int = 10_000) -> list[Request]:
         t = 0

@@ -128,6 +128,99 @@ def test_delta_refresh_add_remove_endpoint(state):
     assert int(st3.cluster_ep_count[ci]) == 2
 
 
+@pytest.mark.parametrize("policy", [POLICY_RR, POLICY_LEAST_REQUEST])
+def test_staged_rank_matches_oracle_on_no_route_mix(policy):
+    """Regression for the staged-path LB rank skew: NO_ROUTE requests used
+    to land in rank bucket 0 (positions_sort over max(cluster, 0)), inflating
+    the arrival ranks of genuine cluster-0 traffic and skewing rr /
+    least-request offsets away from the fused kernel and the admit_ref
+    oracle.  Cluster 0 traffic interleaved with NO_ROUTE rows must now
+    match admit_ref bit-exactly."""
+    from repro.kernels import ref
+
+    # cluster id 0 gets the policy under test; svc0 has NO wildcard rule, so
+    # a field-0 miss is NO_ROUTE
+    services = [ServiceConfig("svc0", rules=[
+        Rule(field=0, value="v2", cluster="cl0")])]
+    clusters = [Cluster("cl0", endpoints=[0, 1, 2], policy=policy)]
+    st, _ = build_state(services, clusters)
+    # uniform loads: staged least-request (rank-th least loaded) and the
+    # oracle's sequential water-filling agree exactly on this start state
+    R = 24
+    svc = jnp.zeros((R,), jnp.int32)
+    feats = jnp.zeros((R, 8), jnp.int32)
+    hit = jnp.arange(R) % 2 == 0               # every other row is NO_ROUTE
+    feats = feats.at[:, 0].set(jnp.where(hit, fnv1a("v2"), fnv1a("nope")))
+    free = jnp.ones((3, 16), bool)
+
+    cl = router.match_cluster(st, svc, feats)
+    sel, st2 = policies.select(st, cl, jax.random.PRNGKey(0))
+    a = request_map.allocate_slots(sel.instance, free)
+
+    want = ref.admit_ref(jnp.arange(R, dtype=jnp.int32), svc, feats,
+                         jnp.ones((R,), jnp.int32), st, free,
+                         jnp.zeros((R,), jnp.int32),
+                         jnp.zeros((R, 64), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(sel.endpoint),
+                                  np.asarray(want.endpoint))
+    np.testing.assert_array_equal(np.asarray(sel.instance),
+                                  np.asarray(want.instance))
+    np.testing.assert_array_equal(np.asarray(a.slot), np.asarray(want.slot))
+    np.testing.assert_array_equal(np.asarray(a.ok),
+                                  np.asarray(want.ok).astype(bool))
+    np.testing.assert_array_equal(np.asarray(st2.ep_load),
+                                  np.asarray(want.ep_load))
+    np.testing.assert_array_equal(np.asarray(st2.rr_cursor),
+                                  np.asarray(want.rr_cursor))
+
+
+def test_staged_empty_cluster_unroutable_matches_oracle():
+    """A matched cluster with zero endpoints (delta refresh removed the
+    last one) must be unroutable on the staged path — endpoint/instance -1
+    and no load touched — exactly as in _admit_kernel and admit_ref."""
+    from repro.kernels import ref
+
+    services = [ServiceConfig("svc0", rules=[Rule(0, None, "empty")]),
+                ServiceConfig("svc1", rules=[Rule(0, None, "full")])]
+    clusters = [Cluster("empty", endpoints=[], policy=POLICY_RR),
+                Cluster("full", endpoints=[0, 1], policy=POLICY_RR)]
+    st, _ = build_state(services, clusters)
+    R = 8
+    svc = (jnp.arange(R) % 2).astype(jnp.int32)    # alternate empty/full
+    feats = jnp.zeros((R, 8), jnp.int32)
+    free = jnp.ones((2, 8), bool)
+
+    cl = router.match_cluster(st, svc, feats)
+    sel, st2 = policies.select(st, cl, jax.random.PRNGKey(0))
+    want = ref.admit_ref(jnp.arange(R, dtype=jnp.int32), svc, feats,
+                         jnp.ones((R,), jnp.int32), st, free,
+                         jnp.zeros((R,), jnp.int32),
+                         jnp.zeros((R, 64), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(sel.endpoint),
+                                  np.asarray(want.endpoint))
+    np.testing.assert_array_equal(np.asarray(sel.instance),
+                                  np.asarray(want.instance))
+    np.testing.assert_array_equal(np.asarray(st2.ep_load),
+                                  np.asarray(want.ep_load))
+    np.testing.assert_array_equal(np.asarray(st2.rr_cursor),
+                                  np.asarray(want.rr_cursor))
+
+
+def test_host_router_weighted_zero_weights_uniform():
+    """A weighted cluster whose weights sum to 0 must fall back to uniform
+    selection instead of NaN-crashing np.random.choice."""
+    from repro.core import sidecar
+
+    services = [ServiceConfig("s", rules=[Rule(0, None, "w")])]
+    clusters = [Cluster("w", endpoints=[0, 1], policy=POLICY_WEIGHTED,
+                        weights=[0.0, 0.0])]
+    st, ids = build_state(services, clusters)
+    hr = sidecar.HostRouter(st)
+    picks = {hr.select(ids["clusters"]["w"])[0] for _ in range(32)}
+    assert picks <= {0, 1} and picks            # valid endpoints, no crash
+    assert int(hr.t.ep_load[:2].sum()) == 32    # every pick counted
+
+
 def test_weighted_policy_distribution(state):
     st, ids = state
     ci = ids["clusters"]["stable"]

@@ -325,6 +325,199 @@ def test_admit_table_blockspec_binds_2d():
 
 
 # --------------------------------------------------------------------------- #
+# fused admit + pool commit (the full in-kernel connect path)
+# --------------------------------------------------------------------------- #
+
+
+def _pool_arrays(I: int, C: int, seed: int, active_p: float = 0.5):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    active = jax.random.bernoulli(ks[0], active_p, (I, C))
+    return (jnp.where(active, jax.random.randint(ks[1], (I, C), 1000, 2000),
+                      -1).astype(jnp.int32),
+            jnp.where(active, jax.random.randint(ks[2], (I, C), 0, 8),
+                      -1).astype(jnp.int32),
+            jax.random.randint(ks[3], (I, C), 0, 4, dtype=jnp.int32),
+            jax.random.randint(ks[4], (I, C), 0, 9, dtype=jnp.int32),
+            jax.random.randint(ks[5], (I, C), 0, 97, dtype=jnp.int32),
+            active)
+
+
+@pytest.mark.parametrize("R,block_r", [(64, 64), (128, 32), (256, 64)])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_admit_commit_matches_sequential_oracle(R, block_r, seed):
+    """Property cross-check of the pool-commit stage: all four policies,
+    NO_ROUTE rows, padding rows, held requests, partially occupied pools,
+    multi-tile pool writeback carry."""
+    st, _, _ = _admit_state(seed=seed + 10)
+    rid, svc, feats, msgb, rnd, gum = _admit_batch(R, seed)
+    tok = jax.random.randint(jax.random.PRNGKey(seed + 30), (R,), 0, 97,
+                             dtype=jnp.int32)
+    I, C = 8, 4                                # small pool → forces held
+    pool = _pool_arrays(I, C, seed + 40)
+    got = ops.admit_commit(rid, svc, feats, msgb, tok, st, *pool, rnd, gum,
+                           block_r=block_r)
+    want = ref.admit_commit_ref(rid, svc, feats, msgb, tok, st, *pool,
+                                rnd, gum)
+    _assert_admit_matches(got, want)
+    assert int(np.asarray(got.no_route)) > 0
+    assert int(np.asarray(got.held)) > 0
+    assert int(np.asarray(got.ok).sum()) > 0
+    # pre-existing connections survive the batch untouched
+    pre = np.asarray(pool[5])
+    np.testing.assert_array_equal(np.asarray(got.pool_req_id)[pre],
+                                  np.asarray(pool[0])[pre])
+
+
+def test_admit_commit_pool_matches_staged_scatter():
+    """Fused pool commit ≡ the staged scatter_to_pool chain on the same
+    AdmitResult (the 6-scatter path the kernel replaced)."""
+    from repro.core import request_map
+    st, _, _ = _admit_state(seed=5)
+    R = 96
+    rid, svc, feats, msgb, rnd, gum = _admit_batch(R, seed=11)
+    tok = jax.random.randint(jax.random.PRNGKey(12), (R,), 0, 97,
+                             dtype=jnp.int32)
+    pool = _pool_arrays(8, 4, seed=13)
+    got = ops.admit_commit(rid, svc, feats, msgb, tok, st, *pool, rnd, gum,
+                           block_r=32)
+    base = ops.admit(rid, svc, feats, msgb, st, ~pool[5], rnd, gum,
+                     block_r=32)
+    for name in base._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                      np.asarray(getattr(base, name)),
+                                      err_msg=f"admit field {name!r}")
+    assign = request_map.SlotAssignment(base.instance, base.slot, base.ok > 0)
+    staged = [request_map.scatter_to_pool(pool[0], assign, rid),
+              request_map.scatter_to_pool(pool[1], assign, base.endpoint),
+              request_map.scatter_to_pool(pool[2], assign, svc),
+              request_map.scatter_to_pool(pool[3], assign,
+                                          jnp.zeros_like(rid)),
+              request_map.scatter_to_pool(pool[4], assign, tok),
+              request_map.scatter_to_pool(pool[5], assign,
+                                          jnp.ones_like(rid) > 0)]
+    fused = [got.pool_req_id, got.pool_endpoint, got.pool_svc,
+             got.pool_length, got.pool_token, got.pool_active > 0]
+    for f, s, name in zip(fused, staged, ("req_id", "endpoint", "svc",
+                                          "length", "token", "active")):
+        np.testing.assert_array_equal(np.asarray(f), np.asarray(s),
+                                      err_msg=f"pool field {name!r}")
+
+
+def test_admit_integer_free_mask_and_rogue_svc():
+    """Contract edges: an integer free_mask cell > 1 still means one free
+    slot (no double-counted capacity), and svc >= MAX_SERVICES is dropped
+    from the per-service metrics (the staged scatter's mode='drop') instead
+    of being folded into service S-1 — both bit-exact vs the oracle."""
+    from repro.core.routing_table import MAX_SERVICES
+    # every service (incl. S-1, the clip target) routes to the pool, so the
+    # rogue id really gets admitted and only the metric accounting differs
+    services = [ServiceConfig(f"s{i}", rules=[Rule(0, None, "pool")])
+                for i in range(MAX_SERVICES)]
+    clusters = [Cluster("pool", endpoints=[0], policy=POLICY_RR)]
+    st, _ = build_state(services, clusters)
+    R = 4
+    rid = jnp.arange(R, dtype=jnp.int32)
+    # one rogue service id beyond the table (clips to S-1 for routing)
+    svc = jnp.array([0, MAX_SERVICES + 3, 0, 0], jnp.int32)
+    z = jnp.zeros((R,), jnp.int32)
+    gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
+    free = jnp.array([[0, 2, 0, 3]], jnp.int32)    # 2 free slots, not 5
+    got = ops.admit(rid, svc, jnp.zeros((R, 8), jnp.int32), z + 7, st,
+                    free, z, gum)
+    want = ref.admit_ref(rid, svc, jnp.zeros((R, 8), jnp.int32), z + 7, st,
+                         free, z, gum)
+    _assert_admit_matches(got, want)
+    assert int(np.asarray(got.ok).sum()) == 2      # capacity is 2, not 5
+    assert list(np.asarray(got.slot)[:2]) == [1, 3]
+    # rogue-svc request admitted but not counted under any service
+    assert int(np.asarray(got.svc_requests).sum()) == 1
+    assert int(np.asarray(got.svc_tx_bytes).sum()) == 7
+
+
+def test_admit_commit_empty_batch_pool_passthrough():
+    st, _, _ = _admit_state(seed=6)
+    z = jnp.zeros((0,), jnp.int32)
+    pool = _pool_arrays(8, 4, seed=14)
+    got = ops.admit_commit(z, z, jnp.zeros((0, 8), jnp.int32), z, z, st,
+                           *pool, z,
+                           jnp.zeros((0, MAX_EPS_PER_CLUSTER), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(got.pool_req_id),
+                                  np.asarray(pool[0]))
+    np.testing.assert_array_equal(np.asarray(got.pool_active),
+                                  np.asarray(pool[5]).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(got.ep_load),
+                                  np.asarray(st.ep_load))
+
+
+# --------------------------------------------------------------------------- #
+# fused completion kernel (the in-kernel close path)
+# --------------------------------------------------------------------------- #
+
+
+def _complete_case(I, C, seed, eos=1, active_p=0.6):
+    from repro.core.routing_table import MAX_ENDPOINTS, MAX_SERVICES
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    pool = _pool_arrays(I, C, seed, active_p=active_p)
+    # endpoints of active slots must carry load to release
+    load = jax.random.randint(ks[6], (MAX_ENDPOINTS,), 3, 9, dtype=jnp.int32)
+    rx = jax.random.randint(ks[7], (MAX_SERVICES,), 0, 100, dtype=jnp.int32)
+    # ~25% of lanes emit EOS this step; lengths near max force length-done
+    nxt = jnp.where(jax.random.bernoulli(ks[0], 0.25, (I, C)), eos,
+                    jax.random.randint(ks[1], (I, C), 2, 97)).astype(jnp.int32)
+    return pool, nxt, load, rx
+
+
+@pytest.mark.parametrize("I,C,block_i", [(2, 8, 2), (8, 16, 2), (8, 64, 8)])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_complete_matches_sequential_oracle(I, C, block_i, seed):
+    """Property cross-check: EOS and length-budget completion, inactive
+    lanes, load release, per-service rx metrics, multi-tile scratch carry."""
+    pool, nxt, load, rx = _complete_case(I, C, seed)
+    # mix of lengths: some hit the max_len budget regardless of token
+    max_len = 8
+    got = ops.complete(*pool, nxt, load, rx, eos=1, max_len=max_len,
+                       block_i=block_i)
+    want = ref.complete_ref(*pool, nxt, load, rx, eos=1, max_len=max_len)
+    for name in got._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                      np.asarray(getattr(want, name)),
+                                      err_msg=f"complete field {name!r}")
+    assert int(np.asarray(got.done).sum()) > 0
+    # inactive lanes never touch counters/metrics
+    inact = ~np.asarray(pool[5])
+    np.testing.assert_array_equal(np.asarray(got.done)[inact], 0)
+
+
+def test_complete_all_inactive_is_noop():
+    from repro.core.routing_table import MAX_ENDPOINTS, MAX_SERVICES
+    I, C = 4, 8
+    pool = (jnp.full((I, C), -1, jnp.int32), jnp.full((I, C), -1, jnp.int32),
+            jnp.zeros((I, C), jnp.int32), jnp.zeros((I, C), jnp.int32),
+            jnp.zeros((I, C), jnp.int32), jnp.zeros((I, C), bool))
+    load = jnp.arange(MAX_ENDPOINTS, dtype=jnp.int32)
+    rx = jnp.arange(MAX_SERVICES, dtype=jnp.int32)
+    nxt = jnp.ones((I, C), jnp.int32)          # EOS everywhere — but inactive
+    got = ops.complete(*pool, nxt, load, rx, eos=1, max_len=4)
+    assert int(np.asarray(got.done).sum()) == 0
+    np.testing.assert_array_equal(np.asarray(got.ep_load), np.asarray(load))
+    np.testing.assert_array_equal(np.asarray(got.rx_bytes), np.asarray(rx))
+    np.testing.assert_array_equal(np.asarray(got.token),
+                                  np.asarray(pool[4]))
+
+
+def test_complete_releases_load_exactly_once():
+    """Every done slot with a real endpoint decrements exactly one counter
+    (sum check across a multi-tile grid)."""
+    I, C = 8, 8
+    pool, nxt, load, rx = _complete_case(I, C, seed=7, active_p=0.9)
+    got = ops.complete(*pool, nxt, load, rx, eos=1, max_len=6, block_i=2)
+    done = np.asarray(got.done) > 0
+    eps = np.asarray(pool[1])
+    n_rel = int(((eps >= 0) & done).sum())
+    assert int(np.asarray(load).sum() - np.asarray(got.ep_load).sum()) == n_rel
+
+
+# --------------------------------------------------------------------------- #
 # relay slot assignment
 # --------------------------------------------------------------------------- #
 

@@ -1,0 +1,124 @@
+"""Host serving-driver tests: drop accounting, ragged and empty admission
+batches end-to-end through ServeLoop.tick (the lax.cond skip path), and
+pool/metrics invariants across a full drain."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import interpose
+from repro.core.routing_table import (Cluster, POLICY_RR, Rule, ServiceConfig,
+                                      build_state)
+from repro.models import model as M
+from repro.runtime.serve_loop import Request, ServeLoop
+
+I, C = 2, 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_config(get_config("xlb-service-model"))
+    params = M.init_params(cfg, jax.random.PRNGKey(7), dtype=jnp.float32)
+    return cfg, params
+
+
+def _routing(require_match: bool):
+    """require_match=True: the only rule matches field0 == hash('v2'), so a
+    request without that header is NO_ROUTE forever."""
+    services = [ServiceConfig("svc", rules=[
+        Rule(0, "v2" if require_match else None, "pool")])]
+    clusters = [Cluster("pool", endpoints=list(range(I)), policy=POLICY_RR)]
+    routing, _ = build_state(services, clusters)
+    return routing
+
+
+def _loop(cfg, params, *, require_match=False, admit_batch=8, max_len=5):
+    eng = interpose.Engine(cfg, I, C, max_len)
+    return ServeLoop(eng, params, _routing(require_match),
+                     admit_batch=admit_batch)
+
+
+def _req(rid, headers=None):
+    return Request(req_id=rid, service=0, headers=headers or {},
+                   prompt_token=3 + rid % 7)
+
+
+def test_drain_accounts_for_dropped_requests(setup):
+    """Requests that exhaust their 64 retries land on ``dropped`` — after a
+    drain, submitted == done + dropped + queued + inflight."""
+    cfg, params = setup
+    loop = _loop(cfg, params, require_match=True)
+    routable = [_req(r, {"path": "v2"}) for r in range(3)]
+    unroutable = [_req(100 + r) for r in range(2)]     # no matching header
+    for r in routable + unroutable:
+        loop.submit(r)
+    loop.drain(max_ticks=200)
+    n_sub = len(routable) + len(unroutable)
+    assert n_sub == (len(loop.done) + len(loop.dropped) + len(loop.queue)
+                     + len(loop.inflight))
+    assert {r.req_id for r in loop.done} == {0, 1, 2}
+    assert {r.req_id for r in loop.dropped} == {100, 101}
+    assert all(r.retries == 64 for r in loop.dropped)
+    assert all(r.t_done > 0 for r in loop.dropped)     # latency accounting
+    assert int(np.asarray(loop.state.metrics.no_route_match)) > 0
+
+
+def test_ragged_admission_batch_invariants(setup):
+    """admit_batch larger than the queue: padding rows must admit nothing,
+    touch no counters, and the real rows must all land in pool slots."""
+    cfg, params = setup
+    loop = _loop(cfg, params, admit_batch=8)
+    for r in range(3):                                 # 3 real + 5 padding
+        loop.submit(_req(r))
+    loop.tick()
+    st = loop.state
+    assert int(np.asarray(st.pool.active).sum()) == 3
+    assert int(np.asarray(st.metrics.requests).sum()) == 3
+    assert int(np.asarray(st.metrics.no_route_match)) == 0
+    assert int(np.asarray(st.metrics.overflow)) == 0
+    # load counters track exactly the live connections
+    assert int(np.asarray(st.routing.ep_load).sum()) == 3
+    pool_ids = set(np.asarray(st.pool.req_id)[np.asarray(st.pool.active)])
+    assert pool_ids == {0, 1, 2}
+
+
+def test_empty_admission_batch_skips_admit(setup):
+    """An all-padding batch takes make_jitted's lax.cond skip path: decode
+    continues, admission state (metrics, cursors, key-driven counters) is
+    untouched."""
+    cfg, params = setup
+    loop = _loop(cfg, params, max_len=16)              # no completions yet
+    for r in range(2):
+        loop.submit(_req(r))
+    loop.tick()
+    st1 = loop.state
+    req1 = int(np.asarray(st1.metrics.requests).sum())
+    cur1 = np.asarray(st1.routing.rr_cursor).copy()
+    loop.tick()                                        # queue empty now
+    st2 = loop.state
+    assert int(np.asarray(st2.metrics.requests).sum()) == req1 == 2
+    np.testing.assert_array_equal(np.asarray(st2.routing.rr_cursor), cur1)
+    assert int(np.asarray(st2.pool.active).sum()) == 2
+    # decode still advanced every active lane
+    act = np.asarray(st2.pool.active)
+    assert (np.asarray(st2.pool.length)[act]
+            > np.asarray(st1.pool.length)[act]).all()
+
+
+def test_drain_releases_all_load(setup):
+    """After a clean drain every connection closed: pools empty, endpoint
+    load counters fully released, rx bytes strictly positive."""
+    cfg, params = setup
+    loop = _loop(cfg, params, max_len=4)
+    for r in range(5):                                 # 5 reqs through 6 slots
+        loop.submit(_req(r))
+    done = loop.drain(max_ticks=100)
+    assert len(done) == 5 and not loop.dropped
+    st = loop.state
+    assert int(np.asarray(st.pool.active).sum()) == 0
+    np.testing.assert_array_equal(np.asarray(st.routing.ep_load),
+                                  np.zeros_like(np.asarray(
+                                      st.routing.ep_load)))
+    assert int(np.asarray(st.metrics.rx_bytes).sum()) > 0
