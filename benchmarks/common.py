@@ -7,22 +7,26 @@ along the graph's call chain: when a request completes at hop i it is
 enqueued at hop i+1 (the host moves an opaque token id — never inspecting
 payloads for XLB; the sidecar baselines route on the host per hop, paying
 the proxy costs they pay in the paper).
+
+All three architectures run through ONE ``Service`` wrapper built on the
+``Balancer`` protocol (core/balancer.py) with routing from a per-fleet
+``ControlPlane`` — the benchmarks never branch on the mode.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ServiceGraph, get_config, smoke_config
-from repro.core import interpose, sidecar
+from repro.core.balancer import RequestBatch, make_balancer
+from repro.core.control import ControlPlane
 from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST, Rule,
-                                      ServiceConfig, build_state)
+                                      ServiceConfig)
 from repro.models import model as M
 
 CFG = smoke_config(get_config("xlb-service-model"))
@@ -30,21 +34,24 @@ KEY = jax.random.PRNGKey(42)
 PARAMS = M.init_params(CFG, KEY, dtype=jnp.float32)
 
 
+def build_cp(n_instances: int) -> ControlPlane:
+    return ControlPlane(
+        [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
+        [Cluster("pool", endpoints=list(range(n_instances)),
+                 policy=POLICY_LEAST_REQUEST)])
+
+
 def build_routing(n_instances: int):
-    services = [ServiceConfig("svc", rules=[Rule(0, None, "pool")])]
-    clusters = [Cluster("pool", endpoints=list(range(n_instances)),
-                        policy=POLICY_LEAST_REQUEST)]
-    st, _ = build_state(services, clusters)
-    return st
+    return build_cp(n_instances).snapshot()
 
 
-def request_batch(req_ids, pad_to: int):
+def request_batch(req_ids, pad_to: int) -> RequestBatch:
     rid = np.full((pad_to,), -1, np.int32)
     tok = np.zeros((pad_to,), np.int32)
     n = min(len(req_ids), pad_to)
     rid[:n] = req_ids[:n]
     tok[:n] = 3 + (np.asarray(req_ids[:n]) % (CFG.vocab - 3))
-    return interpose.RequestBatch(
+    return RequestBatch(
         req_id=jnp.asarray(rid), svc=jnp.zeros((pad_to,), jnp.int32),
         features=jnp.zeros((pad_to, 8), jnp.int32), token=jnp.asarray(tok),
         msg_bytes=jnp.full((pad_to,), 128, jnp.int32))
@@ -57,20 +64,33 @@ class HopStats:
     wall_s: float = 0.0
 
 
-class XLBService:
-    """One service fleet behind the in-graph engine."""
+class Service:
+    """One service fleet behind any Balancer (mode: xlb | istio | cilium)."""
 
-    def __init__(self, n_instances: int, slots: int, tokens_per_req: int,
-                 admit_batch: int = 16):
-        self.eng = interpose.Engine(CFG, n_instances, slots,
-                                    max_len=tokens_per_req + 1)
-        self.state = self.eng.init_state(build_routing(n_instances),
+    def __init__(self, mode: str, n_instances: int, slots: int,
+                 tokens_per_req: int, admit_batch: int = 16):
+        self.eng = make_balancer(mode, CFG, n_instances, slots,
+                                 max_len=tokens_per_req + 1)
+        self.cp = build_cp(n_instances)
+        self.state = self.eng.init_state(self.cp.snapshot(),
                                          dtype=jnp.float32)
+        self.cp.attach(self)
         self.serve = self.eng.make_jitted(donate=False)
         self.admit_batch = admit_batch
         self.queue: list[int] = []
+        self.dropped: list[int] = []        # gave up after max retries
+        self._retries: dict[int, int] = {}
         self.stats = HopStats()
 
+    # control-plane consumer hooks (cp.attach) ------------------------- #
+    @property
+    def routing(self):
+        return self.eng.get_routing(self.state)
+
+    def apply_refresh(self, plan):
+        self.state = self.eng.apply_refresh(self.state, plan)
+
+    # ------------------------------------------------------------------ #
     def submit(self, req_ids):
         self.queue.extend(int(r) for r in req_ids)
 
@@ -88,57 +108,35 @@ class XLBService:
         ids = np.asarray(out["req_id"])          # ids serviced this tick
         finished = [int(x) for x in ids[done & (ids >= 0)]]
         self.stats.completed += len(finished)
+        # held / unroutable arrivals re-queue (uniform across engines) up
+        # to the same 64-retry budget ServeLoop uses; past it they land on
+        # ``dropped`` so a misconfigured bench fails visibly instead of
+        # spinning to max_ticks
+        serviced = set(int(x) for x in ids[ids >= 0])
+        retry = []
+        for r in take:
+            if r in serviced:
+                self._retries.pop(r, None)
+                continue
+            n = self._retries.get(r, 0) + 1
+            if n < 64:
+                self._retries[r] = n
+                retry.append(r)
+            else:
+                self._retries.pop(r, None)
+                self.dropped.append(r)
+        self.queue = retry + self.queue
         return finished
 
     @property
     def busy(self) -> bool:
-        return bool(self.queue) or bool(np.asarray(
-            self.state.pool.active).any())
-
-
-class SidecarService:
-    """One service fleet behind a host-interposed proxy (istio|cilium)."""
-
-    def __init__(self, n_instances: int, slots: int, tokens_per_req: int,
-                 mode: str, admit_batch: int = 16):
-        self.eng = sidecar.SidecarEngine(CFG, n_instances, slots,
-                                         max_len=tokens_per_req + 1,
-                                         routing=build_routing(n_instances),
-                                         mode=mode)
-        self.admit_batch = admit_batch
-        self.queue: list[int] = []
-        self.stats = HopStats()
-
-    def submit(self, req_ids):
-        self.queue.extend(int(r) for r in req_ids)
-
-    def tick(self) -> list[int]:
-        take = self.queue[: self.admit_batch]
-        self.queue = self.queue[self.admit_batch:]
-        t0 = time.perf_counter()
-        if take:
-            self.eng.admit(request_batch(take, self.admit_batch))
-        before_req = self.eng.pool_req.copy()
-        before_act = self.eng.pool_active.copy()
-        self.eng.step(PARAMS)
-        self.stats.wall_s += time.perf_counter() - t0
-        self.stats.ticks += 1
-        now_inactive = before_act & ~self.eng.pool_active
-        finished = [int(r) for r in before_req[now_inactive] if r >= 0]
-        self.stats.completed += len(finished)
-        return finished
-
-    @property
-    def busy(self) -> bool:
-        return bool(self.queue) or bool(self.eng.pool_active.any())
+        return bool(self.queue) or bool(
+            np.asarray(self.state.pool.active).any())
 
 
 def make_service(mode: str, n_instances: int, slots: int,
-                 tokens_per_req: int, admit_batch: int = 16):
-    if mode == "xlb":
-        return XLBService(n_instances, slots, tokens_per_req, admit_batch)
-    return SidecarService(n_instances, slots, tokens_per_req, mode,
-                          admit_batch)
+                 tokens_per_req: int, admit_batch: int = 16) -> Service:
+    return Service(mode, n_instances, slots, tokens_per_req, admit_batch)
 
 
 # --------------------------------------------------------------------------- #

@@ -203,7 +203,7 @@ def _measure_lb_fraction() -> dict:
     import jax.numpy as jnp
     from benchmarks import common
     from repro.core import policies, router
-    from repro.core.interpose import PoolState
+    from repro.core.balancer import PoolState, RequestBatch
     from repro.core.routing_table import MAX_EPS_PER_CLUSTER
     from repro.kernels import ops
 
@@ -211,9 +211,9 @@ def _measure_lb_fraction() -> dict:
     R = 64
     svc = jnp.zeros((R,), jnp.int32)
     feats = jnp.zeros((R, 8), jnp.int32)
-    rid = jnp.arange(R, dtype=jnp.int32)
-    msgb = jnp.full((R,), 128, jnp.int32)
-    tok = jnp.full((R,), 3, jnp.int32)
+    reqs = RequestBatch(req_id=jnp.arange(R, dtype=jnp.int32), svc=svc,
+                        features=feats, token=jnp.full((R,), 3, jnp.int32),
+                        msg_bytes=jnp.full((R,), 128, jnp.int32))
     pool = PoolState.init(4, 16)
 
     @jax.jit
@@ -221,9 +221,7 @@ def _measure_lb_fraction() -> dict:
         kr, kw = jax.random.split(key)
         rnd = jax.random.randint(kr, (R,), 0, 1 << 30, dtype=jnp.int32)
         gum = jax.random.gumbel(kw, (R, MAX_EPS_PER_CLUSTER), jnp.float32)
-        res = ops.admit_commit(rid, svc, feats, msgb, tok, st, pool.req_id,
-                               pool.endpoint, pool.svc, pool.length,
-                               pool.token, pool.active, rnd, gum)
+        res = ops.admit_commit(reqs, st, pool, rnd, gum)
         return res.endpoint, st._replace(ep_load=res.ep_load,
                                          rr_cursor=res.rr_cursor)
 
@@ -276,6 +274,7 @@ def bench_admit():
     import jax.numpy as jnp
     from benchmarks import common
     from repro.core import policies, request_map, router
+    from repro.core.balancer import RequestBatch
     from repro.core.routing_table import MAX_EPS_PER_CLUSTER
     from repro.kernels import ops
 
@@ -286,8 +285,9 @@ def bench_admit():
     for R in (64, 256, 1024, 4096):
         svc = jnp.zeros((R,), jnp.int32)
         feats = jnp.zeros((R, 8), jnp.int32)
-        rid = jnp.arange(R, dtype=jnp.int32)
-        msgb = jnp.full((R,), 128, jnp.int32)
+        reqs = RequestBatch(req_id=jnp.arange(R, dtype=jnp.int32), svc=svc,
+                            features=feats, token=jnp.zeros((R,), jnp.int32),
+                            msg_bytes=jnp.full((R,), 128, jnp.int32))
 
         @jax.jit
         def staged(st, key):
@@ -302,7 +302,7 @@ def bench_admit():
             rnd = jax.random.randint(kr, (R,), 0, 1 << 30, dtype=jnp.int32)
             gum = jax.random.gumbel(kw, (R, MAX_EPS_PER_CLUSTER),
                                     jnp.float32)
-            res = ops.admit(rid, svc, feats, msgb, st, free, rnd, gum)
+            res = ops.admit(reqs, st, free, rnd, gum)
             return res.slot, st._replace(ep_load=res.ep_load,
                                          rr_cursor=res.rr_cursor)
 
@@ -332,6 +332,7 @@ def bench_step():
     import jax
     import jax.numpy as jnp
     from repro.core import policies, routing_table
+    from repro.core.balancer import PoolState
     from repro.kernels import ops
 
     rstate = routing_table.empty_state()
@@ -354,10 +355,10 @@ def bench_step():
 
         @jax.jit
         def fused(preq, pep, psvc, plen, ptok, active, nxt, load, rx):
-            r = ops.complete(preq, pep, psvc, plen, ptok, active, nxt, load,
-                             rx, eos=eos, max_len=max_len)
-            return (r.req_id, r.endpoint, r.length, r.token, r.active,
-                    r.ep_load, r.rx_bytes)
+            r = ops.complete(PoolState(preq, pep, psvc, plen, ptok, active),
+                             nxt, load, rx, eos=eos, max_len=max_len)
+            return (r.pool.req_id, r.pool.endpoint, r.pool.length,
+                    r.pool.token, r.pool.active, r.ep_load, r.rx_bytes)
 
         @jax.jit
         def staged(preq, pep, psvc, plen, ptok, active, nxt, load, rx):
@@ -399,9 +400,10 @@ def bench_step():
 
 
 def check_gates(remeasured: bool = False) -> None:
-    """Regression gate (ROADMAP): the fused admission kernel must hold
+    """Regression gates (ROADMAP): the fused admission kernel must hold
     speedup >= 1.3 over the staged chain at batch >= 256, per the last
-    recorded BENCH_admit.json."""
+    recorded BENCH_admit.json — and all three engines must still drive the
+    serving launcher end-to-end through the Balancer protocol."""
     if not remeasured:
         print("# check: gating the last recorded BENCH_admit.json "
               "(admit not re-measured this run)", flush=True)
@@ -421,6 +423,26 @@ def check_gates(remeasured: bool = False) -> None:
           + ", ".join(f"{s:.2f}x@{b}" for b, s in
                       zip(rec["batch"], rec["speedup"]) if b >= 256),
           flush=True)
+    smoke_engines()
+
+
+def smoke_engines() -> None:
+    """Protocol-drift gate: boot ``launch/serve.py`` in-process for every
+    engine kind at a tiny config and require full completion.  Catches
+    Balancer/ServeLoop contract breaks that per-module unit tests can't
+    see (a wrong ``out`` key, a state type that stops round-tripping)."""
+    from repro.core.balancer import ENGINE_KINDS
+    from repro.launch import serve
+    n_req = 4
+    for kind in ENGINE_KINDS:
+        done = serve.main(["--engine", kind, "--instances", "2",
+                           "--slots", "2", "--requests", str(n_req),
+                           "--max-len", "6"])
+        if done != n_req:
+            sys.exit(f"check: engine smoke FAILED — {kind} completed "
+                     f"{done}/{n_req} requests")
+        print(f"# check: engine smoke OK — {kind} {done}/{n_req}",
+              flush=True)
 
 
 BENCHES = {

@@ -1,22 +1,22 @@
 """Quickstart: the XLB in-graph L7 load balancer in ~60 lines.
 
 Builds a canary-routing config (the paper's §5.1 example: one virtual IP,
-v2-cookie users go to the canary pool), compiles the serving engine, pushes
-requests through it, then performs a *delta refresh* (add an endpoint) with
-zero recompilation.
+v2-cookie users go to the canary pool) through the ControlPlane, compiles
+the serving engine, pushes requests through it, then commits a *delta
+refresh* transaction (grow the stable pool + shift a weight) with zero
+recompilation and a single version bump.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.core import delta, interpose
+from repro.core.balancer import make_balancer
+from repro.core.control import ControlPlane
 from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST,
-                                      POLICY_RR, Rule, ServiceConfig,
-                                      build_state)
+                                      POLICY_RR, Rule, ServiceConfig)
 from repro.models import model as M
 from repro.runtime.serve_loop import Request, ServeLoop
 
@@ -24,8 +24,9 @@ from repro.runtime.serve_loop import Request, ServeLoop
 cfg = smoke_config(get_config("xlb-service-model"))
 params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
 
-# 2. control plane: Envoy-style config → nested-map RoutingState
-routing, ids = build_state(
+# 2. control plane: Envoy-style config → nested-map RoutingState, owned by
+# a ControlPlane (names, slot allocation, transactions — the Go daemon)
+cp = ControlPlane(
     services=[ServiceConfig("frontend", rules=[
         Rule(field=2, value="v2", cluster="canary"),      # version header
         Rule(field=2, value=None, cluster="stable"),      # wildcard
@@ -37,30 +38,34 @@ routing, ids = build_state(
     ])
 
 # 3. data plane: 4 instance lanes × 4 slots, admission+decode in ONE program
-engine = interpose.Engine(cfg, n_instances=4, slots=4, max_len=12)
-loop = ServeLoop(engine, params, routing)
+engine = make_balancer("xlb", cfg, n_instances=4, slots=4, max_len=12)
+loop = ServeLoop(engine, params, cp)       # attaches the loop to cp
 
 for i in range(8):
     loop.submit(Request(req_id=i, service=0,
                         headers={"path": "/checkout",
                                  "version": "v2" if i % 4 == 0 else "v1"},
                         prompt_token=3 + i))
-done = loop.drain()
-print(f"completed {len(done)} requests")
-for r in sorted(done, key=lambda r: r.req_id)[:4]:
+rep = loop.drain()
+print(f"completed {len(rep.done)} requests "
+      f"(queued={rep.queued} inflight={rep.inflight})")
+for r in sorted(rep.done, key=lambda r: r.req_id)[:4]:
     print(f"  req {r.req_id} ({r.headers['version']}): tokens={r.tokens}")
 
 m = loop.state.metrics
 print("traffic metrics: requests =", int(m.requests.sum()),
       " no_route =", int(m.no_route_match), " overflow =", int(m.overflow))
 
-# 4. delta refresh: grow the stable pool while the datapath keeps serving —
-# same pytree shapes, so the compiled step is reused (no recompilation).
-st2 = delta.add_endpoint(loop.state.routing, ids["clusters"]["stable"],
-                         ep_slot=4, instance=3)
-loop.state = loop.state._replace(routing=st2)
+# 4. delta refresh: one transaction grows the stable pool and re-weights the
+# canary while the datapath keeps serving — same pytree shapes, so the
+# compiled step is reused (no recompilation), and the whole batch lands with
+# a single version bump.
+with cp.transaction():
+    cp.add_endpoint("stable", instance=3)
+    cp.set_weight("canary", instance=0, weight=2.0)
 loop.submit(Request(req_id=100, service=0, headers={"version": "v1"},
                     prompt_token=9))
-done = loop.drain()
-print(f"after delta refresh: completed {len(done)} total, "
-      f"routing version = {int(st2.version)}")
+rep = loop.drain()
+print(f"after delta refresh: completed {len(rep.done)} total, "
+      f"routing version = {int(loop.routing.version)} "
+      f"(control plane commit #{cp.version})")

@@ -1,8 +1,9 @@
 """Serve a microservice application graph (bookinfo) behind XLB.
 
-One in-graph engine per service; requests fan out along the call graph.
-Prints per-hop latency and the end-to-end comparison vs the sidecar
-baselines — the paper's Fig. 11 in miniature.
+One engine per service; requests fan out along the call graph.  All three
+architectures run through the same Balancer protocol + ControlPlane-built
+routing (benchmarks/common.py) — the comparison below is the paper's
+Fig. 11 in miniature with zero per-engine glue.
 
 Run:  PYTHONPATH=src python examples/serve_cluster.py
 """

@@ -1,11 +1,15 @@
 """XLB core: the paper's contribution as a composable JAX module.
 
   routing_table  nested eBPF-map state (map-in-map → index-linked arrays)
+  control        ControlPlane: named, transactional config updates (the
+                 userspace daemon — directory, slot allocator, drain/reap)
+  balancer       the Balancer protocol all three engines implement, plus
+                 the shared wire types (RequestBatch, PoolState)
   router         content-based rule matching (filter/route managers)
   policies       LB algorithms (rr / random / least-request / weighted)
   relay          socket relay → scatter / all-to-all payload redirection
   request_map    stream-id rewrite + response re-ordering
-  delta          delta refresh (bottom-up add, top-down delete)
+  delta          raw slot-index delta refresh (ControlPlane's low level)
   interpose      the in-graph serving engine (admit + step in one program)
   sidecar        Istio/Cilium-analogue baselines (host-interposed)
 """

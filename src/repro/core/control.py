@@ -1,0 +1,560 @@
+"""ControlPlane — the paper's userspace control daemon (§4.2) as a
+transactional, *named* API over the nested-map routing tables.
+
+The Go daemon of the paper watches Envoy config, compiles it into the
+C-struct maps of Figure 3(b), and retargets the kernel tables without ever
+touching the datapath.  This module is that daemon: it owns everything the
+datapath must never own —
+
+  * the **name → id directory** (services, clusters) that ``build_state``
+    used to return once and lose;
+  * a **slot allocator** over the flat endpoint/rule arrays: every cluster
+    (service) holds a contiguous *window* whose extent comes from a
+    free-list; windows relocate when they outgrow their capacity and the
+    vacated extent returns to the free-list for reuse;
+  * **transactions**: ``with cp.transaction(): ...`` batches any number of
+    named deltas — ``add_endpoint`` / ``drain_endpoint`` /
+    ``remove_endpoint`` / ``set_policy`` / ``set_weight`` /
+    ``upsert_rule`` / ``remove_rule`` / ``add_service`` / ``add_cluster`` —
+    into **one** buffer swap with a **single version bump**.  Each delta's
+    primitive writes follow the paper's ordering discipline (adds
+    bottom-up: endpoint row before the cluster count that exposes it;
+    deletes top-down: the count shrinks before the row is compacted), and
+    the order is observable through ``last_commit_log``;
+  * **swap-with-last hygiene**: compaction migrates the moved endpoint's
+    in-flight load counter along with it and *zeroes the vacated slot*, so
+    a slot reused by a later ``add_endpoint`` can never inherit a stale
+    counter, and a release against the moved endpoint can never corrupt a
+    new occupant (consumers remap their pool endpoint references through
+    the plan's old→new map);
+  * **drain before remove**: ``drain_endpoint`` zeroes the weight at once
+    (no new connections) but the row survives until every attached
+    consumer's live load counter for it reads zero — the reap happens on a
+    later commit (or an explicit ``reap()``).
+
+A commit compiles into a :class:`RefreshPlan` — new config arrays plus an
+endpoint slot permutation — and applies it to every attached consumer with
+one jit'd splice (:func:`apply_plan`) over that consumer's *live* state:
+config tables swap, load counters gather through the permutation, the
+datapath-owned fields (``rr_cursor``) pass through untouched, and the
+version bumps once.  Same pytree shapes in and out, so the compiled
+``serve_step`` never recompiles — the paper's "configuration updates do not
+disturb the kernel data path".
+"""
+
+from __future__ import annotations
+
+import contextlib
+import copy
+import dataclasses
+import weakref
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.routing_table import (MAX_CLUSTERS, MAX_ENDPOINTS,
+                                      MAX_EPS_PER_CLUSTER, MAX_RULES,
+                                      MAX_RULES_PER_SVC, MAX_SERVICES,
+                                      POLICY_LEAST_REQUEST, WILDCARD, Cluster,
+                                      RoutingState, Rule, ServiceConfig,
+                                      build_state, fnv1a)
+
+# The tables the control plane owns.  Everything else in RoutingState
+# (ep_load, rr_cursor, version) is datapath-owned and only ever *migrated*
+# by a commit, never authored.
+CONFIG_FIELDS = ("svc_rule_start", "svc_rule_count", "rule_field",
+                 "rule_value", "rule_cluster", "cluster_ep_start",
+                 "cluster_ep_count", "cluster_policy", "ep_instance",
+                 "ep_weight")
+
+
+class RefreshPlan(NamedTuple):
+    """One committed transaction, ready to splice into any live state."""
+
+    config: tuple            # new config arrays, CONFIG_FIELDS order
+    ep_src: np.ndarray       # (E,) i32: new slot → old slot (-1 = fresh)
+    ep_dst: np.ndarray       # (E,) i32: old slot → new slot (-1 = removed)
+
+
+@jax.jit
+def apply_plan(live: RoutingState, plan: RefreshPlan) -> RoutingState:
+    """The single buffer swap: new config in, live loads migrated through
+    the slot permutation, rr cursors untouched, version + 1."""
+    cfg = {k: jnp.asarray(v) for k, v in zip(CONFIG_FIELDS, plan.config)}
+    src = jnp.asarray(plan.ep_src)
+    load = jnp.where(src >= 0, live.ep_load[jnp.maximum(src, 0)], 0)
+    return live._replace(ep_load=load.astype(jnp.int32),
+                         version=live.version + 1, **cfg)
+
+
+def remap_endpoints(plan: RefreshPlan, endpoint: jax.Array) -> jax.Array:
+    """Rewrite endpoint slot references (e.g. ``PoolState.endpoint``) from
+    old to new coordinates; references to removed endpoints become -1, so a
+    later release is a no-op instead of corrupting the slot's new occupant."""
+    dst = jnp.asarray(plan.ep_dst)
+    e = jnp.asarray(endpoint)
+    return jnp.where(e >= 0, dst[jnp.maximum(e, 0)], -1).astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------- #
+# Free-list extents (the slot allocator)
+# --------------------------------------------------------------------------- #
+
+
+def _extent_alloc(extents: list[list[int]], size: int) -> int:
+    """First-fit carve from a sorted [(start, size), ...] free-list."""
+    if size == 0:
+        return 0
+    for ext in extents:
+        if ext[1] >= size:
+            start = ext[0]
+            ext[0] += size
+            ext[1] -= size
+            if ext[1] == 0:
+                extents.remove(ext)
+            return start
+    raise RuntimeError("slot space exhausted (or too fragmented)")
+
+
+def _extent_free(extents: list[list[int]], start: int, size: int) -> None:
+    """Return an extent and coalesce neighbours."""
+    if size == 0:
+        return
+    extents.append([start, size])
+    extents.sort()
+    merged: list[list[int]] = []
+    for ext in extents:
+        if merged and merged[-1][0] + merged[-1][1] == ext[0]:
+            merged[-1][1] += ext[1]
+        else:
+            merged.append(ext)
+    extents[:] = merged
+
+
+@dataclasses.dataclass
+class _Window:
+    start: int
+    cap: int
+
+
+@dataclasses.dataclass
+class _Dir:
+    id: int
+    win: _Window
+
+
+@dataclasses.dataclass
+class _Store:
+    """Everything a commit swaps atomically (host-side)."""
+
+    cfg: dict
+    services: dict
+    clusters: dict
+    ep_free: list
+    rule_free: list
+    draining: set           # {(cluster_name, instance)}
+
+
+class _Txn:
+    def __init__(self, store: _Store):
+        self.store = copy.deepcopy(store)
+        self.src = np.arange(MAX_ENDPOINTS, dtype=np.int32)
+        self.log: list[tuple] = []
+
+
+class ControlPlane:
+    """Owner of the routing config: directory + allocator + transactions."""
+
+    def __init__(self, services: list[ServiceConfig] = (),
+                 clusters: list[Cluster] = ()):
+        # One packing implementation: the initial build IS a build_state
+        # rebuild (bit-exact by construction); the directory and free-lists
+        # are recovered from its window layout.
+        st, ids = build_state(list(services), list(clusters))
+        cfg = {k: np.array(getattr(st, k)) for k in CONFIG_FIELDS}
+        store = _Store(cfg=cfg, services={}, clusters={}, ep_free=[],
+                       rule_free=[], draining=set())
+        ep_cursor = 0
+        for c in clusters:
+            ci = ids["clusters"][c.name]
+            store.clusters[c.name] = _Dir(
+                ci, _Window(int(cfg["cluster_ep_start"][ci]),
+                            len(c.endpoints)))
+            ep_cursor += len(c.endpoints)
+        rule_cursor = 0
+        for s in services:
+            si = ids["services"][s.name]
+            store.services[s.name] = _Dir(
+                si, _Window(int(cfg["svc_rule_start"][si]), len(s.rules)))
+            rule_cursor += len(s.rules)
+        _extent_free(store.ep_free, ep_cursor, MAX_ENDPOINTS - ep_cursor)
+        _extent_free(store.rule_free, rule_cursor, MAX_RULES - rule_cursor)
+        self._store = store
+        self._txn: _Txn | None = None
+        self._refs: list[weakref.ref] = []
+        self.version = 0
+        self.last_commit_log: list[tuple] = []
+        self.last_plan: RefreshPlan | None = None
+
+    # ------------------------------------------------------------------ #
+    # directory / snapshots
+    # ------------------------------------------------------------------ #
+    @property
+    def ids(self) -> dict:
+        """build_state-compatible name→id maps (but never lost)."""
+        return {"services": {n: d.id for n, d in
+                             self._store.services.items()},
+                "clusters": {n: d.id for n, d in
+                             self._store.clusters.items()}}
+
+    def service_id(self, name: str) -> int:
+        return self._store.services[name].id
+
+    def cluster_id(self, name: str) -> int:
+        return self._store.clusters[name].id
+
+    def endpoint_slot(self, cluster: str, instance: int) -> int:
+        """Global slot currently holding ``instance`` in ``cluster``."""
+        store = self._txn.store if self._txn is not None else self._store
+        return self._find_slot(store, cluster, instance)
+
+    def snapshot(self) -> RoutingState:
+        """A fresh RoutingState at the control plane's current config (zero
+        load/cursors — the datapath owns those from here on)."""
+        cfg = self._store.cfg
+        return RoutingState(
+            ep_load=jnp.zeros((MAX_ENDPOINTS,), jnp.int32),
+            rr_cursor=jnp.zeros((MAX_CLUSTERS,), jnp.int32),
+            version=jnp.asarray(self.version, jnp.int32),
+            **{k: jnp.asarray(cfg[k]) for k in CONFIG_FIELDS})
+
+    def attach(self, consumer) -> None:
+        """Register a consumer (``ServeLoop``, benchmark service, ...): its
+        ``apply_refresh(plan)`` runs on every commit, and its live
+        ``routing.ep_load`` gates the drain reaper.  Held by weak
+        reference — an abandoned consumer drops out on its own instead of
+        pinning drained endpoints alive (and paying a splice) forever."""
+        if consumer not in self._consumers():
+            self._refs.append(weakref.ref(consumer))
+
+    def detach(self, consumer) -> None:
+        self._refs = [r for r in self._refs if r() is not consumer]
+
+    def _consumers(self) -> list:
+        live = [(r, r()) for r in self._refs]
+        self._refs = [r for r, c in live if c is not None]
+        return [c for _, c in live if c is not None]
+
+    # ------------------------------------------------------------------ #
+    # transactions
+    # ------------------------------------------------------------------ #
+    @contextlib.contextmanager
+    def transaction(self):
+        """Batch named deltas into one swap with a single version bump."""
+        if self._txn is not None:
+            raise RuntimeError("ControlPlane transactions do not nest")
+        self._txn = _Txn(self._store)
+        try:
+            yield self
+        except BaseException:
+            self._txn = None               # abort: staged writes discarded
+            raise
+        txn, self._txn = self._txn, None
+        self._commit(txn)
+
+    @contextlib.contextmanager
+    def _auto(self):
+        if self._txn is not None:
+            yield self._txn
+        else:
+            with self.transaction():
+                yield self._txn
+
+    def reap(self) -> None:
+        """Run just the drain reaper (an empty transaction)."""
+        with self.transaction():
+            pass
+
+    def _commit(self, txn: _Txn) -> None:
+        consumers = self._consumers()
+        # drain reaper: a drained endpoint leaves once no attached consumer
+        # still counts in-flight load against it
+        for cl, inst in sorted(txn.store.draining):
+            slot = self._find_slot(txn.store, cl, inst)
+            if slot < 0:
+                txn.store.draining.discard((cl, inst))
+                continue
+            old = int(txn.src[slot])
+            load = 0 if old < 0 else max(
+                (int(np.asarray(c.routing.ep_load)[old])
+                 for c in consumers), default=0)
+            if load == 0:
+                self._do_remove_endpoint(txn, cl, inst)
+                txn.log.append(("reap", cl, inst))
+        if not txn.log:                    # nothing happened: no bump
+            return
+        dst = np.full((MAX_ENDPOINTS,), -1, np.int32)
+        occupied = txn.src >= 0
+        dst[txn.src[occupied]] = np.nonzero(occupied)[0]
+        plan = RefreshPlan(
+            config=tuple(txn.store.cfg[k].copy() for k in CONFIG_FIELDS),
+            ep_src=txn.src.copy(), ep_dst=dst)
+        self._store = txn.store
+        self.version += 1
+        self.last_commit_log = list(txn.log)
+        self.last_plan = plan
+        for consumer in consumers:
+            consumer.apply_refresh(plan)
+
+    # ------------------------------------------------------------------ #
+    # named deltas
+    # ------------------------------------------------------------------ #
+    def add_service(self, name: str, rules: list[Rule] = ()) -> int:
+        with self._auto() as t:
+            if name in t.store.services:
+                raise ValueError(f"service {name!r} exists")
+            sid = len(t.store.services)
+            if sid >= MAX_SERVICES:
+                raise RuntimeError("service table full")
+            assert len(rules) <= MAX_RULES_PER_SVC
+            start = _extent_alloc(t.store.rule_free, len(rules))
+            for j, r in enumerate(rules):      # bottom-up: rows first
+                self._write_rule(t, start + j, r.field, r.value,
+                                 r.cluster)
+            t.store.cfg["svc_rule_start"][sid] = start
+            t.store.cfg["svc_rule_count"][sid] = len(rules)
+            t.log.append(("svc_count", sid, len(rules)))
+            t.store.services[name] = _Dir(sid, _Window(start, len(rules)))
+            return sid
+
+    def add_cluster(self, name: str, policy: int = POLICY_LEAST_REQUEST,
+                    endpoints: list[int] = (), weights=None) -> int:
+        with self._auto() as t:
+            if name in t.store.clusters:
+                raise ValueError(f"cluster {name!r} exists")
+            cid = len(t.store.clusters)
+            if cid >= MAX_CLUSTERS:
+                raise RuntimeError("cluster table full")
+            assert len(endpoints) <= MAX_EPS_PER_CLUSTER
+            start = _extent_alloc(t.store.ep_free, len(endpoints))
+            for j, inst in enumerate(endpoints):   # bottom-up: rows first
+                w = 1.0 if weights is None else weights[j]
+                self._write_ep(t, start + j, inst, w)
+            t.store.cfg["cluster_ep_start"][cid] = start
+            t.store.cfg["cluster_policy"][cid] = policy
+            t.log.append(("cluster_window", cid, start, len(endpoints)))
+            t.store.cfg["cluster_ep_count"][cid] = len(endpoints)
+            t.log.append(("cluster_count", cid, len(endpoints)))
+            t.store.clusters[name] = _Dir(cid, _Window(start,
+                                                       len(endpoints)))
+            return cid
+
+    def add_endpoint(self, cluster: str, instance: int,
+                     weight: float = 1.0) -> int:
+        """Grow ``cluster`` by one endpoint; returns its global slot.
+
+        Bottom-up: the endpoint row lands before the cluster count exposes
+        it, so a mid-step datapath never reads an unwritten row."""
+        with self._auto() as t:
+            d = t.store.clusters[cluster]
+            count = int(t.store.cfg["cluster_ep_count"][d.id])
+            if count >= MAX_EPS_PER_CLUSTER:
+                raise RuntimeError(f"cluster {cluster!r} at capacity")
+            if count >= d.win.cap:
+                self._grow_ep_window(t, cluster)
+            slot = d.win.start + count
+            self._write_ep(t, slot, instance, weight)
+            t.store.cfg["cluster_ep_count"][d.id] += 1
+            t.log.append(("cluster_count", d.id, +1))
+            return slot
+
+    def remove_endpoint(self, cluster: str, instance: int) -> None:
+        """Top-down: shrink the count first, then compact the window —
+        migrating the moved endpoint's load and zeroing the vacated slot."""
+        with self._auto() as t:
+            self._do_remove_endpoint(t, cluster, instance)
+
+    def drain_endpoint(self, cluster: str, instance: int) -> None:
+        """Graceful removal (the ISSUE's weight→0 semantics): the weight
+        drops to zero at once and the row is reaped by a later commit once
+        every consumer's live load for it reads zero.  Note the gate a
+        zero weight provides is policy-dependent: WEIGHTED clusters stop
+        sending new traffic immediately; rr/random/least-request ignore
+        weights, so for those this is drain-on-idle, not a traffic stop
+        (a datapath-visible draining mask is future work — ROADMAP)."""
+        with self._auto() as t:
+            slot = self._find_slot(t.store, cluster, instance)
+            if slot < 0:
+                raise KeyError(f"no endpoint {instance} in {cluster!r}")
+            t.store.cfg["ep_weight"][slot] = 0.0
+            t.store.draining.add((cluster, instance))
+            t.log.append(("drain", t.store.clusters[cluster].id, instance))
+
+    def set_weight(self, cluster: str, instance: int,
+                   weight: float) -> None:
+        """Set an endpoint's weight — and cancel any pending drain on it
+        (an operator re-weighting a draining endpoint is changing their
+        mind; the reaper must not remove it later)."""
+        with self._auto() as t:
+            slot = self._find_slot(t.store, cluster, instance)
+            if slot < 0:
+                raise KeyError(f"no endpoint {instance} in {cluster!r}")
+            t.store.cfg["ep_weight"][slot] = weight
+            t.store.draining.discard((cluster, instance))
+            t.log.append(("weight", slot))
+
+    def set_policy(self, cluster: str, policy: int) -> None:
+        with self._auto() as t:
+            d = t.store.clusters[cluster]
+            t.store.cfg["cluster_policy"][d.id] = policy
+            t.log.append(("policy", d.id))
+
+    def upsert_rule(self, service: str, field: int, value: str | None,
+                    cluster: str) -> None:
+        """Replace the service's rule matching (field, value) or append a
+        new one (bottom-up: row before count)."""
+        with self._auto() as t:
+            d = t.store.services[service]
+            cfg = t.store.cfg
+            vhash = WILDCARD if value is None else fnv1a(value)
+            count = int(cfg["svc_rule_count"][d.id])
+            for j in range(count):
+                s = d.win.start + j
+                if (int(cfg["rule_field"][s]) == field
+                        and int(cfg["rule_value"][s]) == vhash):
+                    cfg["rule_cluster"][s] = t.store.clusters[cluster].id
+                    t.log.append(("rule_row", s))
+                    return
+            if count >= MAX_RULES_PER_SVC:
+                raise RuntimeError(f"service {service!r} rule chain full")
+            if count >= d.win.cap:
+                self._grow_rule_window(t, service)
+            self._write_rule(t, d.win.start + count, field, value, cluster)
+            cfg["svc_rule_count"][d.id] += 1
+            t.log.append(("svc_count", d.id, +1))
+
+    def remove_rule(self, service: str, field: int,
+                    value: str | None) -> None:
+        """Top-down: the chain shrinks before the row compacts."""
+        with self._auto() as t:
+            d = t.store.services[service]
+            cfg = t.store.cfg
+            vhash = WILDCARD if value is None else fnv1a(value)
+            count = int(cfg["svc_rule_count"][d.id])
+            for j in range(count):
+                s = d.win.start + j
+                if (int(cfg["rule_field"][s]) == field
+                        and int(cfg["rule_value"][s]) == vhash):
+                    cfg["svc_rule_count"][d.id] -= 1
+                    t.log.append(("svc_count", d.id, -1))
+                    last = d.win.start + count - 1
+                    if s != last:
+                        for k in ("rule_field", "rule_value",
+                                  "rule_cluster"):
+                            cfg[k][s] = cfg[k][last]
+                        t.log.append(("rule_row", s))
+                    self._clear_rule(t, last)
+                    return
+            raise KeyError(f"no rule ({field}, {value!r}) on {service!r}")
+
+    # ------------------------------------------------------------------ #
+    # staged-write primitives
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _find_slot(store: _Store, cluster: str, instance: int) -> int:
+        d = store.clusters[cluster]
+        count = int(store.cfg["cluster_ep_count"][d.id])
+        for j in range(count):
+            if int(store.cfg["ep_instance"][d.win.start + j]) == instance:
+                return d.win.start + j
+        return -1
+
+    def _write_ep(self, t: _Txn, slot: int, instance: int,
+                  weight: float) -> None:
+        t.store.cfg["ep_instance"][slot] = instance
+        t.store.cfg["ep_weight"][slot] = weight
+        t.src[slot] = -1                       # fresh row: load starts at 0
+        t.log.append(("ep_row", slot, instance))
+
+    def _clear_ep(self, t: _Txn, slot: int) -> None:
+        t.store.cfg["ep_instance"][slot] = -1
+        t.store.cfg["ep_weight"][slot] = 1.0
+        t.src[slot] = -1                       # vacated: counter zeroed
+        t.log.append(("ep_clear", slot))
+
+    def _move_ep(self, t: _Txn, dst: int, src: int) -> None:
+        """Relocate one endpoint row, its draining status implied by the
+        directory, and its *live load* (via the plan permutation)."""
+        cfg = t.store.cfg
+        cfg["ep_instance"][dst] = cfg["ep_instance"][src]
+        cfg["ep_weight"][dst] = cfg["ep_weight"][src]
+        t.src[dst] = t.src[src]
+        t.log.append(("ep_row", dst, int(cfg["ep_instance"][dst])))
+
+    def _write_rule(self, t: _Txn, slot: int, field: int,
+                    value: str | None, cluster: str) -> None:
+        cfg = t.store.cfg
+        cfg["rule_field"][slot] = field
+        cfg["rule_value"][slot] = (WILDCARD if value is None
+                                   else fnv1a(value))
+        cfg["rule_cluster"][slot] = t.store.clusters[cluster].id
+        t.log.append(("rule_row", slot))
+
+    def _clear_rule(self, t: _Txn, slot: int) -> None:
+        cfg = t.store.cfg
+        cfg["rule_field"][slot] = 0
+        cfg["rule_value"][slot] = WILDCARD
+        cfg["rule_cluster"][slot] = -1
+        t.log.append(("rule_clear", slot))
+
+    def _do_remove_endpoint(self, t: _Txn, cluster: str,
+                            instance: int) -> None:
+        slot = self._find_slot(t.store, cluster, instance)
+        if slot < 0:
+            raise KeyError(f"no endpoint {instance} in {cluster!r}")
+        d = t.store.clusters[cluster]
+        count = int(t.store.cfg["cluster_ep_count"][d.id])
+        t.store.cfg["cluster_ep_count"][d.id] -= 1    # top-down: count first
+        t.log.append(("cluster_count", d.id, -1))
+        last = d.win.start + count - 1
+        if slot != last:
+            self._move_ep(t, slot, last)       # swap-with-last + load migrate
+        self._clear_ep(t, last)                # vacated slot zeroed
+        t.store.draining.discard((cluster, instance))
+
+    def _grow_ep_window(self, t: _Txn, cluster: str) -> None:
+        """Relocate a full cluster window to a larger extent (bottom-up:
+        the new rows are fully written before the start pointer swings)."""
+        d = t.store.clusters[cluster]
+        count = int(t.store.cfg["cluster_ep_count"][d.id])
+        new_cap = min(MAX_EPS_PER_CLUSTER, max(2 * d.win.cap, 2))
+        new_start = _extent_alloc(t.store.ep_free, new_cap)
+        for j in range(count):
+            self._move_ep(t, new_start + j, d.win.start + j)
+        t.store.cfg["cluster_ep_start"][d.id] = new_start
+        t.log.append(("cluster_window", d.id, new_start, new_cap))
+        old = d.win
+        for j in range(count):
+            self._clear_ep(t, old.start + j)
+        _extent_free(t.store.ep_free, old.start, old.cap)
+        d.win = _Window(new_start, new_cap)
+
+    def _grow_rule_window(self, t: _Txn, service: str) -> None:
+        d = t.store.services[service]
+        cfg = t.store.cfg
+        count = int(cfg["svc_rule_count"][d.id])
+        new_cap = min(MAX_RULES_PER_SVC, max(2 * d.win.cap, 2))
+        new_start = _extent_alloc(t.store.rule_free, new_cap)
+        for j in range(count):
+            for k in ("rule_field", "rule_value", "rule_cluster"):
+                cfg[k][new_start + j] = cfg[k][d.win.start + j]
+            t.log.append(("rule_row", new_start + j))
+        cfg["svc_rule_start"][d.id] = new_start
+        t.log.append(("svc_window", d.id, new_start, new_cap))
+        old = d.win
+        for j in range(count):
+            self._clear_rule(t, old.start + j)
+        _extent_free(t.store.rule_free, old.start, old.cap)
+        d.win = _Window(new_start, new_cap)

@@ -9,6 +9,12 @@ the kernel data path".
 
 All functions are pure: they return a new RoutingState with version+1.
 They are jit-compatible so the control daemon can run them on-device.
+
+This is the *raw slot-index* layer: callers must compute global slots and
+window offsets themselves, and each call bumps the version.  Application
+code should go through ``core/control.py::ControlPlane`` instead — named,
+transactional operations that batch any number of these deltas into one
+buffer swap (and own the slot arithmetic via free-list allocators).
 """
 
 from __future__ import annotations
@@ -48,7 +54,13 @@ def add_endpoint(state: RoutingState, cluster_id: int, ep_slot: int,
 def remove_endpoint(state: RoutingState, cluster_id: int, ep_off: int
                     ) -> RoutingState:
     """Top-down: shrink the cluster count first, then compact the window by
-    swapping the last endpoint into the vacated offset."""
+    swapping the last endpoint into the vacated offset.
+
+    The vacated ``last`` slot is zeroed: the swap migrates the moved
+    endpoint's in-flight load counter with it, and a later ``add_endpoint``
+    reusing the slot must start from a clean row — leaving the stale
+    ``ep_instance``/``ep_load`` behind let a new occupant inherit phantom
+    load (and a late release corrupt it)."""
     start = state.cluster_ep_start[cluster_id]
     count = state.cluster_ep_count[cluster_id]
     st = state._replace(
@@ -59,6 +71,11 @@ def remove_endpoint(state: RoutingState, cluster_id: int, ep_off: int
         ep_instance=st.ep_instance.at[tgt].set(st.ep_instance[last]),
         ep_weight=st.ep_weight.at[tgt].set(st.ep_weight[last]),
         ep_load=st.ep_load.at[tgt].set(st.ep_load[last]),
+    )
+    st = st._replace(
+        ep_instance=st.ep_instance.at[last].set(-1),
+        ep_weight=st.ep_weight.at[last].set(1.0),
+        ep_load=st.ep_load.at[last].set(0),
     )
     return _bump(st)
 
@@ -82,7 +99,9 @@ def add_rule(state: RoutingState, svc_id: int, rule_slot: int, field: int,
 
 def remove_rule(state: RoutingState, svc_id: int, rule_off: int
                 ) -> RoutingState:
-    """Top-down: shrink the chain, then compact (swap-with-last)."""
+    """Top-down: shrink the chain, then compact (swap-with-last).  The
+    vacated ``last`` row resets to the empty-state defaults so a slot later
+    reused by ``add_rule`` can never briefly expose a stale match."""
     start = state.svc_rule_start[svc_id]
     count = state.svc_rule_count[svc_id]
     st = state._replace(svc_rule_count=state.svc_rule_count.at[svc_id].add(-1))
@@ -91,6 +110,11 @@ def remove_rule(state: RoutingState, svc_id: int, rule_off: int
         rule_field=st.rule_field.at[tgt].set(st.rule_field[last]),
         rule_value=st.rule_value.at[tgt].set(st.rule_value[last]),
         rule_cluster=st.rule_cluster.at[tgt].set(st.rule_cluster[last]),
+    )
+    st = st._replace(
+        rule_field=st.rule_field.at[last].set(0),
+        rule_value=st.rule_value.at[last].set(WILDCARD),
+        rule_cluster=st.rule_cluster.at[last].set(-1),
     )
     return _bump(st)
 

@@ -13,9 +13,12 @@ the LB is a logical extension of the application:
     release, rx metrics, slot free) as one fused Pallas kernel
     (kernels/completion.py::complete).
 
-The sidecar baselines in core/sidecar.py implement the same contract with
-host-mediated routing + per-instance programs, reproducing the overhead
-classes of paper Table 2.
+``Engine`` implements the :class:`repro.core.balancer.Balancer` protocol —
+the same contract the sidecar baselines in core/sidecar.py implement with
+host-mediated routing + per-instance programs (the overhead classes of paper
+Table 2).  Control-plane transactions (core/control.py) reach a running
+engine through ``apply_refresh``: config tables swap, loads migrate, pool
+endpoint references remap — all without recompiling ``serve_step``.
 """
 
 from __future__ import annotations
@@ -28,43 +31,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import control
+from repro.core.balancer import PoolState, RequestBatch  # noqa: F401 (re-export:
+# RequestBatch/PoolState moved to core.balancer; importers keep working)
 from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, FlowMetrics,
                                       RoutingState)
 from repro.kernels import ops
 from repro.models import model as M
 from repro.models.transformer import DEFAULT_CTX
-
-
-class RequestBatch(NamedTuple):
-    """Host-ingress output: fixed-size admission batch (pad with req_id=-1)."""
-
-    req_id: jax.Array     # (R,) int32, -1 = padding
-    svc: jax.Array        # (R,) int32 virtual-IP/service id
-    features: jax.Array   # (R, N_FEATURES) int32 hashed L7 fields
-    token: jax.Array      # (R,) int32 first prompt token
-    msg_bytes: jax.Array  # (R,) int32 payload size (traffic metrics)
-
-
-class PoolState(NamedTuple):
-    """Per-(instance, slot) live-connection state."""
-
-    req_id: jax.Array      # (I, C) int32, -1 = free
-    endpoint: jax.Array    # (I, C) int32 (for load release)
-    svc: jax.Array         # (I, C) int32
-    length: jax.Array      # (I, C) int32
-    token: jax.Array       # (I, C) int32 last emitted/fed token
-    active: jax.Array      # (I, C) bool
-
-    @staticmethod
-    def init(I: int, C: int) -> "PoolState":
-        return PoolState(
-            req_id=jnp.full((I, C), -1, jnp.int32),
-            endpoint=jnp.full((I, C), -1, jnp.int32),
-            svc=jnp.zeros((I, C), jnp.int32),
-            length=jnp.zeros((I, C), jnp.int32),
-            token=jnp.zeros((I, C), jnp.int32),
-            active=jnp.zeros((I, C), bool),
-        )
 
 
 class EngineState(NamedTuple):
@@ -106,7 +80,7 @@ class Engine:
     # the bench_admit comparison drive it from there).
     # ------------------------------------------------------------------ #
     def admit(self, state: EngineState, reqs: RequestBatch) -> EngineState:
-        rstate, pool, metrics = state.routing, state.pool, state.metrics
+        rstate, metrics = state.routing, state.metrics
         key, sub = jax.random.split(state.key)
         kr, kw, _ = jax.random.split(sub, 3)
         R = reqs.req_id.shape[0]
@@ -115,17 +89,9 @@ class Engine:
         rnd = jax.random.randint(kr, (R,), 0, 1 << 30, dtype=jnp.int32)
         gumbel = jax.random.gumbel(kw, (R, MAX_EPS_PER_CLUSTER), jnp.float32)
 
-        res = ops.admit_commit(
-            reqs.req_id, reqs.svc, reqs.features, reqs.msg_bytes, reqs.token,
-            rstate, pool.req_id, pool.endpoint, pool.svc, pool.length,
-            pool.token, pool.active, rnd, gumbel)
-        # the six PoolState fields come committed straight out of the
-        # kernel — no scatter_to_pool post-pass on the fused path
-        pool = PoolState(res.pool_req_id, res.pool_endpoint, res.pool_svc,
-                         res.pool_length, res.pool_token,
-                         res.pool_active > 0)
-        # load counters, rr cursors, held release and flow metrics all come
-        # fused out of the kernel as well
+        res = ops.admit_commit(reqs, rstate, state.pool, rnd, gumbel)
+        # the committed pool, load counters, rr cursors, held release and
+        # flow metrics all come fused out of the kernel
         rstate = rstate._replace(ep_load=res.ep_load, rr_cursor=res.rr_cursor)
         metrics = metrics._replace(
             requests=metrics.requests + res.svc_requests,
@@ -133,7 +99,7 @@ class Engine:
             no_route_match=metrics.no_route_match + res.no_route,
             overflow=metrics.overflow + res.held,
         )
-        return EngineState(rstate, pool, state.cache, metrics, key)
+        return EngineState(rstate, res.pool, state.cache, metrics, key)
 
     # ------------------------------------------------------------------ #
     # step: one batched decode over all lanes; completion handling (done
@@ -152,18 +118,15 @@ class Engine:
                                       cache, ctx=self.ctx)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32).reshape(I, C)
 
-        res = ops.complete(pool.req_id, pool.endpoint, pool.svc, pool.length,
-                           pool.token, pool.active, nxt,
-                           state.routing.ep_load, state.metrics.rx_bytes,
+        res = ops.complete(pool, nxt, state.routing.ep_load,
+                           state.metrics.rx_bytes,
                            eos=self.eos, max_len=self.max_len)
         rstate = state.routing._replace(ep_load=res.ep_load)
         metrics = state.metrics._replace(rx_bytes=res.rx_bytes)
-        pool = PoolState(res.req_id, res.endpoint, res.svc, res.length,
-                         res.token, res.active > 0)
-        out = {"emitted": nxt, "done": res.done > 0,
+        out = {"emitted": nxt, "done": res.done,
                "req_id": state.pool.req_id,     # ids that produced this tick
-               "active": pool.active.sum()}
-        return EngineState(rstate, pool, cache, metrics, state.key), out
+               "active": res.pool.active.sum()}
+        return EngineState(rstate, res.pool, cache, metrics, state.key), out
 
     # ------------------------------------------------------------------ #
     def make_jitted(self, donate: bool = True):
@@ -181,3 +144,21 @@ class Engine:
             return self.step(params, state)
 
         return serve_step
+
+    # ------------------------------------------------------------------ #
+    # control-plane seam (Balancer protocol)
+    # ------------------------------------------------------------------ #
+    def get_routing(self, state: EngineState) -> RoutingState:
+        return state.routing
+
+    def apply_refresh(self, state: EngineState,
+                      plan: control.RefreshPlan) -> EngineState:
+        """Splice a committed transaction into the live state: one buffer
+        swap for the tables (load counters migrate through the slot
+        permutation) and a remap of the pool's endpoint references, so
+        completions of in-flight connections release the counter of the
+        endpoint's *new* slot — never a new occupant of its old one."""
+        routing = control.apply_plan(state.routing, plan)
+        pool = state.pool._replace(
+            endpoint=control.remap_endpoints(plan, state.pool.endpoint))
+        return state._replace(routing=routing, pool=pool)

@@ -4,21 +4,55 @@ Backend selection is shared (``kernels.backend``): every kernel defaults to
 ``interpret=None``, which the wrapper resolves to the Pallas interpreter
 off-TPU (bit-accurate against the BlockSpec pipeline) and to a real Mosaic
 compile on TPU backends.
+
+The XLB datapath wrappers (``admit`` / ``admit_commit`` / ``complete``) take
+*pytrees* — ``RequestBatch``, ``RoutingState``, ``PoolState`` — and return
+typed results with the updated pytrees inside, so engine state flows through
+the kernels as NamedTuples end-to-end instead of a dozen positional arrays.
+The kernel modules themselves (``route_match.py`` / ``completion.py``) keep
+flat array signatures: that is the pallas_call boundary.
 """
 
 from __future__ import annotations
 
 from functools import partial
+from typing import NamedTuple
 
 import jax
 
+from repro.core.balancer import PoolState, RequestBatch
 from repro.kernels import (completion as _cp, decode_attention as _da,
                            flash_attention as _fa, relay_dispatch as _rd,
                            route_match as _rm, ssd_scan as _ss)
 from repro.kernels.backend import default_interpret  # re-export  # noqa: F401
-from repro.kernels.completion import CompleteResult  # re-export  # noqa: F401
-from repro.kernels.route_match import (AdmitCommitResult,  # noqa: F401
-                                       AdmitResult)
+from repro.kernels.route_match import AdmitResult  # re-export  # noqa: F401
+
+
+class AdmitCommitOut(NamedTuple):
+    """Fused connect path: per-request decisions + updated LB state + the
+    committed connection pool."""
+
+    cluster: jax.Array       # (R,) i32 destination cluster (-1 = no match)
+    endpoint: jax.Array      # (R,) i32 global endpoint (-1 = unroutable)
+    instance: jax.Array      # (R,) i32 instance lane (-1 = unroutable)
+    slot: jax.Array          # (R,) i32 pool slot (-1 = held / unroutable)
+    ok: jax.Array            # (R,) i32 1 = admitted into a pool slot
+    ep_load: jax.Array       # (E,) i32 updated outstanding-request counters
+    rr_cursor: jax.Array     # (CL,) i32 updated round-robin cursors
+    svc_requests: jax.Array  # (S,) i32 admitted requests per service
+    svc_tx_bytes: jax.Array  # (S,) i32 admitted payload bytes per service
+    no_route: jax.Array      # () i32 valid requests with no rule match
+    held: jax.Array          # () i32 routable requests without a free slot
+    pool: PoolState          # (I, C) committed pool (active as bool)
+
+
+class CompleteOut(NamedTuple):
+    """Fused close path: freed pool + released counters + rx metrics."""
+
+    pool: PoolState          # (I, C) pool after completion (active as bool)
+    done: jax.Array          # (I, C) bool finished this step
+    ep_load: jax.Array       # (E,) i32 counters after release
+    rx_bytes: jax.Array      # (S,) i32 per-service rx metric
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
@@ -44,33 +78,44 @@ def route_match(svc, features, state, *, block_r: int = 256):
 
 
 @partial(jax.jit, static_argnames=("block_r",))
-def admit(req_id, svc, features, msg_bytes, state, free_mask, rnd, gumbel, *,
+def admit(reqs: RequestBatch, routing, free_mask, rnd, gumbel, *,
           block_r: int = 256) -> AdmitResult:
-    """Fused admission datapath: match → balance → slot-allocate → metrics."""
-    return _rm.admit(req_id, svc, features, msg_bytes, state, free_mask,
-                     rnd, gumbel, block_r=block_r)
+    """Fused admission datapath: match → balance → slot-allocate → metrics.
+
+    ``reqs.token`` is unused here — commit-free admission never touches the
+    pool (see ``admit_commit`` for the full connect path)."""
+    return _rm.admit(reqs.req_id, reqs.svc, reqs.features, reqs.msg_bytes,
+                     routing, free_mask, rnd, gumbel, block_r=block_r)
 
 
 @partial(jax.jit, static_argnames=("block_r",))
-def admit_commit(req_id, svc, features, msg_bytes, token, state,
-                 pool_req_id, pool_endpoint, pool_svc, pool_length,
-                 pool_token, pool_active, rnd, gumbel, *,
-                 block_r: int = 256) -> AdmitCommitResult:
+def admit_commit(reqs: RequestBatch, routing, pool: PoolState, rnd, gumbel,
+                 *, block_r: int = 256) -> AdmitCommitOut:
     """Fused admission + in-kernel pool commit (no post-pass scatters)."""
-    return _rm.admit_commit(req_id, svc, features, msg_bytes, token, state,
-                            pool_req_id, pool_endpoint, pool_svc, pool_length,
-                            pool_token, pool_active, rnd, gumbel,
-                            block_r=block_r)
+    res = _rm.admit_commit(reqs.req_id, reqs.svc, reqs.features,
+                           reqs.msg_bytes, reqs.token, routing,
+                           pool.req_id, pool.endpoint, pool.svc, pool.length,
+                           pool.token, pool.active, rnd, gumbel,
+                           block_r=block_r)
+    return AdmitCommitOut(
+        res.cluster, res.endpoint, res.instance, res.slot, res.ok,
+        res.ep_load, res.rr_cursor, res.svc_requests, res.svc_tx_bytes,
+        res.no_route, res.held,
+        PoolState(res.pool_req_id, res.pool_endpoint, res.pool_svc,
+                  res.pool_length, res.pool_token, res.pool_active > 0))
 
 
 @partial(jax.jit, static_argnames=("eos", "max_len", "block_i"))
-def complete(pool_req_id, pool_endpoint, pool_svc, pool_length, pool_token,
-             pool_active, nxt, ep_load, rx_bytes, *, eos: int, max_len: int,
-             block_i: int = 8) -> CompleteResult:
+def complete(pool: PoolState, nxt, ep_load, rx_bytes, *, eos: int,
+             max_len: int, block_i: int = 8) -> CompleteOut:
     """Fused completion: done detect → load release → rx metrics → free."""
-    return _cp.complete(pool_req_id, pool_endpoint, pool_svc, pool_length,
-                        pool_token, pool_active, nxt, ep_load, rx_bytes,
-                        eos=eos, max_len=max_len, block_i=block_i)
+    res = _cp.complete(pool.req_id, pool.endpoint, pool.svc, pool.length,
+                       pool.token, pool.active, nxt, ep_load, rx_bytes,
+                       eos=eos, max_len=max_len, block_i=block_i)
+    return CompleteOut(
+        PoolState(res.req_id, res.endpoint, res.svc, res.length, res.token,
+                  res.active > 0),
+        res.done > 0, res.ep_load, res.rx_bytes)
 
 
 @partial(jax.jit, static_argnames=("n_dest", "block_n"))

@@ -1,7 +1,10 @@
-"""Serving launcher: ``python -m repro.launch.serve --arch <id> [...]``.
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>
+--engine xlb|istio|cilium [...]``.
 
-Boots the XLB in-graph engine for the selected architecture's smoke config
-and drives a synthetic request stream through the continuous-batching loop.
+Boots the selected serving engine (the XLB in-graph datapath or either
+sidecar baseline — all behind the one Balancer protocol) for the selected
+architecture's smoke config, builds routing through a ControlPlane, and
+drives a synthetic request stream through the continuous-batching loop.
 """
 
 from __future__ import annotations
@@ -14,49 +17,56 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ASSIGNED_ARCHS, get_config, smoke_config
-from repro.core import interpose
+from repro.core.balancer import ENGINE_KINDS, make_balancer
+from repro.core.control import ControlPlane
 from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST, Rule,
-                                      ServiceConfig, build_state)
+                                      ServiceConfig)
 from repro.models import model as M
 from repro.runtime.serve_loop import Request, ServeLoop
 
 
-def main():
+def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlb-service-model",
                     choices=ASSIGNED_ARCHS + ["xlb-service-model"])
+    ap.add_argument("--engine", default="xlb", choices=ENGINE_KINDS)
     ap.add_argument("--instances", type=int, default=4)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=24)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     cfg = smoke_config(get_config(args.arch))
     if cfg.is_encdec:
         raise SystemExit("enc-dec serving needs prompt frames; use the "
                          "dry-run decode cells for whisper")
     params = M.init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.float32)
-    routing, _ = build_state(
+    cp = ControlPlane(
         [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
         [Cluster("pool", endpoints=list(range(args.instances)),
                  policy=POLICY_LEAST_REQUEST)])
-    eng = interpose.Engine(cfg, args.instances, args.slots, args.max_len)
-    loop = ServeLoop(eng, params, routing, admit_batch=8, dtype=jnp.float32)
+    eng = make_balancer(args.engine, cfg, args.instances, args.slots,
+                        args.max_len)
+    loop = ServeLoop(eng, params, cp, admit_batch=8, dtype=jnp.float32)
 
     t0 = time.perf_counter()
     for i in range(args.requests):
         loop.submit(Request(req_id=i, service=0,
                             headers={"path": f"/api/{i % 4}"},
                             prompt_token=3 + i % (cfg.vocab - 3)))
-    done = loop.drain()
+    rep = loop.drain()
     wall = time.perf_counter() - t0
-    lat = [r.t_done - r.t_submit for r in done]
-    print(f"{cfg.name}: {len(done)} requests in {wall:.2f}s "
-          f"({len(done)/wall:.1f} req/s), avg latency "
+    lat = [r.t_done - r.t_submit for r in rep.done] or [float("nan")]
+    print(f"{cfg.name} [{args.engine}]: {len(rep.done)} requests in "
+          f"{wall:.2f}s ({len(rep.done)/wall:.1f} req/s), avg latency "
           f"{1e3*np.mean(lat):.1f} ms, p99 {1e3*np.percentile(lat, 99):.1f} ms")
+    if rep.queued or rep.inflight or rep.dropped:
+        print(f"drain left: queued={rep.queued} inflight={rep.inflight} "
+              f"dropped={len(rep.dropped)}")
     m = loop.state.metrics
     print(f"metrics: tx={int(m.tx_bytes.sum())}B rx={int(m.rx_bytes.sum())}B "
           f"no_route={int(m.no_route_match)} overflow={int(m.overflow)}")
+    return len(rep.done)
 
 
 if __name__ == "__main__":

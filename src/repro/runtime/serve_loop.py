@@ -1,10 +1,16 @@
-"""Host serving driver: ingress parsing + continuous batching around the
-in-graph XLB engine (core/interpose.py).
+"""Host serving driver: ingress parsing + continuous batching around any
+:class:`repro.core.balancer.Balancer` — the XLB in-graph engine or either
+sidecar baseline, with zero per-engine glue.
 
 The host does exactly what the paper leaves outside eBPF (its helper
 functions): byte-level protocol parsing — here hashing L7 header fields into
 the fixed int32 feature vector — and queueing.  Everything else (routing,
-balancing, slot allocation, decode) runs inside one compiled program.
+balancing, slot allocation, decode) runs wherever the engine places it.
+
+Routing can be given as a plain ``RoutingState`` snapshot or as a
+``ControlPlane``; with a ControlPlane the loop attaches itself, so every
+committed transaction reaches the live engine state mid-serve (config swap,
+load migration, pool remap) without recompiling the datapath.
 """
 
 from __future__ import annotations
@@ -12,13 +18,13 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Any, Optional
+from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import interpose
+from repro.core import control
+from repro.core.balancer import Balancer, RequestBatch
 from repro.core.routing_table import N_FEATURES, RoutingState, fnv1a
 
 
@@ -35,6 +41,15 @@ class Request:
     tokens: list = dataclasses.field(default_factory=list)
 
 
+class DrainReport(NamedTuple):
+    """What a drain actually left behind — not just the completions."""
+
+    done: list            # completed Requests (all-time, == loop.done)
+    dropped: list         # gave up after max retries (== loop.dropped)
+    queued: int           # still waiting at the ingress when draining ended
+    inflight: int         # still holding a pool slot when draining ended
+
+
 def parse_features(headers: dict[str, str]) -> np.ndarray:
     """Host ingress 'protocol parse': hash selected header fields into the
     feature vector the in-graph router matches on."""
@@ -49,24 +64,41 @@ def parse_features(headers: dict[str, str]) -> np.ndarray:
 class ServeLoop:
     """Continuous batching driver for one service fleet."""
 
-    def __init__(self, engine: interpose.Engine, params, routing: RoutingState,
+    def __init__(self, balancer: Balancer, params,
+                 routing: RoutingState | control.ControlPlane,
                  admit_batch: int = 8, dtype=jnp.float32):
-        self.engine = engine
+        self.balancer = balancer
         self.params = params
         self.admit_batch = admit_batch
-        self.state = engine.init_state(routing, dtype=dtype)
-        self.serve_step = engine.make_jitted(donate=False)
+        if isinstance(routing, control.ControlPlane):
+            cp, routing = routing, routing.snapshot()
+            cp.attach(self)
+        self.state = balancer.init_state(routing, dtype=dtype)
+        self.serve_step = balancer.make_jitted(donate=False)
         self.queue: collections.deque[Request] = collections.deque()
         self.inflight: dict[int, Request] = {}
         self.done: list[Request] = []
         self.dropped: list[Request] = []    # gave up after max retries
 
     # ------------------------------------------------------------------ #
+    # control-plane seam
+    # ------------------------------------------------------------------ #
+    @property
+    def routing(self) -> RoutingState:
+        """The live routing tables the engine is reading right now."""
+        return self.balancer.get_routing(self.state)
+
+    def apply_refresh(self, plan: control.RefreshPlan) -> None:
+        """ControlPlane consumer hook: splice a committed transaction into
+        the live engine state (same compiled datapath, new tables)."""
+        self.state = self.balancer.apply_refresh(self.state, plan)
+
+    # ------------------------------------------------------------------ #
     def submit(self, req: Request) -> None:
         req.t_submit = time.perf_counter()
         self.queue.append(req)
 
-    def _next_admission(self) -> tuple[interpose.RequestBatch, list]:
+    def _next_admission(self) -> tuple[RequestBatch, list]:
         R = self.admit_batch
         rid = np.full((R,), -1, np.int32)
         svc = np.zeros((R,), np.int32)
@@ -83,7 +115,7 @@ class ServeLoop:
             tok[i], nbytes[i] = r.prompt_token, r.msg_bytes
             self.inflight[r.req_id] = r
             taken.append(r)
-        return interpose.RequestBatch(
+        return RequestBatch(
             req_id=jnp.asarray(rid), svc=jnp.asarray(svc),
             features=jnp.asarray(feats), token=jnp.asarray(tok),
             msg_bytes=jnp.asarray(nbytes)), taken
@@ -122,9 +154,14 @@ class ServeLoop:
         return {"active": int(out["active"]), "queued": len(self.queue),
                 "done": len(self.done), "dropped": len(self.dropped)}
 
-    def drain(self, max_ticks: int = 10_000) -> list[Request]:
+    def drain(self, max_ticks: int = 10_000) -> DrainReport:
+        """Tick until idle (or the budget runs out) and report everything —
+        a drain that strands queued/inflight work says so instead of
+        silently returning only the completions."""
         t = 0
         while (self.queue or self.inflight) and t < max_ticks:
             self.tick()
             t += 1
-        return self.done
+        return DrainReport(done=self.done, dropped=self.dropped,
+                           queued=len(self.queue),
+                           inflight=len(self.inflight))

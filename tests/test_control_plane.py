@@ -1,0 +1,293 @@
+"""ControlPlane transaction semantics (core/control.py).
+
+Pins the acceptance contract of the control-plane redesign: bit-exact
+builds vs ``build_state``, one version bump per transaction, observable
+bottom-up-add / top-down-delete ordering, drain-before-remove, free-list
+window reuse, and swap-with-last hygiene (load migration + vacated-slot
+zeroing + endpoint-reference remap)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.control import ControlPlane, apply_plan, remap_endpoints
+from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST,
+                                      POLICY_RANDOM, POLICY_RR,
+                                      POLICY_WEIGHTED, Rule, ServiceConfig,
+                                      build_state, fnv1a)
+
+
+class Consumer:
+    """Minimal ControlPlane consumer: a live RoutingState + the plan hook."""
+
+    def __init__(self, cp: ControlPlane):
+        self.routing = cp.snapshot()
+        self.plans = []
+        cp.attach(self)
+
+    def apply_refresh(self, plan):
+        self.routing = apply_plan(self.routing, plan)
+        self.plans.append(plan)
+
+    def set_load(self, slot: int, n: int):
+        self.routing = self.routing._replace(
+            ep_load=self.routing.ep_load.at[slot].set(n))
+
+
+SERVICES = [
+    ServiceConfig("front", rules=[
+        Rule(field=0, value="v2", cluster="canary"),
+        Rule(field=0, value=None, cluster="stable"),
+    ]),
+    ServiceConfig("payments", rules=[
+        Rule(field=1, value="gold", cluster="gold-pool"),
+    ]),
+]
+CLUSTERS = [
+    Cluster("canary", endpoints=[0, 1], policy=POLICY_RR),
+    Cluster("stable", endpoints=[2, 3, 4], policy=POLICY_LEAST_REQUEST),
+    Cluster("gold-pool", endpoints=[5], policy=POLICY_RANDOM),
+]
+
+
+def _cp():
+    return ControlPlane(SERVICES, CLUSTERS)
+
+
+def test_build_bit_exact_vs_build_state():
+    """The acceptance contract: an initial ControlPlane build is bit-exact
+    against an equivalent full ``build_state`` rebuild (and keeps the
+    name→id maps build_state returned once and lost)."""
+    cp = _cp()
+    st, ids = build_state(SERVICES, CLUSTERS)
+    snap = cp.snapshot()
+    for name in st._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(snap, name)),
+                                      np.asarray(getattr(st, name)),
+                                      err_msg=f"field {name!r}")
+    assert cp.ids == ids
+    assert cp.cluster_id("stable") == ids["clusters"]["stable"]
+    assert cp.service_id("payments") == ids["services"]["payments"]
+
+
+def test_one_version_bump_per_transaction():
+    cp = _cp()
+    c = Consumer(cp)
+    with cp.transaction():
+        cp.add_endpoint("stable", instance=9)
+        cp.set_policy("canary", POLICY_WEIGHTED)
+        cp.set_weight("canary", instance=0, weight=3.0)
+        cp.upsert_rule("payments", 1, "silver", "stable")
+    assert cp.version == 1
+    assert int(c.routing.version) == 1            # one bump for four deltas
+    assert len(c.plans) == 1                      # one buffer swap
+    # all four deltas landed atomically
+    r = c.routing
+    sid, cid = cp.service_id("payments"), cp.cluster_id("canary")
+    assert int(r.cluster_ep_count[cp.cluster_id("stable")]) == 4
+    assert int(r.cluster_policy[cid]) == POLICY_WEIGHTED
+    assert int(r.svc_rule_count[sid]) == 2
+    # an empty transaction is a no-op: no bump, no swap
+    with cp.transaction():
+        pass
+    assert cp.version == 1 and len(c.plans) == 1
+
+
+def test_ordering_bottom_up_add_top_down_delete():
+    """The paper's §4.2 discipline, observable via the commit journal: an
+    add writes the endpoint row before the cluster count that exposes it; a
+    delete shrinks the count before compacting rows."""
+    cp = _cp()
+    with cp.transaction():
+        slot = cp.add_endpoint("stable", instance=9)
+    log = cp.last_commit_log
+    row = log.index(("ep_row", slot, 9))
+    count = log.index(("cluster_count", cp.cluster_id("stable"), +1))
+    assert row < count, log
+
+    with cp.transaction():
+        cp.remove_endpoint("stable", instance=9)
+    log = cp.last_commit_log
+    assert log[0] == ("cluster_count", cp.cluster_id("stable"), -1), log
+    assert any(op[0] == "ep_clear" for op in log[1:])
+
+
+def test_drain_before_remove():
+    """drain: weight drops to 0 at once, the row survives while any
+    consumer still counts load against it, and a later commit reaps it."""
+    cp = _cp()
+    c = Consumer(cp)
+    slot = cp.endpoint_slot("stable", 3)
+    c.set_load(slot, 2)                            # in-flight connections
+    cp.drain_endpoint("stable", 3)
+    assert float(c.routing.ep_weight[slot]) == 0.0
+    assert cp.endpoint_slot("stable", 3) == slot   # still present
+    cp.reap()                                      # still loaded: no-op
+    assert cp.endpoint_slot("stable", 3) == slot
+    v = cp.version
+    c.set_load(slot, 0)                            # connections completed
+    cp.reap()
+    assert cp.endpoint_slot("stable", 3) < 0       # reaped
+    assert ("reap", "stable", 3) in cp.last_commit_log
+    assert cp.version == v + 1
+    assert int(c.routing.cluster_ep_count[cp.cluster_id("stable")]) == 2
+
+
+def test_drain_of_idle_endpoint_reaps_same_commit():
+    cp = _cp()
+    c = Consumer(cp)
+    cp.drain_endpoint("stable", 3)                 # no load anywhere
+    assert cp.endpoint_slot("stable", 3) < 0
+    assert cp.version == 1                         # drain+reap, one commit
+
+
+def test_swap_with_last_migrates_load_and_zeroes_vacated_slot():
+    """Removing a mid-window endpoint compacts by swap-with-last: the moved
+    endpoint carries its in-flight load to its new slot, the vacated slot is
+    fully zeroed, and pool endpoint references remap old→new."""
+    cp = ControlPlane([ServiceConfig("s", rules=[Rule(0, None, "pool")])],
+                      [Cluster("pool", endpoints=[0, 1, 2])])
+    c = Consumer(cp)
+    c.set_load(2, 5)                               # load on instance 2 @ slot 2
+    cp.remove_endpoint("pool", 1)                  # slot 1 vacated, 2 → 1
+    r = c.routing
+    assert list(np.asarray(r.ep_instance[:3])) == [0, 2, -1]
+    assert list(np.asarray(r.ep_load[:3])) == [0, 5, 0]
+    # a connection pinned to old slot 2 must now release slot 1; one pinned
+    # to the removed slot 1 must release nothing
+    refs = remap_endpoints(c.plans[-1], jnp.array([2, 1, 0, -1], jnp.int32))
+    assert list(np.asarray(refs)) == [1, -1, 0, -1]
+    # the vacated slot is reusable with a clean counter
+    slot = cp.add_endpoint("pool", instance=7)
+    assert slot == 2
+    assert int(c.routing.ep_load[2]) == 0
+
+
+def test_endpoint_window_reuse_via_free_list():
+    """Growing a cluster past its window capacity relocates it; the vacated
+    extent returns to the free-list and the next allocation reuses it."""
+    cp = ControlPlane(
+        [ServiceConfig("s", rules=[Rule(0, None, "a")])],
+        [Cluster("a", endpoints=[0, 1]), Cluster("b", endpoints=[2, 3])])
+    c = Consumer(cp)
+    # cluster a is full (cap == 2): the add relocates its window
+    with cp.transaction():
+        cp.add_endpoint("a", instance=9)
+    log = cp.last_commit_log
+    assert any(op[0] == "cluster_window" for op in log)
+    r = c.routing
+    a = cp.cluster_id("a")
+    start = int(r.cluster_ep_start[a])
+    assert start != 0 and int(r.cluster_ep_count[a]) == 3
+    assert [int(r.ep_instance[start + j]) for j in range(3)] == [0, 1, 9]
+    # loads of the moved endpoints migrated; old slots zeroed
+    assert list(np.asarray(r.ep_instance[:2])) == [-1, -1]
+    # a new cluster's window allocates first-fit from the freed extent
+    cp.add_cluster("c", endpoints=[5, 6])
+    assert int(c.routing.cluster_ep_start[cp.cluster_id("c")]) == 0
+
+
+def test_upsert_rule_replace_and_append():
+    cp = _cp()
+    c = Consumer(cp)
+    sid = cp.service_id("front")
+    # replace: same (field, value) retargets the cluster in place
+    cp.upsert_rule("front", 0, "v2", "stable")
+    r = c.routing
+    assert int(r.svc_rule_count[sid]) == 2
+    s0 = int(r.svc_rule_start[sid])
+    assert int(r.rule_cluster[s0]) == cp.cluster_id("stable")
+    # append: new (field, value) grows the chain (window relocation OK)
+    cp.upsert_rule("front", 3, "eu", "gold-pool")
+    r = c.routing
+    assert int(r.svc_rule_count[sid]) == 3
+    s0 = int(r.svc_rule_start[sid])
+    assert int(r.rule_value[s0 + 2]) == fnv1a("eu")
+    assert int(r.rule_cluster[s0 + 2]) == cp.cluster_id("gold-pool")
+    # remove: top-down (count first), vacated row cleared
+    cp.remove_rule("front", 3, "eu")
+    r = c.routing
+    assert int(r.svc_rule_count[sid]) == 2
+    assert cp.last_commit_log[0][0] == "svc_count"
+
+
+def test_add_service_and_cluster_routable():
+    cp = _cp()
+    c = Consumer(cp)
+    with cp.transaction():
+        cp.add_cluster("new-pool", policy=POLICY_RR, endpoints=[6, 7])
+        cp.add_service("checkout", rules=[Rule(2, None, "new-pool")])
+    r = c.routing
+    sid = cp.service_id("checkout")
+    cid = cp.cluster_id("new-pool")
+    assert int(r.svc_rule_count[sid]) == 1
+    s0 = int(r.svc_rule_start[sid])
+    assert int(r.rule_cluster[s0]) == cid
+    e0 = int(r.cluster_ep_start[cid])
+    assert [int(r.ep_instance[e0 + j]) for j in range(2)] == [6, 7]
+    assert cp.version == 1
+
+
+def test_transaction_abort_discards_staged_writes():
+    cp = _cp()
+    c = Consumer(cp)
+    with pytest.raises(KeyError):
+        with cp.transaction():
+            cp.add_endpoint("stable", instance=9)
+            cp.remove_endpoint("stable", instance=999)   # no such endpoint
+    assert cp.version == 0
+    assert int(c.routing.version) == 0
+    assert int(c.routing.cluster_ep_count[cp.cluster_id("stable")]) == 3
+
+
+def test_nested_transaction_raises():
+    cp = _cp()
+    with pytest.raises(RuntimeError):
+        with cp.transaction():
+            with cp.transaction():
+                pass
+
+
+def test_apply_plan_preserves_datapath_state():
+    """The swap never touches what the datapath owns: rr cursors pass
+    through, untouched endpoints keep their live load, version bumps once."""
+    cp = _cp()
+    c = Consumer(cp)
+    c.routing = c.routing._replace(
+        rr_cursor=c.routing.rr_cursor.at[0].set(1),
+        ep_load=c.routing.ep_load.at[5].set(4))
+    cp.set_weight("gold-pool", 5, 9.0)
+    r = c.routing
+    assert int(r.rr_cursor[0]) == 1
+    assert int(r.ep_load[5]) == 4
+    assert float(r.ep_weight[5]) == 9.0
+    assert int(r.version) == 1
+
+
+def test_set_weight_cancels_pending_drain():
+    """Re-weighting a draining endpoint means the operator changed their
+    mind: the reaper must not remove it once its load hits zero."""
+    cp = _cp()
+    c = Consumer(cp)
+    slot = cp.endpoint_slot("stable", 3)
+    c.set_load(slot, 1)
+    cp.drain_endpoint("stable", 3)
+    cp.set_weight("stable", 3, 2.5)            # cancel the drain
+    c.set_load(slot, 0)
+    cp.reap()
+    assert cp.endpoint_slot("stable", 3) == slot   # still present
+    assert float(c.routing.ep_weight[slot]) == 2.5
+
+
+def test_abandoned_consumer_does_not_pin_drained_endpoint():
+    """Consumers are weak-referenced: a dropped loop whose frozen state
+    still showed load must not block the reaper (or receive splices)."""
+    cp = _cp()
+    keep = Consumer(cp)
+    ghost = Consumer(cp)
+    slot = cp.endpoint_slot("stable", 3)
+    ghost.set_load(slot, 7)                    # stale load, then abandoned
+    del ghost
+    cp.drain_endpoint("stable", 3)             # keep's load is zero
+    assert cp.endpoint_slot("stable", 3) < 0   # reaped despite the ghost
+    assert int(keep.routing.version) == 1

@@ -128,6 +128,46 @@ def test_delta_refresh_add_remove_endpoint(state):
     assert int(st3.cluster_ep_count[ci]) == 2
 
 
+def test_delta_remove_endpoint_zeroes_vacated_slot(state):
+    """Regression (swap-with-last hazard): the vacated ``last`` slot used
+    to keep the moved endpoint's stale ep_instance/ep_load — a later
+    add_endpoint there zeroed live load out from under in-flight
+    connections.  Now the swap migrates the load and zeroes the slot."""
+    st, ids = state
+    ci = ids["clusters"]["canary"]                 # slots 0, 1 (insts 0, 1)
+    st = st._replace(ep_load=st.ep_load.at[1].set(3))   # in-flight on slot 1
+    st2 = delta.remove_endpoint(st, ci, ep_off=0)
+    assert int(st2.ep_instance[0]) == 1            # swapped-in endpoint
+    assert int(st2.ep_load[0]) == 3                # load migrated with it
+    assert int(st2.ep_instance[1]) == -1           # vacated slot zeroed
+    assert int(st2.ep_load[1]) == 0
+    assert float(st2.ep_weight[1]) == 1.0
+    # release-after-move: the in-flight connection completes against the
+    # moved endpoint's NEW slot; a fresh occupant of the vacated slot keeps
+    # a clean, untouched counter
+    st3 = delta.add_endpoint(st2, ci, ep_slot=1, instance=9)
+    st4 = policies.release(st3, jnp.array([0]), jnp.ones((1,), bool))
+    assert int(st4.ep_load[0]) == 2
+    assert int(st4.ep_load[1]) == 0
+
+
+def test_delta_remove_rule_clears_vacated_row(state):
+    """Same hazard on the rule tables: the vacated last row resets to
+    empty-state defaults instead of keeping a stale (field, value, cluster)
+    triple a later add_rule could briefly expose."""
+    st, ids = state
+    si = ids["services"]["front"]                  # rules at slots 0, 1
+    st2 = delta.remove_rule(st, si, rule_off=0)
+    assert int(st2.svc_rule_count[si]) == 1
+    # the wildcard rule compacted into slot 0
+    assert int(st2.rule_value[0]) == -1
+    assert int(st2.rule_cluster[0]) == ids["clusters"]["stable"]
+    # slot 1 vacated and cleared
+    assert int(st2.rule_field[1]) == 0
+    assert int(st2.rule_value[1]) == -1
+    assert int(st2.rule_cluster[1]) == -1
+
+
 @pytest.mark.parametrize("policy", [POLICY_RR, POLICY_LEAST_REQUEST])
 def test_staged_rank_matches_oracle_on_no_route_mix(policy):
     """Regression for the staged-path LB rank skew: NO_ROUTE requests used

@@ -1,14 +1,18 @@
 """End-to-end serving-engine tests: the XLB in-graph engine and the two
 sidecar baselines must emit bit-identical token streams per request (greedy
-decode is per-sequence independent of which instance/slot serves it)."""
+decode is per-sequence independent of which instance/slot serves it).
+
+All three engines are driven by ONE generic loop through the Balancer
+protocol — the test itself is the proof that no per-engine glue remains.
+"""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import get_config, smoke_config
-from repro.core import interpose, sidecar
+from repro.core.balancer import ENGINE_KINDS, Balancer, RequestBatch, \
+    make_balancer
 from repro.core.routing_table import (Cluster, POLICY_RR, Rule, ServiceConfig,
                                       build_state)
 from repro.models import model as M
@@ -18,6 +22,7 @@ I, C, MAXLEN, NREQ = 2, 3, 24, 4
 
 @pytest.fixture(scope="module")
 def setup():
+    from repro.configs import get_config, smoke_config
     cfg = smoke_config(get_config("xlb-service-model"))
     params = M.init_params(cfg, jax.random.PRNGKey(7), dtype=jnp.float32)
     services = [ServiceConfig("svc", rules=[Rule(0, None, "pool")])]
@@ -31,14 +36,17 @@ def _reqs(cfg, n=NREQ, pad_to=8):
     rid[:n] = np.arange(n)
     tok = np.zeros((pad_to,), np.int32)
     tok[:n] = 3 + np.arange(n) % (cfg.vocab - 3)
-    return interpose.RequestBatch(
+    return RequestBatch(
         req_id=jnp.asarray(rid), svc=jnp.zeros((pad_to,), jnp.int32),
         features=jnp.zeros((pad_to, 8), jnp.int32), token=jnp.asarray(tok),
         msg_bytes=jnp.full((pad_to,), 100, jnp.int32))
 
 
-def _drain_xlb(cfg, params, routing, steps=12):
-    eng = interpose.Engine(cfg, I, C, MAXLEN)
+def _drain(cfg, params, routing, mode, steps=12):
+    """One driver for every engine: admit on step 0, then pure decode —
+    identical bookkeeping against the protocol's uniform state/out shapes."""
+    eng = make_balancer(mode, cfg, I, C, MAXLEN)
+    assert isinstance(eng, Balancer)
     state = eng.init_state(routing, dtype=jnp.float32)
     serve = eng.make_jitted(donate=False)
     reqs = _reqs(cfg)
@@ -48,47 +56,40 @@ def _drain_xlb(cfg, params, routing, steps=12):
         reqs = _reqs(cfg, n=0)                     # only admit on step 0
         emitted = np.asarray(out["emitted"])
         pool_req = np.asarray(state.pool.req_id)
-        done = np.asarray(out["done"])
         act = np.asarray(state.pool.active)
         for i in range(I):
             for s in range(C):
                 r = pool_req[i, s]
                 if r >= 0 and act[i, s]:
                     streams.setdefault(int(r), []).append(int(emitted[i, s]))
-                elif done[i, s]:
-                    pass
     return streams, state
-
-
-def _drain_sidecar(cfg, params, routing, mode, steps=12):
-    eng = sidecar.SidecarEngine(cfg, I, C, MAXLEN, routing, mode=mode)
-    eng.admit(_reqs(cfg))
-    streams = {}
-    for t in range(steps):
-        before_req = eng.pool_req.copy()
-        before_act = eng.pool_active.copy()
-        eng.step(params)
-        for i in range(I):
-            for s in range(C):
-                if before_act[i, s]:
-                    streams.setdefault(int(before_req[i, s]), []).append(
-                        int(eng.pool_tok[i, s]))
-    return streams
 
 
 def test_xlb_emits_all_requests(setup):
     cfg, params, routing = setup
-    streams, state = _drain_xlb(cfg, params, routing)
+    streams, state = _drain(cfg, params, routing, "xlb")
     assert set(streams) == set(range(NREQ))
     assert int(state.metrics.requests.sum()) == NREQ
     assert int(state.metrics.no_route_match) == 0
 
 
+def test_sidecars_emit_all_requests(setup):
+    """The protocol contract (out keys, pool/metrics state shapes) holds for
+    the host-interposed engines too."""
+    cfg, params, routing = setup
+    for mode in ("istio", "cilium"):
+        streams, state = _drain(cfg, params, routing, mode, steps=10)
+        assert set(streams) == set(range(NREQ)), mode
+        assert int(state.metrics.requests.sum()) == NREQ
+        assert int(state.metrics.no_route_match) == 0
+        assert int(state.metrics.rx_bytes.sum()) > 0
+
+
 def test_xlb_matches_sidecars_tokenwise(setup):
     cfg, params, routing = setup
-    xlb, _ = _drain_xlb(cfg, params, routing, steps=10)
-    istio = _drain_sidecar(cfg, params, routing, "istio", steps=10)
-    cilium = _drain_sidecar(cfg, params, routing, "cilium", steps=10)
+    xlb, _ = _drain(cfg, params, routing, "xlb", steps=10)
+    istio, _ = _drain(cfg, params, routing, "istio", steps=10)
+    cilium, _ = _drain(cfg, params, routing, "cilium", steps=10)
     for r in range(NREQ):
         n = min(len(xlb[r]), len(istio[r]), len(cilium[r]))
         assert n >= 3
@@ -97,10 +98,21 @@ def test_xlb_matches_sidecars_tokenwise(setup):
             f"cilium={cilium[r][:n]}")
 
 
+def test_every_engine_kind_constructs(setup):
+    """make_balancer covers exactly the advertised kinds and each satisfies
+    the runtime-checkable protocol."""
+    cfg, params, routing = setup
+    for kind in ENGINE_KINDS:
+        eng = make_balancer(kind, cfg, I, C, MAXLEN)
+        assert isinstance(eng, Balancer), kind
+    with pytest.raises(ValueError):
+        make_balancer("envoy", cfg, I, C, MAXLEN)
+
+
 def test_slot_reuse_after_completion(setup):
     """Pool slots freed by EOS/length completion get reused by new arrivals."""
     cfg, params, routing = setup
-    eng = interpose.Engine(cfg, I, C, max_len=6)   # force quick completion
+    eng = make_balancer("xlb", cfg, I, C, max_len=6)  # force quick completion
     state = eng.init_state(routing, dtype=jnp.float32)
     serve = eng.make_jitted(donate=False)
     state, _ = serve(params, state, _reqs(cfg, n=6))   # fill all 6 slots

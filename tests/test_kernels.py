@@ -5,11 +5,19 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.balancer import PoolState, RequestBatch
 from repro.kernels import ops, ref
 from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, Cluster,
                                       POLICY_LEAST_REQUEST, POLICY_RANDOM,
                                       POLICY_RR, POLICY_WEIGHTED, Rule,
                                       ServiceConfig, build_state)
+
+
+def _rb(rid, svc, feats, msgb, tok=None) -> RequestBatch:
+    """Assemble the pytree the ops wrappers take (token only matters for
+    the commit path)."""
+    return RequestBatch(rid, svc, feats,
+                        jnp.zeros_like(rid) if tok is None else tok, msgb)
 
 TOLS = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
         jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
@@ -203,6 +211,25 @@ def _assert_admit_matches(got, want):
                                       err_msg=f"admit field {name!r}")
 
 
+def _assert_admit_commit_matches(got, want):
+    """ops.AdmitCommitOut (nested PoolState) vs the flat kernel-level
+    AdmitCommitResult the oracle returns."""
+    for name in ("cluster", "endpoint", "instance", "slot", "ok", "ep_load",
+                 "rr_cursor", "svc_requests", "svc_tx_bytes", "no_route",
+                 "held"):
+        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+                                      np.asarray(getattr(want, name)),
+                                      err_msg=f"admit field {name!r}")
+    for name in ("req_id", "endpoint", "svc", "length", "token"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(got.pool, name)),
+            np.asarray(getattr(want, f"pool_{name}")),
+            err_msg=f"pool field {name!r}")
+    np.testing.assert_array_equal(np.asarray(got.pool.active),
+                                  np.asarray(want.pool_active) > 0,
+                                  err_msg="pool field 'active'")
+
+
 @pytest.mark.parametrize("R,block_r", [(64, 64), (128, 32), (256, 64)])
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_admit_matches_sequential_oracle(R, block_r, seed):
@@ -212,7 +239,7 @@ def test_admit_matches_sequential_oracle(R, block_r, seed):
     rid, svc, feats, msgb, rnd, gum = _admit_batch(R, seed)
     I, C = 8, 4                                # small pool → forces held
     free = jax.random.bernoulli(jax.random.PRNGKey(seed + 20), 0.5, (I, C))
-    got = ops.admit(rid, svc, feats, msgb, st, free, rnd, gum,
+    got = ops.admit(_rb(rid, svc, feats, msgb), st, free, rnd, gum,
                     block_r=block_r)
     want = ref.admit_ref(rid, svc, feats, msgb, st, free, rnd, gum)
     _assert_admit_matches(got, want)
@@ -229,7 +256,8 @@ def test_admit_ragged_batch_padding():
     R = 40                                     # 40 % 16 != 0
     rid, svc, feats, msgb, rnd, gum = _admit_batch(R, seed=7)
     free = jnp.ones((8, 4), bool)
-    got = ops.admit(rid, svc, feats, msgb, st, free, rnd, gum, block_r=16)
+    got = ops.admit(_rb(rid, svc, feats, msgb), st, free, rnd, gum,
+                    block_r=16)
     want = ref.admit_ref(rid, svc, feats, msgb, st, free, rnd, gum)
     _assert_admit_matches(got, want)
     assert got.cluster.shape == (R,)
@@ -239,7 +267,7 @@ def test_admit_empty_batch():
     """R == 0 short-circuits: no kernel launch, state passes through."""
     st, _, _ = _admit_state(seed=4)
     z = jnp.zeros((0,), jnp.int32)
-    got = ops.admit(z, z, jnp.zeros((0, 8), jnp.int32), z, st,
+    got = ops.admit(_rb(z, z, jnp.zeros((0, 8), jnp.int32), z), st,
                     jnp.ones((8, 4), bool), z,
                     jnp.zeros((0, MAX_EPS_PER_CLUSTER), jnp.float32))
     want = ref.admit_ref(z, z, jnp.zeros((0, 8), jnp.int32), z, st,
@@ -263,7 +291,7 @@ def test_admit_empty_cluster_unroutable():
     rnd = jnp.zeros((R,), jnp.int32)
     gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
     free = jnp.ones((8, 4), bool)
-    got = ops.admit(rid, svc, feats, msgb, st, free, rnd, gum)
+    got = ops.admit(_rb(rid, svc, feats, msgb), st, free, rnd, gum)
     want = ref.admit_ref(rid, svc, feats, msgb, st, free, rnd, gum)
     _assert_admit_matches(got, want)
     assert np.all(np.asarray(got.cluster) == ids["clusters"]["cl3b"])
@@ -291,7 +319,8 @@ def test_admit_sequential_least_request_spreads():
     z = jnp.zeros((R,), jnp.int32)
     gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
     free = jnp.ones((3, 32), bool)
-    got = ops.admit(rid, svc, feats, z + 1, st, free, z, gum, block_r=8)
+    got = ops.admit(_rb(rid, svc, feats, z + 1), st, free, z, gum,
+                    block_r=8)
     want = ref.admit_ref(rid, svc, feats, z + 1, st, free, z, gum)
     _assert_admit_matches(got, want)
     # water-filling: loads 0/4/9 + 32 requests → final loads equalise
@@ -317,8 +346,8 @@ def test_admit_table_blockspec_binds_2d():
     z = jnp.zeros((R,), jnp.int32)
     gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
     free = jnp.zeros((4, 4), bool).at[2, 1].set(True).at[2, 3].set(True)
-    got = ops.admit(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1, st, free,
-                    z, gum)
+    got = ops.admit(_rb(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1), st,
+                    free, z, gum)
     assert list(np.asarray(got.slot)[:2]) == [1, 3]
     assert int(np.asarray(got.ok).sum()) == 2
     assert int(np.asarray(got.held)) == R - 2
@@ -354,17 +383,17 @@ def test_admit_commit_matches_sequential_oracle(R, block_r, seed):
                              dtype=jnp.int32)
     I, C = 8, 4                                # small pool → forces held
     pool = _pool_arrays(I, C, seed + 40)
-    got = ops.admit_commit(rid, svc, feats, msgb, tok, st, *pool, rnd, gum,
-                           block_r=block_r)
+    got = ops.admit_commit(_rb(rid, svc, feats, msgb, tok), st,
+                           PoolState(*pool), rnd, gum, block_r=block_r)
     want = ref.admit_commit_ref(rid, svc, feats, msgb, tok, st, *pool,
                                 rnd, gum)
-    _assert_admit_matches(got, want)
+    _assert_admit_commit_matches(got, want)
     assert int(np.asarray(got.no_route)) > 0
     assert int(np.asarray(got.held)) > 0
     assert int(np.asarray(got.ok).sum()) > 0
     # pre-existing connections survive the batch untouched
     pre = np.asarray(pool[5])
-    np.testing.assert_array_equal(np.asarray(got.pool_req_id)[pre],
+    np.testing.assert_array_equal(np.asarray(got.pool.req_id)[pre],
                                   np.asarray(pool[0])[pre])
 
 
@@ -378,9 +407,9 @@ def test_admit_commit_pool_matches_staged_scatter():
     tok = jax.random.randint(jax.random.PRNGKey(12), (R,), 0, 97,
                              dtype=jnp.int32)
     pool = _pool_arrays(8, 4, seed=13)
-    got = ops.admit_commit(rid, svc, feats, msgb, tok, st, *pool, rnd, gum,
-                           block_r=32)
-    base = ops.admit(rid, svc, feats, msgb, st, ~pool[5], rnd, gum,
+    got = ops.admit_commit(_rb(rid, svc, feats, msgb, tok), st,
+                           PoolState(*pool), rnd, gum, block_r=32)
+    base = ops.admit(_rb(rid, svc, feats, msgb), st, ~pool[5], rnd, gum,
                      block_r=32)
     for name in base._fields:
         np.testing.assert_array_equal(np.asarray(getattr(got, name)),
@@ -395,8 +424,8 @@ def test_admit_commit_pool_matches_staged_scatter():
               request_map.scatter_to_pool(pool[4], assign, tok),
               request_map.scatter_to_pool(pool[5], assign,
                                           jnp.ones_like(rid) > 0)]
-    fused = [got.pool_req_id, got.pool_endpoint, got.pool_svc,
-             got.pool_length, got.pool_token, got.pool_active > 0]
+    fused = [got.pool.req_id, got.pool.endpoint, got.pool.svc,
+             got.pool.length, got.pool.token, got.pool.active]
     for f, s, name in zip(fused, staged, ("req_id", "endpoint", "svc",
                                           "length", "token", "active")):
         np.testing.assert_array_equal(np.asarray(f), np.asarray(s),
@@ -422,8 +451,8 @@ def test_admit_integer_free_mask_and_rogue_svc():
     z = jnp.zeros((R,), jnp.int32)
     gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
     free = jnp.array([[0, 2, 0, 3]], jnp.int32)    # 2 free slots, not 5
-    got = ops.admit(rid, svc, jnp.zeros((R, 8), jnp.int32), z + 7, st,
-                    free, z, gum)
+    got = ops.admit(_rb(rid, svc, jnp.zeros((R, 8), jnp.int32), z + 7),
+                    st, free, z, gum)
     want = ref.admit_ref(rid, svc, jnp.zeros((R, 8), jnp.int32), z + 7, st,
                          free, z, gum)
     _assert_admit_matches(got, want)
@@ -438,13 +467,13 @@ def test_admit_commit_empty_batch_pool_passthrough():
     st, _, _ = _admit_state(seed=6)
     z = jnp.zeros((0,), jnp.int32)
     pool = _pool_arrays(8, 4, seed=14)
-    got = ops.admit_commit(z, z, jnp.zeros((0, 8), jnp.int32), z, z, st,
-                           *pool, z,
+    got = ops.admit_commit(_rb(z, z, jnp.zeros((0, 8), jnp.int32), z, z),
+                           st, PoolState(*pool), z,
                            jnp.zeros((0, MAX_EPS_PER_CLUSTER), jnp.float32))
-    np.testing.assert_array_equal(np.asarray(got.pool_req_id),
+    np.testing.assert_array_equal(np.asarray(got.pool.req_id),
                                   np.asarray(pool[0]))
-    np.testing.assert_array_equal(np.asarray(got.pool_active),
-                                  np.asarray(pool[5]).astype(np.int32))
+    np.testing.assert_array_equal(np.asarray(got.pool.active),
+                                  np.asarray(pool[5]))
     np.testing.assert_array_equal(np.asarray(got.ep_load),
                                   np.asarray(st.ep_load))
 
@@ -475,13 +504,21 @@ def test_complete_matches_sequential_oracle(I, C, block_i, seed):
     pool, nxt, load, rx = _complete_case(I, C, seed)
     # mix of lengths: some hit the max_len budget regardless of token
     max_len = 8
-    got = ops.complete(*pool, nxt, load, rx, eos=1, max_len=max_len,
-                       block_i=block_i)
+    got = ops.complete(PoolState(*pool), nxt, load, rx, eos=1,
+                       max_len=max_len, block_i=block_i)
     want = ref.complete_ref(*pool, nxt, load, rx, eos=1, max_len=max_len)
-    for name in got._fields:
-        np.testing.assert_array_equal(np.asarray(getattr(got, name)),
+    for name in ("req_id", "endpoint", "svc", "length", "token"):
+        np.testing.assert_array_equal(np.asarray(getattr(got.pool, name)),
                                       np.asarray(getattr(want, name)),
                                       err_msg=f"complete field {name!r}")
+    np.testing.assert_array_equal(np.asarray(got.pool.active),
+                                  np.asarray(want.active) > 0)
+    np.testing.assert_array_equal(np.asarray(got.done),
+                                  np.asarray(want.done) > 0)
+    np.testing.assert_array_equal(np.asarray(got.ep_load),
+                                  np.asarray(want.ep_load))
+    np.testing.assert_array_equal(np.asarray(got.rx_bytes),
+                                  np.asarray(want.rx_bytes))
     assert int(np.asarray(got.done).sum()) > 0
     # inactive lanes never touch counters/metrics
     inact = ~np.asarray(pool[5])
@@ -497,11 +534,11 @@ def test_complete_all_inactive_is_noop():
     load = jnp.arange(MAX_ENDPOINTS, dtype=jnp.int32)
     rx = jnp.arange(MAX_SERVICES, dtype=jnp.int32)
     nxt = jnp.ones((I, C), jnp.int32)          # EOS everywhere — but inactive
-    got = ops.complete(*pool, nxt, load, rx, eos=1, max_len=4)
+    got = ops.complete(PoolState(*pool), nxt, load, rx, eos=1, max_len=4)
     assert int(np.asarray(got.done).sum()) == 0
     np.testing.assert_array_equal(np.asarray(got.ep_load), np.asarray(load))
     np.testing.assert_array_equal(np.asarray(got.rx_bytes), np.asarray(rx))
-    np.testing.assert_array_equal(np.asarray(got.token),
+    np.testing.assert_array_equal(np.asarray(got.pool.token),
                                   np.asarray(pool[4]))
 
 
@@ -510,8 +547,9 @@ def test_complete_releases_load_exactly_once():
     (sum check across a multi-tile grid)."""
     I, C = 8, 8
     pool, nxt, load, rx = _complete_case(I, C, seed=7, active_p=0.9)
-    got = ops.complete(*pool, nxt, load, rx, eos=1, max_len=6, block_i=2)
-    done = np.asarray(got.done) > 0
+    got = ops.complete(PoolState(*pool), nxt, load, rx, eos=1, max_len=6,
+                       block_i=2)
+    done = np.asarray(got.done)
     eps = np.asarray(pool[1])
     n_rel = int(((eps >= 0) & done).sum())
     assert int(np.asarray(load).sum() - np.asarray(got.ep_load).sum()) == n_rel

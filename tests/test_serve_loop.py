@@ -1,6 +1,7 @@
 """Host serving-driver tests: drop accounting, ragged and empty admission
-batches end-to-end through ServeLoop.tick (the lax.cond skip path), and
-pool/metrics invariants across a full drain."""
+batches end-to-end through ServeLoop.tick (the lax.cond skip path),
+pool/metrics invariants across a full drain, the drain report, and the
+control-plane seam (zero-recompilation refresh, three-engine visibility)."""
 
 import jax
 import jax.numpy as jnp
@@ -9,6 +10,8 @@ import pytest
 
 from repro.configs import get_config, smoke_config
 from repro.core import interpose
+from repro.core.balancer import ENGINE_KINDS, make_balancer
+from repro.core.control import ControlPlane
 from repro.core.routing_table import (Cluster, POLICY_RR, Rule, ServiceConfig,
                                       build_state)
 from repro.models import model as M
@@ -114,11 +117,75 @@ def test_drain_releases_all_load(setup):
     loop = _loop(cfg, params, max_len=4)
     for r in range(5):                                 # 5 reqs through 6 slots
         loop.submit(_req(r))
-    done = loop.drain(max_ticks=100)
-    assert len(done) == 5 and not loop.dropped
+    rep = loop.drain(max_ticks=100)
+    assert len(rep.done) == 5 and not rep.dropped
+    assert rep.queued == 0 and rep.inflight == 0
     st = loop.state
     assert int(np.asarray(st.pool.active).sum()) == 0
     np.testing.assert_array_equal(np.asarray(st.routing.ep_load),
                                   np.zeros_like(np.asarray(
                                       st.routing.ep_load)))
     assert int(np.asarray(st.metrics.rx_bytes).sum()) > 0
+
+
+def _cp_pool(policy=POLICY_RR):
+    return ControlPlane(
+        [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
+        [Cluster("pool", endpoints=list(range(I)), policy=policy)])
+
+
+def test_drain_reports_stranded_work(setup):
+    """drain() must say what it left behind (queued/inflight), not just
+    return the completions."""
+    cfg, params = setup
+    loop = _loop(cfg, params, require_match=True)
+    for r in range(2):
+        loop.submit(_req(r, {"path": "v2"}))
+    loop.submit(_req(50))                      # unroutable: no v2 header
+    rep = loop.drain(max_ticks=30)             # < 64 retries: still queued
+    assert {r.req_id for r in rep.done} == {0, 1}
+    assert rep.queued == 1 and rep.inflight == 0
+    assert rep.queued == len(loop.queue)
+    assert not rep.dropped
+
+
+def test_delta_refresh_zero_recompilation(setup):
+    """The paper's no-disturbance property, pinned: a ControlPlane
+    transaction between ticks (endpoint add → window relocation + a weight
+    change) must not add a single entry to the jitted serve_step cache —
+    the datapath re-reads new buffers, it is never re-traced."""
+    cfg, params = setup
+    cp = _cp_pool()
+    eng = interpose.Engine(cfg, I, C, 16)
+    loop = ServeLoop(eng, params, cp, admit_batch=4)
+    for r in range(2):
+        loop.submit(_req(r))
+    loop.tick()
+    loop.tick()                                # both cond branches traced
+    n0 = loop.serve_step._cache_size()
+    assert n0 >= 1
+    with cp.transaction():                     # relocates the full window
+        cp.add_endpoint("pool", instance=1)
+        cp.set_weight("pool", instance=0, weight=2.0)
+    loop.submit(_req(7))
+    loop.tick()
+    loop.tick()
+    assert loop.serve_step._cache_size() == n0
+    assert int(np.asarray(loop.routing.version)) == 1
+    assert int(np.asarray(
+        loop.routing.cluster_ep_count)[cp.cluster_id("pool")]) == I + 1
+
+
+def test_weight_update_visible_to_all_three_engines(setup):
+    """One ControlPlane, three attached engines: a committed weight change
+    reaches the XLB device tables and both sidecar host routers alike."""
+    cfg, params = setup
+    cp = _cp_pool()
+    loops = {k: ServeLoop(make_balancer(k, cfg, I, C, 5), params, cp)
+             for k in ENGINE_KINDS}
+    with cp.transaction():
+        cp.set_weight("pool", instance=1, weight=7.5)
+    slot = cp.endpoint_slot("pool", 1)
+    for kind, lp in loops.items():
+        assert float(np.asarray(lp.routing.ep_weight)[slot]) == 7.5, kind
+        assert int(np.asarray(lp.routing.version)) == 1, kind
