@@ -171,6 +171,28 @@ def bench_fig12():
         emit("fig12", mode, "avg_ms", r["avg_ms"])
 
 
+def _git_commit() -> str:
+    import subprocess
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def _append_trend(bench: str, record: dict) -> None:
+    """One timestamped JSONL row per microbench run — BENCH_admit.json /
+    BENCH_step.json are overwritten every run, BENCH_TREND.jsonl accumulates
+    the per-PR perf history (benchmarks/README.md)."""
+    row = {"ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+           "commit": _git_commit(), "bench": bench}
+    row.update(record)
+    with open("BENCH_TREND.jsonl", "a") as f:
+        f.write(json.dumps(row) + "\n")
+    print("# appended BENCH_TREND.jsonl", flush=True)
+
+
 def _time_us(fn, *args, reps: int = 30, trials: int = 5) -> float:
     """Median-of-trials per-call latency in µs (robust to noisy-neighbour
     CPU: single-trial numbers on shared runners swing by an order of
@@ -278,10 +300,13 @@ def bench_admit():
     from repro.core.routing_table import MAX_EPS_PER_CLUSTER
     from repro.kernels import ops
 
+    from repro.kernels import tune
+
     n_instances, slots = 8, 64
     st = common.build_routing(n_instances)
     free = jnp.ones((n_instances, slots), bool)
-    record = {"batch": [], "staged_us": [], "fused_us": [], "speedup": []}
+    record = {"batch": [], "staged_us": [], "fused_us": [], "speedup": [],
+              "block_r": [], "fold": []}
     for R in (64, 256, 1024, 4096):
         svc = jnp.zeros((R,), jnp.int32)
         feats = jnp.zeros((R, 8), jnp.int32)
@@ -317,10 +342,14 @@ def bench_admit():
         record["staged_us"].append(round(times["staged"], 2))
         record["fused_us"].append(round(times["fused"], 2))
         record["speedup"].append(round(times["staged"] / times["fused"], 3))
+        block_r, fold = tune.plan_admit(R, free.shape)   # the cached plan
+        record["block_r"].append(block_r)
+        record["fold"].append(fold)
     with open("BENCH_admit.json", "w") as f:
         json.dump(record, f, indent=2)
         f.write("\n")
     print("# wrote BENCH_admit.json", flush=True)
+    _append_trend("admit", record)
 
 
 def bench_step():
@@ -335,9 +364,12 @@ def bench_step():
     from repro.core.balancer import PoolState
     from repro.kernels import ops
 
+    from repro.kernels import tune
+
     rstate = routing_table.empty_state()
     eos, max_len = 1, 16
-    record = {"pool": [], "staged_us": [], "fused_us": [], "speedup": []}
+    record = {"pool": [], "staged_us": [], "fused_us": [], "speedup": [],
+              "block_i": [], "fold": []}
     for I, C in ((2, 16), (8, 64), (16, 256)):
         ks = jax.random.split(jax.random.PRNGKey(0), 6)
         active = jax.random.bernoulli(ks[0], 0.7, (I, C))
@@ -388,6 +420,9 @@ def bench_step():
         record["staged_us"].append(round(times["staged"], 2))
         record["fused_us"].append(round(times["fused"], 2))
         record["speedup"].append(round(times["staged"] / times["fused"], 3))
+        block_i, fold = tune.plan_complete((I, C))      # the cached plan
+        record["block_i"].append(block_i)
+        record["fold"].append(fold)
 
     m = _measure_lb_fraction()                     # ROADMAP target: < 25%
     emit("step", "xlb", "lb_fraction_pct", m["lb_fraction_pct"])
@@ -397,16 +432,19 @@ def bench_step():
         json.dump(record, f, indent=2)
         f.write("\n")
     print("# wrote BENCH_step.json", flush=True)
+    _append_trend("step", record)
 
 
 def check_gates(remeasured: bool = False) -> None:
     """Regression gates (ROADMAP): the fused admission kernel must hold
-    speedup >= 1.3 over the staged chain at batch >= 256, per the last
-    recorded BENCH_admit.json — and all three engines must still drive the
-    serving launcher end-to-end through the Balancer protocol."""
+    speedup >= 1.3 over the staged chain at batch >= 256 per the last
+    recorded BENCH_admit.json; the fused completion kernel must hold
+    fused/staged >= 0.8 at the engine-sized 2x16 pool per BENCH_step.json;
+    and all three engines must still drive the serving launcher end-to-end
+    through the Balancer protocol."""
     if not remeasured:
-        print("# check: gating the last recorded BENCH_admit.json "
-              "(admit not re-measured this run)", flush=True)
+        print("# check: gating the last recorded BENCH_admit.json / "
+              "BENCH_step.json (not re-measured this run)", flush=True)
     try:
         with open("BENCH_admit.json") as f:
             rec = json.load(f)
@@ -422,6 +460,22 @@ def check_gates(remeasured: bool = False) -> None:
     print("# check: admit gate OK — "
           + ", ".join(f"{s:.2f}x@{b}" for b, s in
                       zip(rec["batch"], rec["speedup"]) if b >= 256),
+          flush=True)
+    try:
+        with open("BENCH_step.json") as f:
+            srec = json.load(f)
+    except FileNotFoundError:
+        sys.exit("check: BENCH_step.json not found — run "
+                 "`python -m benchmarks.run step` first")
+    floor = [(p, s) for p, s in zip(srec["pool"], srec["speedup"])
+             if p == "2x16" and s < 0.8]
+    if floor:
+        sys.exit("check: completion-kernel floor FAILED — "
+                 + ", ".join(f"fused/staged {s:.3f} < 0.8 at pool {p}"
+                             for p, s in floor))
+    print("# check: completion floor OK — "
+          + ", ".join(f"{s:.2f}x@{p}" for p, s in
+                      zip(srec["pool"], srec["speedup"]) if p == "2x16"),
           flush=True)
     smoke_engines()
 

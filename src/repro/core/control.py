@@ -15,8 +15,10 @@ datapath must never own —
   * **transactions**: ``with cp.transaction(): ...`` batches any number of
     named deltas — ``add_endpoint`` / ``drain_endpoint`` /
     ``remove_endpoint`` / ``set_policy`` / ``set_weight`` /
-    ``upsert_rule`` / ``remove_rule`` / ``add_service`` / ``add_cluster`` —
-    into **one** buffer swap with a **single version bump**.  Each delta's
+    ``upsert_rule`` / ``remove_rule`` / ``add_service`` / ``add_cluster``
+    / ``remove_service`` / ``remove_cluster`` (directory ids recycle
+    through free-lists, like the endpoint/rule window extents) — into
+    **one** buffer swap with a **single version bump**.  Each delta's
     primitive writes follow the paper's ordering discipline (adds
     bottom-up: endpoint row before the cluster count that exposes it;
     deletes top-down: the count shrinks before the row is compacted), and
@@ -67,7 +69,7 @@ from repro.core.routing_table import (MAX_CLUSTERS, MAX_ENDPOINTS,
 CONFIG_FIELDS = ("svc_rule_start", "svc_rule_count", "rule_field",
                  "rule_value", "rule_cluster", "cluster_ep_start",
                  "cluster_ep_count", "cluster_policy", "ep_instance",
-                 "ep_weight")
+                 "ep_weight", "ep_drained")
 
 
 class RefreshPlan(NamedTuple):
@@ -155,6 +157,12 @@ class _Store:
     ep_free: list
     rule_free: list
     draining: set           # {(cluster_name, instance)}
+    # directory-id recycling: removed service/cluster ids return here and
+    # are reused before the high-water counters grow the tables
+    svc_id_free: list = dataclasses.field(default_factory=list)
+    cluster_id_free: list = dataclasses.field(default_factory=list)
+    svc_id_next: int = 0
+    cluster_id_next: int = 0
 
 
 class _Txn:
@@ -191,6 +199,8 @@ class ControlPlane:
             rule_cursor += len(s.rules)
         _extent_free(store.ep_free, ep_cursor, MAX_ENDPOINTS - ep_cursor)
         _extent_free(store.rule_free, rule_cursor, MAX_RULES - rule_cursor)
+        store.svc_id_next = len(services)
+        store.cluster_id_next = len(clusters)
         self._store = store
         self._txn: _Txn | None = None
         self._refs: list[weakref.ref] = []
@@ -315,9 +325,13 @@ class ControlPlane:
         with self._auto() as t:
             if name in t.store.services:
                 raise ValueError(f"service {name!r} exists")
-            sid = len(t.store.services)
-            if sid >= MAX_SERVICES:
-                raise RuntimeError("service table full")
+            if t.store.svc_id_free:            # recycle a removed id first
+                sid = t.store.svc_id_free.pop(0)
+            else:
+                sid = t.store.svc_id_next
+                if sid >= MAX_SERVICES:
+                    raise RuntimeError("service table full")
+                t.store.svc_id_next += 1
             assert len(rules) <= MAX_RULES_PER_SVC
             start = _extent_alloc(t.store.rule_free, len(rules))
             for j, r in enumerate(rules):      # bottom-up: rows first
@@ -334,9 +348,13 @@ class ControlPlane:
         with self._auto() as t:
             if name in t.store.clusters:
                 raise ValueError(f"cluster {name!r} exists")
-            cid = len(t.store.clusters)
-            if cid >= MAX_CLUSTERS:
-                raise RuntimeError("cluster table full")
+            if t.store.cluster_id_free:        # recycle a removed id first
+                cid = t.store.cluster_id_free.pop(0)
+            else:
+                cid = t.store.cluster_id_next
+                if cid >= MAX_CLUSTERS:
+                    raise RuntimeError("cluster table full")
+                t.store.cluster_id_next += 1
             assert len(endpoints) <= MAX_EPS_PER_CLUSTER
             start = _extent_alloc(t.store.ep_free, len(endpoints))
             for j, inst in enumerate(endpoints):   # bottom-up: rows first
@@ -377,18 +395,19 @@ class ControlPlane:
             self._do_remove_endpoint(t, cluster, instance)
 
     def drain_endpoint(self, cluster: str, instance: int) -> None:
-        """Graceful removal (the ISSUE's weight→0 semantics): the weight
-        drops to zero at once and the row is reaped by a later commit once
-        every consumer's live load for it reads zero.  Note the gate a
-        zero weight provides is policy-dependent: WEIGHTED clusters stop
-        sending new traffic immediately; rr/random/least-request ignore
-        weights, so for those this is drain-on-idle, not a traffic stop
-        (a datapath-visible draining mask is future work — ROADMAP)."""
+        """Graceful removal: the weight drops to zero AND the endpoint's
+        ``ep_drained`` bit raises at once — the datapath-visible draining
+        mask every selection path consults (the fused admit kernel, the
+        staged ``policies.select``, the sidecar ``HostRouter``), so new
+        traffic stops immediately under EVERY policy, not just WEIGHTED.
+        The row itself survives until a later commit finds every attached
+        consumer's live load for it at zero, then the reaper removes it."""
         with self._auto() as t:
             slot = self._find_slot(t.store, cluster, instance)
             if slot < 0:
                 raise KeyError(f"no endpoint {instance} in {cluster!r}")
             t.store.cfg["ep_weight"][slot] = 0.0
+            t.store.cfg["ep_drained"][slot] = 1
             t.store.draining.add((cluster, instance))
             t.log.append(("drain", t.store.clusters[cluster].id, instance))
 
@@ -402,6 +421,7 @@ class ControlPlane:
             if slot < 0:
                 raise KeyError(f"no endpoint {instance} in {cluster!r}")
             t.store.cfg["ep_weight"][slot] = weight
+            t.store.cfg["ep_drained"][slot] = 0    # drain cancelled: unmask
             t.store.draining.discard((cluster, instance))
             t.log.append(("weight", slot))
 
@@ -410,6 +430,57 @@ class ControlPlane:
             d = t.store.clusters[cluster]
             t.store.cfg["cluster_policy"][d.id] = policy
             t.log.append(("policy", d.id))
+
+    def remove_cluster(self, name: str) -> None:
+        """Tear a whole cluster down, top-down: the endpoint count hides
+        the window first, then the rows clear, then the window extent and
+        the directory id return to their free-lists for reuse.  Refuses
+        while any service rule still routes to the cluster (remove or
+        retarget the rules first — a dangling cluster id in ``rule_cluster``
+        would silently route live traffic into another cluster's window)."""
+        with self._auto() as t:
+            d = t.store.clusters[name]
+            cfg = t.store.cfg
+            for sname, sd in t.store.services.items():
+                for j in range(int(cfg["svc_rule_count"][sd.id])):
+                    if int(cfg["rule_cluster"][sd.win.start + j]) == d.id:
+                        raise RuntimeError(
+                            f"cluster {name!r} still referenced by service "
+                            f"{sname!r}; remove or retarget the rule first")
+            count = int(cfg["cluster_ep_count"][d.id])
+            cfg["cluster_ep_count"][d.id] = 0      # top-down: hide first
+            t.log.append(("cluster_count", d.id, 0))
+            for j in range(count):
+                self._clear_ep(t, d.win.start + j)
+            cfg["cluster_ep_start"][d.id] = 0
+            cfg["cluster_policy"][d.id] = 0
+            _extent_free(t.store.ep_free, d.win.start, d.win.cap)
+            t.store.draining = {(c, i) for c, i in t.store.draining
+                                if c != name}
+            del t.store.clusters[name]
+            t.store.cluster_id_free.append(d.id)
+            t.store.cluster_id_free.sort()
+            t.log.append(("cluster_remove", d.id))
+
+    def remove_service(self, name: str) -> None:
+        """Remove a service and its whole rule chain, top-down: the chain
+        count zeroes first (no request can match a rule mid-teardown), the
+        rows clear, then the rule-window extent and the directory id return
+        to their free-lists."""
+        with self._auto() as t:
+            d = t.store.services[name]
+            cfg = t.store.cfg
+            count = int(cfg["svc_rule_count"][d.id])
+            cfg["svc_rule_count"][d.id] = 0        # top-down: hide first
+            t.log.append(("svc_count", d.id, 0))
+            for j in range(count):
+                self._clear_rule(t, d.win.start + j)
+            cfg["svc_rule_start"][d.id] = 0
+            _extent_free(t.store.rule_free, d.win.start, d.win.cap)
+            del t.store.services[name]
+            t.store.svc_id_free.append(d.id)
+            t.store.svc_id_free.sort()
+            t.log.append(("service_remove", d.id))
 
     def upsert_rule(self, service: str, field: int, value: str | None,
                     cluster: str) -> None:
@@ -475,21 +546,24 @@ class ControlPlane:
                   weight: float) -> None:
         t.store.cfg["ep_instance"][slot] = instance
         t.store.cfg["ep_weight"][slot] = weight
+        t.store.cfg["ep_drained"][slot] = 0
         t.src[slot] = -1                       # fresh row: load starts at 0
         t.log.append(("ep_row", slot, instance))
 
     def _clear_ep(self, t: _Txn, slot: int) -> None:
         t.store.cfg["ep_instance"][slot] = -1
         t.store.cfg["ep_weight"][slot] = 1.0
+        t.store.cfg["ep_drained"][slot] = 0
         t.src[slot] = -1                       # vacated: counter zeroed
         t.log.append(("ep_clear", slot))
 
     def _move_ep(self, t: _Txn, dst: int, src: int) -> None:
-        """Relocate one endpoint row, its draining status implied by the
-        directory, and its *live load* (via the plan permutation)."""
+        """Relocate one endpoint row — including its draining mask — and
+        its *live load* (via the plan permutation)."""
         cfg = t.store.cfg
         cfg["ep_instance"][dst] = cfg["ep_instance"][src]
         cfg["ep_weight"][dst] = cfg["ep_weight"][src]
+        cfg["ep_drained"][dst] = cfg["ep_drained"][src]
         t.src[dst] = t.src[src]
         t.log.append(("ep_row", dst, int(cfg["ep_instance"][dst])))
 

@@ -44,6 +44,7 @@ def add_endpoint(state: RoutingState, cluster_id: int, ep_slot: int,
     st = state._replace(
         ep_instance=state.ep_instance.at[ep_slot].set(instance),
         ep_weight=state.ep_weight.at[ep_slot].set(weight),
+        ep_drained=state.ep_drained.at[ep_slot].set(0),
         ep_load=state.ep_load.at[ep_slot].set(0),
     )
     st = st._replace(
@@ -70,11 +71,13 @@ def remove_endpoint(state: RoutingState, cluster_id: int, ep_off: int
     st = st._replace(
         ep_instance=st.ep_instance.at[tgt].set(st.ep_instance[last]),
         ep_weight=st.ep_weight.at[tgt].set(st.ep_weight[last]),
+        ep_drained=st.ep_drained.at[tgt].set(st.ep_drained[last]),
         ep_load=st.ep_load.at[tgt].set(st.ep_load[last]),
     )
     st = st._replace(
         ep_instance=st.ep_instance.at[last].set(-1),
         ep_weight=st.ep_weight.at[last].set(1.0),
+        ep_drained=st.ep_drained.at[last].set(0),
         ep_load=st.ep_load.at[last].set(0),
     )
     return _bump(st)
@@ -129,3 +132,13 @@ def set_weight(state: RoutingState, ep_slot: int, weight: float
                ) -> RoutingState:
     return _bump(state._replace(
         ep_weight=state.ep_weight.at[ep_slot].set(weight)))
+
+
+def set_drained(state: RoutingState, ep_slot: int, drained: bool
+                ) -> RoutingState:
+    """Raise/clear the datapath-visible draining bit: a drained endpoint
+    receives no new traffic under ANY policy (every selection path — the
+    fused admit kernel, ``policies.select``, the sidecar HostRouter —
+    consults the mask)."""
+    return _bump(state._replace(
+        ep_drained=state.ep_drained.at[ep_slot].set(int(drained))))

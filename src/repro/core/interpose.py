@@ -59,6 +59,10 @@ class Engine:
     max_len: int
     eos: int = 1
     ctx: Any = DEFAULT_CTX
+    # kernel tuning overrides; None = the autotuned plan (kernels/tune.py)
+    block_r: int | None = None
+    block_i: int | None = None
+    fold: str | None = None
 
     # ------------------------------------------------------------------ #
     def init_state(self, routing: RoutingState, dtype=None) -> EngineState:
@@ -89,7 +93,8 @@ class Engine:
         rnd = jax.random.randint(kr, (R,), 0, 1 << 30, dtype=jnp.int32)
         gumbel = jax.random.gumbel(kw, (R, MAX_EPS_PER_CLUSTER), jnp.float32)
 
-        res = ops.admit_commit(reqs, rstate, state.pool, rnd, gumbel)
+        res = ops.admit_commit(reqs, rstate, state.pool, rnd, gumbel,
+                               block_r=self.block_r, fold=self.fold)
         # the committed pool, load counters, rr cursors, held release and
         # flow metrics all come fused out of the kernel
         rstate = rstate._replace(ep_load=res.ep_load, rr_cursor=res.rr_cursor)
@@ -120,7 +125,8 @@ class Engine:
 
         res = ops.complete(pool, nxt, state.routing.ep_load,
                            state.metrics.rx_bytes,
-                           eos=self.eos, max_len=self.max_len)
+                           eos=self.eos, max_len=self.max_len,
+                           block_i=self.block_i, fold=self.fold)
         rstate = state.routing._replace(ep_load=res.ep_load)
         metrics = state.metrics._replace(rx_bytes=res.rx_bytes)
         out = {"emitted": nxt, "done": res.done,

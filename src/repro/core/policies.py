@@ -49,14 +49,26 @@ def select(state: RoutingState, cluster: jax.Array, key: jax.Array
     B = cluster.shape[0]
     cl = jnp.maximum(cluster, 0)
     idx, ok, count = _window(state, cl)
-    # matched-but-empty clusters (count == 0, e.g. after a delta refresh
-    # removed the last endpoint) are unroutable too — the clipped window
-    # would otherwise hand out an endpoint owned by a different cluster
-    # (kernel/oracle parity: _admit_kernel and admit_ref both require
-    # count > 0)
-    routable = (cluster >= 0) & (count > 0)
+    # drained endpoints (the ControlPlane's datapath-visible draining mask)
+    # are ineligible under EVERY policy; matched-but-empty clusters — zero
+    # endpoints after a delta refresh, or every endpoint draining — are
+    # unroutable, since the clipped window would otherwise hand out an
+    # endpoint owned by a different cluster (kernel/oracle parity:
+    # _admit_kernel and admit_ref implement the same eligibility rule)
+    ok = ok & (state.ep_drained[idx] == 0)
+    count2 = jnp.sum(ok.astype(jnp.int32), axis=1)          # eligible eps
+    cnt1 = jnp.maximum(count2, 1)
+    routable = (cluster >= 0) & (count2 > 0)
     policy = state.cluster_policy[cl]                       # (B,)
     kr, kw, kp = jax.random.split(key, 3)
+
+    # offset of the k-th *eligible* endpoint in the window (== k itself when
+    # nothing is draining, so the pre-mask behavior is unchanged)
+    cum = jnp.cumsum(ok.astype(jnp.int32), axis=1)
+
+    def _kth(k):
+        return jnp.argmax(ok & (cum == (k + 1)[:, None]),
+                          axis=1).astype(jnp.int32)
 
     # --- round robin: cursor + stable rank of this request within its
     # cluster this batch (the relay's counting sort gives the rank).
@@ -67,20 +79,21 @@ def select(state: RoutingState, cluster: jax.Array, key: jax.Array
     # fused kernel and the admit_ref oracle ------------------------------- #
     n_cl = state.cluster_ep_start.shape[0]
     rank, _ = relay.positions_sort(jnp.where(routable, cl, n_cl), n_cl + 1)
-    rr_off = (state.rr_cursor[cl] + rank) % jnp.maximum(count, 1)
+    rr_off = _kth((state.rr_cursor[cl] + rank) % cnt1)
 
     # --- random ----------------------------------------------------------- #
-    rnd_off = jax.random.randint(kr, (B,), 0, 1 << 30) % jnp.maximum(count, 1)
+    rnd_off = _kth(jax.random.randint(kr, (B,), 0, 1 << 30) % cnt1)
 
     # --- least request -------------------------------------------------- #
     # vectorised batch semantics: the r-th request (arrival order) of a
     # cluster takes the r-th LEAST-loaded endpoint, emulating the paper's
     # sequential per-request counters (a naive batch argmin would send the
-    # whole batch to one endpoint before any counter updates)
+    # whole batch to one endpoint before any counter updates); ineligible
+    # endpoints sort to the back behind the INT_MAX sentinel
     load = jnp.where(ok, state.ep_load[idx], jnp.iinfo(jnp.int32).max)
     by_load = jnp.argsort(load, axis=1).astype(jnp.int32)     # (B,W)
     lr_off = jnp.take_along_axis(
-        by_load, (rank % jnp.maximum(count, 1))[:, None], 1)[:, 0]
+        by_load, (rank % cnt1)[:, None], 1)[:, 0]
 
     # --- weighted: Gumbel-max over log-weights ----------------------------- #
     w = jnp.where(ok, state.ep_weight[idx], 0.0)

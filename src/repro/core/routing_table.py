@@ -56,6 +56,9 @@ class RoutingState(NamedTuple):
     # --- endpoints ------------------------------------------------------#
     ep_instance: jax.Array       # (MAX_ENDPOINTS,) i32 instance-lane id
     ep_weight: jax.Array         # (MAX_ENDPOINTS,) f32
+    ep_drained: jax.Array        # (MAX_ENDPOINTS,) i32 1 = draining: no new
+    #                              traffic under ANY policy (control-authored;
+    #                              the datapath only reads it)
     # --- mutable datapath state (load-balancing states, paper §4.2) ----- #
     ep_load: jax.Array           # (MAX_ENDPOINTS,) i32 outstanding requests
     rr_cursor: jax.Array         # (MAX_CLUSTERS,) i32 round-robin cursor
@@ -90,6 +93,7 @@ def empty_state() -> RoutingState:
         cluster_policy=i(MAX_CLUSTERS),
         ep_instance=jnp.full((MAX_ENDPOINTS,), -1, jnp.int32),
         ep_weight=jnp.ones((MAX_ENDPOINTS,), jnp.float32),
+        ep_drained=i(MAX_ENDPOINTS),
         ep_load=i(MAX_ENDPOINTS), rr_cursor=i(MAX_CLUSTERS),
         version=jnp.zeros((), jnp.int32),
     )

@@ -73,23 +73,36 @@ class HostRouter:
         t = self.t
         start, count = (int(t.cluster_ep_start[cluster]),
                         int(t.cluster_ep_count[cluster]))
+        # the ControlPlane's draining mask gates selection under every
+        # policy (same eligibility rule as the fused kernel / staged path);
+        # a cluster whose endpoints are all draining is unroutable.  The
+        # no-drain steady state takes a vectorized fast path — the same
+        # shortcut the kernel's segment fold takes via lax.cond — instead
+        # of a per-slot python filter on every pick.
         if count == 0:
             return -1, -1
+        window = t.ep_drained[start:start + count]
+        if window.any():
+            elig = [start + j for j in range(count) if not window[j]]
+            if not elig:
+                return -1, -1
+        else:
+            elig = range(start, start + count)
         pol = int(t.cluster_policy[cluster])
         if pol == POLICY_RR:
-            off = int(t.rr_cursor[cluster]) % count
+            off = int(t.rr_cursor[cluster]) % len(elig)
             t.rr_cursor[cluster] += 1
         elif pol == POLICY_RANDOM:
-            off = int(self.rng.randint(count))
+            off = int(self.rng.randint(len(elig)))
         elif pol == POLICY_WEIGHTED:
-            w = t.ep_weight[start:start + count]
+            w = t.ep_weight[elig]
             s = float(w.sum())
             # all-zero weights fall back to uniform (mirrors the kernel's
             # log(w + 1e-9) guard) instead of NaN-crashing np.random.choice
-            off = int(self.rng.choice(count, p=w / s if s > 0 else None))
+            off = int(self.rng.choice(len(elig), p=w / s if s > 0 else None))
         else:                                   # least request
-            off = int(np.argmin(t.ep_load[start:start + count]))
-        ep = start + off
+            off = int(np.argmin(t.ep_load[elig]))
+        ep = elig[off]
         t.ep_load[ep] += 1
         return ep, int(t.ep_instance[ep])
 

@@ -4,18 +4,47 @@ Off-TPU (CPU CI, local runs) the kernels execute through the Pallas
 interpreter — bit-accurate against the BlockSpec pipeline; on a real TPU
 backend they lower to Mosaic.  Callers pass ``interpret=None`` to get the
 auto-selected mode, or force a bool explicitly (tests, debugging).
+
+The same split selects the *aggregation strategy* of the datapath kernels
+(DESIGN.md §5): the dense one-hot folds are the Mosaic-lowerable form
+(iota/compare/cumsum — on TPU the reductions feed the MXU), while the
+scatter/sort segment folds are the form XLA:CPU executes in linear time.
+``resolve_fold`` picks per backend; the block-size autotuner
+(``kernels/tune.py``) can override both the fold and the tile shapes.
 """
 
 from __future__ import annotations
 
 import jax
 
+FOLDS = ("onehot", "segment")
+
+
+def backend_kind() -> str:
+    """The cache/tuning key: 'tpu' | 'gpu' | 'cpu' (anything else verbatim)."""
+    return jax.default_backend()
+
 
 def default_interpret() -> bool:
     """True when the default backend cannot compile Mosaic kernels."""
-    return jax.default_backend() != "tpu"
+    return backend_kind() != "tpu"
 
 
 def resolve_interpret(interpret: bool | None) -> bool:
     """None → backend auto-selection; a bool is passed through untouched."""
     return default_interpret() if interpret is None else bool(interpret)
+
+
+def default_fold() -> str:
+    """Mosaic needs the one-hot form; everything else runs the interpreter,
+    where the scatter/sort segment folds are linear-time."""
+    return "onehot" if backend_kind() == "tpu" else "segment"
+
+
+def resolve_fold(fold: str | None) -> str:
+    """None → backend auto-selection; an explicit strategy passes through."""
+    if fold is None:
+        return default_fold()
+    if fold not in FOLDS:
+        raise ValueError(f"unknown fold strategy {fold!r}; one of {FOLDS}")
+    return fold

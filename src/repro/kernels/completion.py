@@ -18,9 +18,13 @@ Grid: (I / BI,) sequential over instance-lane tiles.  The endpoint-load
 decrements and per-service rx bytes accumulate in VMEM scratch across the
 grid and are folded into the (E,) / (S,) outputs on the last step — the same
 running-counter carry as the admit kernel (``kernels/route_match.py``).
+The per-tile aggregation goes through the shared segment-fold seam
+(``route_match._seg_sum``, DESIGN.md §5): ``fold="segment"`` scatter-adds
+into the scratch counters in O(tile) — the CPU-interpreter default —
+while ``fold="onehot"`` keeps the dense Mosaic-lowerable dispatch matrix.
 
 Sequential semantics are pinned by ``kernels.ref.complete_ref`` (bit-exact,
-property-tested in tests/test_kernels.py).
+property-tested in tests/test_kernels.py under both folds).
 """
 
 from __future__ import annotations
@@ -34,8 +38,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.backend import resolve_interpret
-from repro.kernels.route_match import _table_spec
+from repro.kernels.backend import resolve_fold, resolve_interpret
+from repro.kernels.route_match import _seg_sum, _table_spec
 
 RX_BYTES_PER_TOKEN = 2     # response payload attributed per decoded token
 
@@ -58,7 +62,7 @@ def _complete_kernel(preq_ref, pep_ref, psvc_ref, plen_ref, ptok_ref,
                      pact_ref, nxt_ref, load0_ref, rx0_ref,
                      oreq_ref, oep_ref, osvc_ref, olen_ref, otok_ref,
                      oact_ref, done_ref, loadout_ref, rxout_ref,
-                     dec_s, rx_s, *, eos: int, max_len: int):
+                     dec_s, rx_s, *, eos: int, max_len: int, fold: str):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -85,20 +89,18 @@ def _complete_kernel(preq_ref, pep_ref, psvc_ref, plen_ref, ptok_ref,
     oact_ref[...] = (act & ~done).astype(jnp.int32)
     done_ref[...] = done.astype(jnp.int32)
 
-    # ---- load release (one-hot fold over endpoints) -------------------- #
+    # ---- load release (tiled segment fold over endpoints) -------------- #
     epf = pep_ref[...].reshape(N)
     rel = (done & (pep_ref[...] >= 0) & (pep_ref[...] < E)).reshape(N)
-    epc = jnp.clip(epf, 0, E - 1)
-    oh_e = (rel[:, None] & (epc[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (N, E), 1))).astype(jnp.int32)
-    dec_s[...] = dec_s[...] + jnp.sum(oh_e, axis=0)
+    one = jnp.ones((N,), jnp.int32)
+    dec_s[...] = _seg_sum(dec_s[...], jnp.where(rel, jnp.clip(epf, 0, E - 1),
+                                                E), one, fold=fold)
 
     # ---- rx traffic metrics (per active slot, svc >= S drops) ---------- #
     svcf = jnp.maximum(psvc_ref[...], 0).reshape(N)
     actf = act.reshape(N)
-    oh_s = (actf[:, None] & (svcf[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (N, S), 1))).astype(jnp.int32)
-    rx_s[...] = rx_s[...] + RX_BYTES_PER_TOKEN * jnp.sum(oh_s, axis=0)
+    rx_s[...] = _seg_sum(rx_s[...], jnp.where(actf, jnp.minimum(svcf, S), S),
+                         RX_BYTES_PER_TOKEN * one, fold=fold)
 
     @pl.when(i == pl.num_programs(0) - 1)
     def _emit():
@@ -108,7 +110,7 @@ def _complete_kernel(preq_ref, pep_ref, psvc_ref, plen_ref, ptok_ref,
 
 def complete(pool_req_id, pool_endpoint, pool_svc, pool_length, pool_token,
              pool_active, nxt, ep_load, rx_bytes, *, eos: int, max_len: int,
-             block_i: int = 8,
+             block_i: int = 8, fold: str | None = None,
              interpret: bool | None = None) -> CompleteResult:
     """Fused completion over the pool after one decode step.
 
@@ -126,7 +128,8 @@ def complete(pool_req_id, pool_endpoint, pool_svc, pool_length, pool_token,
             pool_svc.astype(jnp.int32), pool_length.astype(jnp.int32),
             pool_token.astype(jnp.int32), pool_active.astype(jnp.int32)]
     o = pl.pallas_call(
-        functools.partial(_complete_kernel, eos=eos, max_len=max_len),
+        functools.partial(_complete_kernel, eos=eos, max_len=max_len,
+                          fold=resolve_fold(fold)),
         grid=grid,
         in_specs=[lane] * 7 + [_table_spec((E,)), _table_spec((S,))],
         out_specs=[lane] * 7 + [_table_spec((E,)), _table_spec((S,))],

@@ -11,6 +11,15 @@ typed results with the updated pytrees inside, so engine state flows through
 the kernels as NamedTuples end-to-end instead of a dozen positional arrays.
 The kernel modules themselves (``route_match.py`` / ``completion.py``) keep
 flat array signatures: that is the pallas_call boundary.
+
+Tile shapes and the aggregation strategy are *plans*, not hard-coded
+constants: when a caller leaves ``block_r``/``block_i``/``fold`` at None,
+``kernels/tune.py`` resolves them — per backend, per shape, swept at first
+use and cached, pinnable via XLB_BLOCK_R / XLB_BLOCK_I / XLB_FOLD /
+XLB_AUTOTUNE=0 for deterministic CI.  The resolution happens in the thin
+python wrapper *outside* the inner jit, and the plan enters the compiled
+program through ``static_argnames`` — so each distinct plan is its own
+specialization and a cached plan costs one dict lookup per call.
 """
 
 from __future__ import annotations
@@ -23,7 +32,7 @@ import jax
 from repro.core.balancer import PoolState, RequestBatch
 from repro.kernels import (completion as _cp, decode_attention as _da,
                            flash_attention as _fa, relay_dispatch as _rd,
-                           route_match as _rm, ssd_scan as _ss)
+                           route_match as _rm, ssd_scan as _ss, tune)
 from repro.kernels.backend import default_interpret  # re-export  # noqa: F401
 from repro.kernels.route_match import AdmitResult  # re-export  # noqa: F401
 
@@ -77,26 +86,36 @@ def route_match(svc, features, state, *, block_r: int = 256):
     return _rm.route_match(svc, features, state, block_r=block_r)
 
 
-@partial(jax.jit, static_argnames=("block_r",))
+@partial(jax.jit, static_argnames=("block_r", "fold"))
+def _admit(reqs: RequestBatch, routing, free_mask, rnd, gumbel, *,
+           block_r: int, fold: str) -> AdmitResult:
+    return _rm.admit(reqs.req_id, reqs.svc, reqs.features, reqs.msg_bytes,
+                     routing, free_mask, rnd, gumbel, block_r=block_r,
+                     fold=fold)
+
+
 def admit(reqs: RequestBatch, routing, free_mask, rnd, gumbel, *,
-          block_r: int = 256) -> AdmitResult:
+          block_r: int | None = None,
+          fold: str | None = None) -> AdmitResult:
     """Fused admission datapath: match → balance → slot-allocate → metrics.
 
     ``reqs.token`` is unused here — commit-free admission never touches the
-    pool (see ``admit_commit`` for the full connect path)."""
-    return _rm.admit(reqs.req_id, reqs.svc, reqs.features, reqs.msg_bytes,
-                     routing, free_mask, rnd, gumbel, block_r=block_r)
+    pool (see ``admit_commit`` for the full connect path).  ``block_r`` /
+    ``fold`` default to the autotuned plan (``kernels/tune.py``)."""
+    block_r, fold = tune.plan_admit(reqs.req_id.shape[0], free_mask.shape,
+                                    block_r=block_r, fold=fold)
+    return _admit(reqs, routing, free_mask, rnd, gumbel, block_r=block_r,
+                  fold=fold)
 
 
-@partial(jax.jit, static_argnames=("block_r",))
-def admit_commit(reqs: RequestBatch, routing, pool: PoolState, rnd, gumbel,
-                 *, block_r: int = 256) -> AdmitCommitOut:
-    """Fused admission + in-kernel pool commit (no post-pass scatters)."""
+@partial(jax.jit, static_argnames=("block_r", "fold"))
+def _admit_commit(reqs: RequestBatch, routing, pool: PoolState, rnd, gumbel,
+                  *, block_r: int, fold: str) -> AdmitCommitOut:
     res = _rm.admit_commit(reqs.req_id, reqs.svc, reqs.features,
                            reqs.msg_bytes, reqs.token, routing,
                            pool.req_id, pool.endpoint, pool.svc, pool.length,
                            pool.token, pool.active, rnd, gumbel,
-                           block_r=block_r)
+                           block_r=block_r, fold=fold)
     return AdmitCommitOut(
         res.cluster, res.endpoint, res.instance, res.slot, res.ok,
         res.ep_load, res.rr_cursor, res.svc_requests, res.svc_tx_bytes,
@@ -105,17 +124,37 @@ def admit_commit(reqs: RequestBatch, routing, pool: PoolState, rnd, gumbel,
                   res.pool_length, res.pool_token, res.pool_active > 0))
 
 
-@partial(jax.jit, static_argnames=("eos", "max_len", "block_i"))
-def complete(pool: PoolState, nxt, ep_load, rx_bytes, *, eos: int,
-             max_len: int, block_i: int = 8) -> CompleteOut:
-    """Fused completion: done detect → load release → rx metrics → free."""
+def admit_commit(reqs: RequestBatch, routing, pool: PoolState, rnd, gumbel,
+                 *, block_r: int | None = None,
+                 fold: str | None = None) -> AdmitCommitOut:
+    """Fused admission + in-kernel pool commit (no post-pass scatters)."""
+    block_r, fold = tune.plan_admit(reqs.req_id.shape[0],
+                                    pool.req_id.shape, block_r=block_r,
+                                    fold=fold, commit=True)
+    return _admit_commit(reqs, routing, pool, rnd, gumbel, block_r=block_r,
+                         fold=fold)
+
+
+@partial(jax.jit, static_argnames=("eos", "max_len", "block_i", "fold"))
+def _complete(pool: PoolState, nxt, ep_load, rx_bytes, *, eos: int,
+              max_len: int, block_i: int, fold: str) -> CompleteOut:
     res = _cp.complete(pool.req_id, pool.endpoint, pool.svc, pool.length,
                        pool.token, pool.active, nxt, ep_load, rx_bytes,
-                       eos=eos, max_len=max_len, block_i=block_i)
+                       eos=eos, max_len=max_len, block_i=block_i, fold=fold)
     return CompleteOut(
         PoolState(res.req_id, res.endpoint, res.svc, res.length, res.token,
                   res.active > 0),
         res.done > 0, res.ep_load, res.rx_bytes)
+
+
+def complete(pool: PoolState, nxt, ep_load, rx_bytes, *, eos: int,
+             max_len: int, block_i: int | None = None,
+             fold: str | None = None) -> CompleteOut:
+    """Fused completion: done detect → load release → rx metrics → free."""
+    block_i, fold = tune.plan_complete(pool.req_id.shape, block_i=block_i,
+                                       fold=fold)
+    return _complete(pool, nxt, ep_load, rx_bytes, eos=eos, max_len=max_len,
+                     block_i=block_i, fold=fold)
 
 
 @partial(jax.jit, static_argnames=("n_dest", "block_n"))

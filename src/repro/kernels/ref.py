@@ -120,6 +120,7 @@ def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
     cc = np.asarray(state.cluster_ep_count, np.int64)
     cp = np.asarray(state.cluster_policy, np.int64)
     einst = np.asarray(state.ep_instance, np.int64)
+    drained = np.asarray(state.ep_drained, np.int64)
     free = np.asarray(free_mask).astype(bool)
     R = rid.shape[0]
     S, MR, E = rs.shape[0], rf.shape[0], einst.shape[0]
@@ -146,7 +147,8 @@ def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
     win = jnp.arange(WE, dtype=jnp.int32)
     eidx_all = jnp.clip(jnp.asarray(cs[clm], jnp.int32)[:, None]
                         + win[None, :], 0, E - 1)
-    eok_all = win[None, :] < jnp.asarray(cc[clm], jnp.int32)[:, None]
+    eok_all = ((win[None, :] < jnp.asarray(cc[clm], jnp.int32)[:, None])
+               & (state.ep_drained[eidx_all] == 0))   # eligibility mask
     w = jnp.where(eok_all, state.ep_weight[eidx_all], 0.0)
     wt_off = np.asarray(jnp.argmax(
         jnp.where(eok_all, jnp.log(w + 1e-9) + jnp.asarray(gumbel),
@@ -173,22 +175,22 @@ def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
             continue
         c = cl0[r] - 1
         cluster[r] = c
-        count = cc[c]
-        if count <= 0:
-            continue                        # empty cluster: unroutable
+        # eligible = in the window AND not draining; a cluster with no
+        # eligible endpoint (empty, or fully draining) is unroutable
+        elig = [min(max(cs[c] + j, 0), E - 1) for j in range(min(cc[c], WE))]
+        elig = [e for e in elig if drained[e] == 0]
+        if not elig:
+            continue
         pol = cp[c]
         if pol == POLICY_RANDOM:
-            off = rndv[r] % count
+            ep = elig[rndv[r] % len(elig)]
         elif pol == POLICY_LEAST_REQUEST:
-            wl = [loads[min(max(cs[c] + j, 0), E - 1)] if j < count else BIG
-                  for j in range(WE)]
-            off = int(np.argmin(wl))
+            ep = elig[int(np.argmin([loads[e] for e in elig]))]
         elif pol == POLICY_WEIGHTED:
-            off = wt_off[r]
+            ep = min(max(cs[c] + wt_off[r], 0), E - 1)
         else:                               # POLICY_RR and unknown → rr
-            off = cur[c] % count
-        ep = min(max(cs[c] + off, 0), E - 1)
-        cur[c] = (cur[c] + 1) % count
+            ep = elig[cur[c] % len(elig)]
+        cur[c] += 1          # raw count; reduced modulo at batch end
         loads[ep] += 1
         ep_out[r] = ep
         inst = einst[ep]

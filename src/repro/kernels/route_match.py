@@ -31,9 +31,22 @@ Two entry points:
 Sequential least-request without a per-request scan: request ``r`` with
 in-tile cluster rank ``ρ`` takes the endpoint owning the ``ρ``-th smallest
 "ticket" of the multiset ``{load_j + t : t ≥ 0}`` ordered by (value, j) —
-the water-filling closed form of "argmin then increment" — found by a
-static-depth binary search over ticket values.  This replaces the three
-full-batch argsorts of the staged jnp path with O(B·W·log B) vector ops.
+the water-filling closed form of "argmin then increment".  The onehot fold
+finds the level by a static-depth binary search (Mosaic-friendly); the
+segment fold reads it from per-cluster sorted-prefix tables (one (CL, WE)
+sort shared by every request of the tile).
+
+Every aggregation (LB counters, rr cursors, slot ranks, metrics, pool
+commit) goes through the tiled segment-fold seam at the top of this module
+(``_seg_sum`` / ``_seg_rank``, DESIGN.md §5): ``fold="onehot"`` keeps the
+dense Mosaic-lowerable dispatch matrices, ``fold="segment"`` scatter-adds
+and sorts in O(rows + buckets) per tile — the CPU-interpreter default.
+
+Selection consults the control plane's ``ep_drained`` mask under EVERY
+policy: drained endpoints leave the eligible set at once (rr/random cycle
+over the k-th *eligible* endpoint, least-request sees their load as BIG,
+weighted masks their Gumbel score), and a fully-drained cluster is
+unroutable like an empty one.
 
 Grid: (R / BR,) sequential.  Tables are small (≤ 512 int32) and stay
 VMEM-resident across the whole grid — the eBPF maps pinned in kernel memory.
@@ -49,7 +62,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.backend import resolve_interpret
+from repro.kernels.backend import resolve_fold, resolve_interpret
 from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, MAX_RULES_PER_SVC,
                                       POLICY_LEAST_REQUEST, POLICY_RANDOM,
                                       POLICY_RR, POLICY_WEIGHTED, WILDCARD)
@@ -67,6 +80,66 @@ def _table_spec(shape: tuple) -> pl.BlockSpec:
         return (0,) * len(shape)
 
     return pl.BlockSpec(shape, index_map)
+
+
+# --------------------------------------------------------------------------- #
+# Tiled segment folds — the aggregation strategy seam (DESIGN.md §5)
+#
+# Every aggregation in the datapath kernels is "fold per-row values into a
+# small carried vector, bucketed by a per-row id" (LB load counters, rr
+# cursors, per-service metrics, pool commit).  Two implementations share one
+# contract, selected by the static ``fold`` argument:
+#
+#   fold="onehot"   materializes the (rows, buckets) dispatch matrix — pure
+#                   iota/compare/cumsum, the Mosaic-lowerable form (on TPU
+#                   the sum is an MXU matmul in disguise); O(rows·buckets)
+#                   VPU work per tile.
+#   fold="segment"  scatter-adds straight into the carried vector and ranks
+#                   via one stable sort — O(rows + buckets) per tile, the
+#                   form XLA:CPU executes in linear time.  This is what the
+#                   CPU interpreter runs by default; it is also the layout
+#                   that psums cleanly for the mesh-sharded admission plan
+#                   (per-shard (E,) partials, no dispatch matrices).
+#
+# Rows a caller wants dropped are steered to bucket id == width: the one-hot
+# comparison never matches it, the scatter drops it via mode="drop".
+# --------------------------------------------------------------------------- #
+
+
+def _seg_sum(vec, ids, vals, *, fold: str):
+    """Fold ``vals`` (rows,) into ``vec`` (K,) at buckets ``ids``; ids >= K
+    are dropped.  Returns the updated vector."""
+    K = vec.shape[0]
+    if fold == "segment":
+        return vec.at[ids].add(vals, mode="drop")
+    oh = ids[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (ids.shape[0], K), 1)
+    return vec + jnp.sum(jnp.where(oh, vals[:, None], 0), axis=0)
+
+
+def _seg_rank(ids, mask, n_seg: int, *, fold: str, block_r: int):
+    """In-tile arrival rank of each row among rows sharing its id (the
+    counting sort of relay_dispatch), plus the per-id row counts.  Rows
+    with mask=False get an arbitrary rank and count nothing — callers gate
+    on the mask.  fold="onehot": (BR, K) one-hot cumsum; fold="segment":
+    one stable argsort + a segmented iota, with the counts read off the
+    sorted keys by searchsorted (no scatter).  Returns (rank (BR,),
+    counts (K,))."""
+    if fold == "segment":
+        key = jnp.where(mask, ids, n_seg)              # masked → sentinel
+        order = jnp.argsort(key)                       # stable: arrival order
+        sk = key[order]
+        iota = jax.lax.iota(jnp.int32, block_r)
+        first = sk != jnp.concatenate([jnp.full((1,), -1, sk.dtype),
+                                       sk[:-1]])       # segment boundaries
+        start = jax.lax.cummax(jnp.where(first, iota, 0))
+        rank = jnp.zeros((block_r,), jnp.int32).at[order].set(iota - start)
+        edges = jnp.searchsorted(sk, jnp.arange(n_seg + 1, dtype=jnp.int32))
+        return rank, (edges[1:] - edges[:-1]).astype(jnp.int32)
+    oh = (mask[:, None] & (ids[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (block_r, n_seg), 1))).astype(jnp.int32)
+    return jnp.sum((jnp.cumsum(oh, axis=0) - oh) * oh, axis=1), \
+        jnp.sum(oh, axis=0)
 
 
 def _match_stage(svc, feats, rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref, *,
@@ -164,11 +237,11 @@ class AdmitResult(NamedTuple):
     held: jax.Array          # () i32 routable requests without a free slot
 
 
-def _admit_kernel(*refs, block_r: int, commit: bool):
+def _admit_kernel(*refs, block_r: int, commit: bool, fold: str):
     if commit:
         (rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref, tok_ref,
          rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref,
-         cs_ref, cc_ref, cp_ref, einst_ref, ew_ref,
+         cs_ref, cc_ref, cp_ref, einst_ref, ew_ref, ed_ref,
          load0_ref, cur0_ref, free_ref,
          preq0_ref, pep0_ref, psvc0_ref, plen0_ref, ptok0_ref,
          cluster_ref, ep_ref, inst_ref, slot_ref, ok_ref,
@@ -178,7 +251,7 @@ def _admit_kernel(*refs, block_r: int, commit: bool):
     else:
         (rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref,
          rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref,
-         cs_ref, cc_ref, cp_ref, einst_ref, ew_ref,
+         cs_ref, cc_ref, cp_ref, einst_ref, ew_ref, ed_ref,
          load0_ref, cur0_ref, free_ref,
          cluster_ref, ep_ref, inst_ref, slot_ref, ok_ref,
          loadout_ref, curout_ref, sreq_ref, stx_ref, cnt_ref,
@@ -221,54 +294,131 @@ def _admit_kernel(*refs, block_r: int, commit: bool):
     count = cc_ref[cl]                                 # (BR,)
     estart = cs_ref[cl]
     policy = cp_ref[cl]
-    routable = valid & (cluster >= 0) & (count > 0)
-    count1 = jnp.maximum(count, 1)
 
     ewin = jax.lax.broadcasted_iota(jnp.int32, (block_r, WE), 1)
     eidx = jnp.clip(estart[:, None] + ewin, 0, E - 1)  # (BR, WE)
-    eok = ewin < count[:, None]
+    eok_w = ewin < count[:, None]
+    zoff = lambda: jnp.zeros((block_r,), jnp.int32)
 
-    # in-tile arrival rank within each cluster (counting-sort one-hot
-    # cumsum, cf. relay_dispatch) — only routable requests consume ranks
-    oh_c = (routable[:, None] & (cl[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (block_r, CL), 1))).astype(jnp.int32)
-    rank_c = jnp.sum((jnp.cumsum(oh_c, axis=0) - oh_c) * oh_c, axis=1)
+    # eligibility: inside the window AND not draining — the control plane's
+    # datapath-visible drain mask gates selection under EVERY policy; a
+    # cluster whose endpoints are all draining (or gone) is unroutable.
+    # The segment fold branches at RUNTIME on "anything draining at all"
+    # (an (E,) table scan): the no-drain steady state skips the per-request
+    # mask gather and the k-th-eligible remap entirely — both are identity
+    # then, so the branches are bit-equal.  The onehot fold stays branch-
+    # free (Mosaic prefers one straight-line vector program).
+    if fold == "segment":
+        any_dr = jnp.any(ed_ref[...] != 0)
+        eok = jax.lax.cond(any_dr, lambda: eok_w & (ed_ref[eidx] == 0),
+                           lambda: eok_w)
+        cnt2 = jax.lax.cond(
+            any_dr, lambda: jnp.sum(eok.astype(jnp.int32), axis=1),
+            lambda: jnp.clip(count, 0, WE))
+    else:
+        eok = eok_w & (ed_ref[eidx] == 0)
+        cnt2 = jnp.sum(eok.astype(jnp.int32), axis=1)  # eligible endpoints
+    cnt1 = jnp.maximum(cnt2, 1)
+    routable = valid & (cluster >= 0) & (cnt2 > 0)
+
+    # in-tile arrival rank within each cluster (segment-fold counting sort,
+    # cf. relay_dispatch) — only routable requests consume ranks; the
+    # per-cluster counts ride along for the cursor fold (no extra scatter)
+    rank_c, counts_c = _seg_rank(cl, routable, CL, fold=fold,
+                                 block_r=block_r)
+
+    def kth(k):
+        """Window offset of the k-th *eligible* endpoint (== k itself when
+        nothing is draining, so the pre-mask selection is unchanged)."""
+        cum_e = jnp.cumsum(eok.astype(jnp.int32), axis=1)
+        return jnp.argmax(eok & (cum_e == (k + 1)[:, None]),
+                          axis=1).astype(jnp.int32)
 
     # ---- stage 2: policy dispatch ------------------------------------- #
-    # round-robin: carried cursor + arrival rank ≡ cursor++ per request
-    rr_off = (cur_s[...][cl] + rank_c) % count1
-    # random: host-precomputed draw (keeps the host PRNG stream)
-    rnd_off = rnd_ref[...] % count1
+    # round-robin (carried cursor + arrival rank ≡ cursor++ per request)
+    # and random (host-precomputed draw, keeps the host PRNG stream) both
+    # cycle a modular index over the eligible set — one shared kth() remap
+    k_cyc = jnp.where(policy == POLICY_RANDOM, rnd_ref[...],
+                      cur_s[...][cl] + rank_c) % cnt1
+
     # weighted: Gumbel-max over log-weights (noise precomputed on host)
-    w = jnp.where(eok, ew_ref[eidx], 0.0)
-    wt_off = jnp.argmax(jnp.where(eok, jnp.log(w + 1e-9) + gum_ref[...],
-                                  -jnp.inf), axis=1).astype(jnp.int32)
+    def wt():
+        w = jnp.where(eok, ew_ref[eidx], 0.0)
+        return jnp.argmax(jnp.where(eok, jnp.log(w + 1e-9) + gum_ref[...],
+                                    -jnp.inf), axis=1).astype(jnp.int32)
+
     # least-request, sequentially consistent: request with cluster rank ρ
     # owns the ρ-th smallest ticket of {load_j + t : t ≥ 0} ordered by
-    # (value, j) — binary-search the ticket value v, then take the m-th
-    # endpoint among those with load_j <= v
-    load = jnp.where(eok, load_s[...][eidx], BIG)      # (BR, WE)
-    lo = jnp.min(load, axis=1)                         # (BR,)
-    hi = lo + rank_c
-    tgt = rank_c + 1
-    for _ in range(max(block_r, 2).bit_length()):
-        mid = (lo + hi) // 2
-        n_mid = jnp.sum(jnp.maximum(mid[:, None] - load + 1, 0), axis=1)
-        ge = n_mid >= tgt
-        hi = jnp.where(ge, mid, hi)
-        lo = jnp.where(ge, lo, mid + 1)
-    v = lo
-    n_prev = jnp.sum(jnp.maximum(v[:, None] - load, 0), axis=1)
-    m = rank_c - n_prev                                # rank among value-v ties
-    elig = (load <= v[:, None])
-    ec = jnp.cumsum(elig.astype(jnp.int32), axis=1)
-    lr_off = jnp.argmax(elig & (ec == (m + 1)[:, None]),
-                        axis=1).astype(jnp.int32)
+    # (value, j) — find the ticket value v, then take the m-th endpoint
+    # among those with load_j <= v.  Loads are assumed non-negative (they
+    # count outstanding requests).
+    def lr_segment():
+        # per-CLUSTER water-fill tables: every request of a cluster shares
+        # the same tile-start load multiset, so the ticket geometry —
+        # sorted eligible loads ``cls_``, inclusive prefix ``cpin``,
+        # segment starts ``cS`` (tickets below level ls[k]) — is computed
+        # once per cluster on (CL, WE) arrays (tiny) and each request only
+        # gathers scalars from it: k* engaged endpoints where
+        # cS[k*] ≤ ρ < cS[k*+1], then v = ⌈(ρ+1+Σ_{i<k*} l_i)/k*⌉ − 1.
+        # BIG lanes clamp to lo+BR so they never engage (and the prefix
+        # sums stay far from int32 range for sane load counters ≥ 0).
+        load = jnp.where(eok, load_s[...][eidx], BIG)  # (BR, WE)
+        cwin = jax.lax.broadcasted_iota(jnp.int32, (CL, WE), 1)
+        ceidx = jnp.clip(cs_ref[...][:, None] + cwin, 0, E - 1)
+        ceok = (cwin < cc_ref[...][:, None]) & (ed_ref[ceidx] == 0)
+        cload = jnp.where(ceok, load_s[...][ceidx], BIG)
+        clo = jnp.min(cload, axis=1)
+        cls_ = jnp.sort(jnp.minimum(cload, clo[:, None] + block_r), axis=1)
+        cpin = jnp.cumsum(cls_, axis=1)                # inclusive prefix
+        cS = (cwin + 1) * cls_ - cpin                  # nondecreasing
+        kstar = jnp.sum((cS[cl] <= rank_c[:, None]).astype(jnp.int32),
+                        axis=1)                        # ≥ 1 (cS[0] == 0)
+        pk = cpin.reshape(-1)[cl * WE + kstar - 1]     # Σ engaged loads
+        v = (rank_c + pk + kstar) // kstar - 1
+        n_prev = kstar * v - pk                        # tickets below v
+        return lr_pick(load, v, n_prev)
+
+    def lr_onehot():
+        # static-depth binary search (the Mosaic-lowerable form: a fixed
+        # loop of masked window reductions, no sort)
+        load = jnp.where(eok, load_s[...][eidx], BIG)  # (BR, WE)
+        lo = jnp.min(load, axis=1)
+        hi = lo + rank_c
+        tgt = rank_c + 1
+        for _ in range(max(block_r, 2).bit_length()):
+            mid = (lo + hi) // 2
+            n_mid = jnp.sum(jnp.maximum(mid[:, None] - load + 1, 0), axis=1)
+            ge = n_mid >= tgt
+            hi = jnp.where(ge, mid, hi)
+            lo = jnp.where(ge, lo, mid + 1)
+        v = lo
+        n_prev = jnp.sum(jnp.maximum(v[:, None] - load, 0), axis=1)
+        return lr_pick(load, v, n_prev)
+
+    def lr_pick(load, v, n_prev):
+        m = rank_c - n_prev                # rank among value-v ties
+        elig = (load <= v[:, None])
+        ec = jnp.cumsum(elig.astype(jnp.int32), axis=1)
+        return jnp.argmax(elig & (ec == (m + 1)[:, None]),
+                          axis=1).astype(jnp.int32)
+
+    if fold == "segment":
+        # policy-gated dispatch: work for a policy no cluster in the table
+        # uses is skipped at runtime (the taken lax.cond branch only), and
+        # the k-th-eligible remap is skipped while nothing drains
+        cyc_off = jax.lax.cond(any_dr, lambda: kth(k_cyc), lambda: k_cyc)
+        wt_off = jax.lax.cond(jnp.any(cp_ref[...] == POLICY_WEIGHTED),
+                              wt, zoff)
+        lr_off = jax.lax.cond(jnp.any(cp_ref[...] == POLICY_LEAST_REQUEST),
+                              lr_segment, zoff)
+    else:
+        cyc_off = kth(k_cyc)
+        wt_off = wt()
+        lr_off = lr_onehot()
 
     off = jnp.select(
-        [policy == POLICY_RR, policy == POLICY_RANDOM,
-         policy == POLICY_LEAST_REQUEST, policy == POLICY_WEIGHTED],
-        [rr_off, rnd_off, lr_off, wt_off], rr_off).astype(jnp.int32)
+        [policy == POLICY_LEAST_REQUEST, policy == POLICY_WEIGHTED],
+        [lr_off, wt_off], cyc_off).astype(jnp.int32)
     ep = jnp.take_along_axis(eidx, off[:, None], axis=1)[:, 0]
     ep = jnp.where(routable, ep, -1)
     epc = jnp.maximum(ep, 0)
@@ -276,13 +426,15 @@ def _admit_kernel(*refs, block_r: int, commit: bool):
     instc = jnp.clip(inst, 0, I - 1)
 
     # ---- stage 3: free-slot allocation (counting-sort fold) ----------- #
-    oh_i = (routable[:, None] & (instc[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (block_r, I), 1))).astype(jnp.int32)
-    rank_i = (icnt_s[...][instc]
-              + jnp.sum((jnp.cumsum(oh_i, axis=0) - oh_i) * oh_i, axis=1))
+    rank_i0, counts_i = _seg_rank(instc, routable, I, fold=fold,
+                                  block_r=block_r)
+    rank_i = icnt_s[...][instc] + rank_i0
+    # per-INSTANCE free-slot prefix (I·C elements, once per tile) gathered
+    # per request — not a (BR, C) row cumsum
+    fprefix = jnp.cumsum(free_ref[...], axis=1)        # (I, C)
     rows = free_ref[...][instc]                        # (BR, C) free=1
-    prefix = jnp.cumsum(rows, axis=1)
-    n_free = prefix[:, C - 1]
+    prefix = fprefix[instc]
+    n_free = fprefix[:, C - 1][instc]
     ok = routable & (rank_i < n_free)
     hit = (rows > 0) & (prefix == (rank_i + 1)[:, None])
     slot = jnp.where(ok, jnp.argmax(hit, axis=1).astype(jnp.int32), -1)
@@ -297,41 +449,56 @@ def _admit_kernel(*refs, block_r: int, commit: bool):
 
     # ---- stage 4 (commit mode): pool writeback ------------------------ #
     if commit:
-        # one-hot over flattened (I*C) pool cells; the slot allocator never
-        # hands the same (inst, slot) to two requests in one batch, so each
-        # cell has at most one writer and a plain sum recovers its value
-        flat = instc * C + jnp.where(ok, slot, 0)
-        oh_p = (ok[:, None] & (flat[:, None] == jax.lax.broadcasted_iota(
-            jnp.int32, (block_r, I * C), 1))).astype(jnp.int32)
-        wrote = jnp.sum(oh_p, axis=0).reshape(I, C) > 0
+        # the slot allocator never hands the same (inst, slot) to two
+        # requests in one batch, so each pool cell has at most one writer
+        if fold == "segment":
+            # scatter-set straight into the revisited output blocks;
+            # un-admitted rows steer to an out-of-bounds lane and drop
+            ii = jnp.where(ok, instc, I)
+            ss = jnp.where(ok, slot, 0)
 
-        def fold(ref, vals):
-            v = jnp.sum(oh_p * vals[:, None], axis=0).reshape(I, C)
-            ref[...] = jnp.where(wrote, v, ref[...])
+            def commit_fold(ref, vals):
+                ref[...] = ref[...].at[ii, ss].set(vals, mode="drop")
 
-        fold(preq_ref, rid_ref[...])
-        fold(pep_ref, ep)
-        fold(psvc_ref, svc_ref[...])        # raw svc, as the engine stores it
-        fold(plen_ref, jnp.zeros_like(slot))
-        fold(ptok_ref, tok_ref[...])
-        pact_ref[...] = jnp.where(wrote, 1, pact_ref[...])
+            commit_fold(pact_ref, jnp.ones_like(slot))
+        else:
+            # dense one-hot over flattened (I*C) cells: a plain sum
+            # recovers each cell's single writer (Mosaic-lowerable form)
+            flat = instc * C + jnp.where(ok, slot, 0)
+            oh_p = (ok[:, None] & (flat[:, None] == jax.lax.broadcasted_iota(
+                jnp.int32, (block_r, I * C), 1))).astype(jnp.int32)
+            wrote = jnp.sum(oh_p, axis=0).reshape(I, C) > 0
 
-    # ---- carried LB state + fused metrics ----------------------------- #
-    oh_e = (routable[:, None] & (epc[:, None] == jax.lax.broadcasted_iota(
-        jnp.int32, (block_r, E), 1))).astype(jnp.int32)
-    load_s[...] = load_s[...] + jnp.sum(oh_e, axis=0)
-    held_s[...] = held_s[...] + jnp.sum(
-        oh_e * held.astype(jnp.int32)[:, None], axis=0)
-    cur_s[...] = (cur_s[...] + jnp.sum(oh_c, axis=0)) % jnp.maximum(
-        cc_ref[...], 1)
-    icnt_s[...] = icnt_s[...] + jnp.sum(oh_i, axis=0)
+            def commit_fold(ref, vals):
+                v = jnp.sum(oh_p * vals[:, None], axis=0).reshape(I, C)
+                ref[...] = jnp.where(wrote, v, ref[...])
+
+            pact_ref[...] = jnp.where(wrote, 1, pact_ref[...])
+
+        commit_fold(preq_ref, rid_ref[...])
+        commit_fold(pep_ref, ep)
+        commit_fold(psvc_ref, svc_ref[...])  # raw svc, as the engine stores it
+        commit_fold(plen_ref, jnp.zeros_like(slot))
+        commit_fold(ptok_ref, tok_ref[...])
+
+    # ---- carried LB state + fused metrics (tiled segment folds) ------- #
+    one = jnp.ones((block_r,), jnp.int32)
+    ep_ids = jnp.where(routable, epc, E)               # masked rows drop
+    load_s[...] = _seg_sum(load_s[...], ep_ids, one, fold=fold)
+    held_s[...] = _seg_sum(held_s[...], jnp.where(held, epc, E), one,
+                           fold=fold)
+    # the cursor carries RAW counts across tiles (reduced modulo only at
+    # emit): a per-tile modulo by the cluster size would make the k-th-
+    # eligible offset depend on the tile boundary whenever endpoints are
+    # draining (cnt2 < count), breaking block_r-independence.  Both count
+    # vectors fall out of the rank sorts — no extra fold.
+    cur_s[...] = cur_s[...] + counts_c
+    icnt_s[...] = icnt_s[...] + counts_i
     # per-service metrics drop svc >= S (the staged scatter's mode="drop")
     # instead of folding rogue ids into service S-1 via the table clip
-    oh_s = ((ok & (svc_ref[...] < S))[:, None]
-            & (svc[:, None] == jax.lax.broadcasted_iota(
-                jnp.int32, (block_r, S), 1))).astype(jnp.int32)
-    sreq_s[...] = sreq_s[...] + jnp.sum(oh_s, axis=0)
-    stx_s[...] = stx_s[...] + jnp.sum(oh_s * bytes_ref[...][:, None], axis=0)
+    svc_ids = jnp.where(ok & (svc_ref[...] < S), svc, S)
+    sreq_s[...] = _seg_sum(sreq_s[...], svc_ids, one, fold=fold)
+    stx_s[...] = _seg_sum(stx_s[...], svc_ids, bytes_ref[...], fold=fold)
     cnt_s[...] = cnt_s[...] + jnp.stack(
         [jnp.sum((valid & (cluster < 0)).astype(jnp.int32)),
          jnp.sum(held.astype(jnp.int32))])
@@ -341,7 +508,7 @@ def _admit_kernel(*refs, block_r: int, commit: bool):
         # held requests release their counter (connection close of the
         # paper's hold queue) — folded into the final emit
         loadout_ref[...] = load_s[...] - held_s[...]
-        curout_ref[...] = cur_s[...]
+        curout_ref[...] = cur_s[...] % jnp.maximum(cc_ref[...], 1)
         sreq_ref[...] = sreq_s[...]
         stx_ref[...] = stx_s[...]
         cnt_ref[...] = cnt_s[...]
@@ -392,7 +559,7 @@ def _pad_rows(block_r: int, req_id, svc, features, msg_bytes, rnd, gumbel,
 
 
 def _launch_admit(req_id, svc, features, msg_bytes, state, free_i32, rnd,
-                  gumbel, token, pool, *, block_r: int,
+                  gumbel, token, pool, *, block_r: int, fold: str,
                   interpret: bool | None):
     """Shared pallas_call plumbing for ``admit`` (pool=None) and
     ``admit_commit`` (pool = 5 incoming (I, C) i32 arrays)."""
@@ -404,8 +571,8 @@ def _launch_admit(req_id, svc, features, msg_bytes, state, free_i32, rnd,
     tables = [state.svc_rule_start, state.svc_rule_count, state.rule_field,
               state.rule_value, state.rule_cluster, state.cluster_ep_start,
               state.cluster_ep_count, state.cluster_policy,
-              state.ep_instance, state.ep_weight, state.ep_load,
-              state.rr_cursor, free_i32]
+              state.ep_instance, state.ep_weight, state.ep_drained,
+              state.ep_load, state.rr_cursor, free_i32]
     S = state.svc_rule_start.shape[0]
     CL = state.cluster_ep_count.shape[0]
     E = state.ep_load.shape[0]
@@ -440,7 +607,8 @@ def _launch_admit(req_id, svc, features, msg_bytes, state, free_i32, rnd,
         out_specs += [_table_spec((I, C))] * 6
         out_shape += [jax.ShapeDtypeStruct((I, C), jnp.int32)] * 6
     o = pl.pallas_call(
-        functools.partial(_admit_kernel, block_r=block_r, commit=commit),
+        functools.partial(_admit_kernel, block_r=block_r, commit=commit,
+                          fold=fold),
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
@@ -460,7 +628,8 @@ def _launch_admit(req_id, svc, features, msg_bytes, state, free_i32, rnd,
 
 
 def admit(req_id, svc, features, msg_bytes, state, free_mask, rnd, gumbel, *,
-          block_r: int = 256, interpret: bool | None = None) -> AdmitResult:
+          block_r: int = 256, fold: str | None = None,
+          interpret: bool | None = None) -> AdmitResult:
     """Fused admission datapath over a request batch.
 
     req_id/svc/msg_bytes/rnd: (R,) i32 (req_id < 0 = padding; rnd = host
@@ -487,14 +656,15 @@ def admit(req_id, svc, features, msg_bytes, state, free_mask, rnd, gumbel, *,
     # integer mask cell > 1 would double-count free slots
     o = _launch_admit(req_id, svc, features, msg_bytes, state,
                       (free_mask != 0).astype(jnp.int32), rnd, gumbel,
-                      None, None, block_r=block_r, interpret=interpret)
+                      None, None, block_r=block_r, fold=resolve_fold(fold),
+                      interpret=interpret)
     return AdmitResult(*o)
 
 
 def admit_commit(req_id, svc, features, msg_bytes, token, state,
                  pool_req_id, pool_endpoint, pool_svc, pool_length,
                  pool_token, pool_active, rnd, gumbel, *,
-                 block_r: int = 256,
+                 block_r: int = 256, fold: str | None = None,
                  interpret: bool | None = None) -> AdmitCommitResult:
     """``admit`` + in-kernel pool commit (the paper's full connect path).
 
@@ -520,5 +690,6 @@ def admit_commit(req_id, svc, features, msg_bytes, token, state,
     block_r = min(block_r, R0)
     o = _launch_admit(req_id, svc, features, msg_bytes, state,
                       1 - active_i32, rnd, gumbel, token, pool,
-                      block_r=block_r, interpret=interpret)
+                      block_r=block_r, fold=resolve_fold(fold),
+                      interpret=interpret)
     return AdmitCommitResult(*o)

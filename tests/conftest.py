@@ -1,0 +1,12 @@
+"""Suite-wide defaults: pin the kernel autotuner so CI is deterministic.
+
+The block-size autotuner (kernels/tune.py) sweeps tile shapes at first use
+by *timing* candidates — correct but wall-clock-dependent, so two CI runs
+could compile different specializations.  XLB_AUTOTUNE=0 makes every plan
+resolve to the static defaults; the autotuner's own tests re-enable it (or
+pin explicit choices) via monkeypatch.
+"""
+
+import os
+
+os.environ.setdefault("XLB_AUTOTUNE", "0")

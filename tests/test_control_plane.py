@@ -279,6 +279,115 @@ def test_set_weight_cancels_pending_drain():
     assert float(c.routing.ep_weight[slot]) == 2.5
 
 
+def test_drain_raises_datapath_mask_until_reap():
+    """drain_endpoint raises the datapath-visible ``ep_drained`` bit in the
+    same commit as the weight drop — every selection path (kernel, staged,
+    host router) consults it, so new traffic stops under every policy; the
+    reap clears the row, and set_weight cancels the drain AND the mask."""
+    cp = _cp()
+    c = Consumer(cp)
+    slot = cp.endpoint_slot("stable", 3)
+    c.set_load(slot, 2)                            # keeps the reaper away
+    cp.drain_endpoint("stable", 3)
+    assert int(c.routing.ep_drained[slot]) == 1
+    assert float(c.routing.ep_weight[slot]) == 0.0
+    cp.set_weight("stable", 3, 1.5)                # operator changed mind
+    assert int(c.routing.ep_drained[slot]) == 0
+    cp.drain_endpoint("stable", 3)                 # drain again, then reap
+    c.set_load(slot, 0)
+    cp.reap()
+    assert cp.endpoint_slot("stable", 3) < 0
+    assert int(c.routing.ep_drained[slot]) == 0    # cleared with the row
+
+
+def test_drain_mask_migrates_with_swap_with_last():
+    """Compaction moves a draining endpoint's mask bit along with its row
+    (a drain must survive an unrelated removal in the same cluster)."""
+    cp = ControlPlane([ServiceConfig("s", rules=[Rule(0, None, "pool")])],
+                      [Cluster("pool", endpoints=[0, 1, 2])])
+    c = Consumer(cp)
+    c.set_load(2, 1)                               # instance 2 stays loaded
+    cp.drain_endpoint("pool", 2)                   # slot 2 draining
+    cp.remove_endpoint("pool", 0)                  # slot 0 vacated, 2 → 0
+    assert cp.endpoint_slot("pool", 2) == 0
+    assert int(c.routing.ep_drained[0]) == 1       # mask moved with the row
+    assert int(c.routing.ep_drained[2]) == 0       # vacated slot clean
+
+
+def test_remove_cluster_refuses_while_referenced():
+    """A cluster a live rule still routes to cannot be removed — a dangling
+    ``rule_cluster`` id would route traffic into another cluster's window."""
+    cp = _cp()
+    with pytest.raises(RuntimeError, match="referenced"):
+        cp.remove_cluster("canary")
+    assert cp.cluster_id("canary") == 0            # nothing happened
+    assert cp.version == 0
+
+
+def test_remove_cluster_top_down_then_id_and_window_reuse():
+    """remove_cluster journals top-down (count → 0 before the rows clear),
+    frees the endpoint extent, and recycles the directory id: the next
+    add_cluster reuses both."""
+    cp = _cp()
+    c = Consumer(cp)
+    cp.remove_rule("front", 0, "v2")               # un-reference canary
+    cid = cp.cluster_id("canary")
+    start = int(c.routing.cluster_ep_start[cid])
+    with cp.transaction():
+        cp.remove_cluster("canary")
+    log = cp.last_commit_log
+    assert log[0] == ("cluster_count", cid, 0)     # hidden before teardown
+    clears = [i for i, op in enumerate(log) if op[0] == "ep_clear"]
+    assert clears and all(i > 0 for i in clears)
+    assert log[-1] == ("cluster_remove", cid)
+    r = c.routing
+    assert int(r.cluster_ep_count[cid]) == 0
+    assert list(np.asarray(r.ep_instance[start:start + 2])) == [-1, -1]
+    assert "canary" not in cp.ids["clusters"]
+    # id + window extent recycle on the next add
+    new_cid = cp.add_cluster("blue", endpoints=[7, 8])
+    assert new_cid == cid
+    assert int(c.routing.cluster_ep_start[new_cid]) == start
+    assert [int(c.routing.ep_instance[start + j]) for j in range(2)] == [7, 8]
+
+
+def test_remove_service_top_down_then_id_and_window_reuse():
+    cp = _cp()
+    c = Consumer(cp)
+    sid = cp.service_id("front")
+    start = int(c.routing.svc_rule_start[sid])
+    with cp.transaction():
+        cp.remove_service("front")
+    log = cp.last_commit_log
+    assert log[0] == ("svc_count", sid, 0)         # hidden before teardown
+    assert any(op[0] == "rule_clear" for op in log[1:])
+    assert log[-1] == ("service_remove", sid)
+    r = c.routing
+    assert int(r.svc_rule_count[sid]) == 0
+    assert int(r.rule_cluster[start]) == -1        # rows reset to empty
+    assert "front" not in cp.ids["services"]
+    # the freed id and rule extent are reused by the next add_service
+    new_sid = cp.add_service("storefront",
+                             rules=[Rule(0, None, "stable")])
+    assert new_sid == sid
+    assert int(c.routing.svc_rule_start[new_sid]) == start
+    assert int(c.routing.rule_cluster[start]) == cp.cluster_id("stable")
+
+
+def test_remove_cluster_discards_pending_drains():
+    cp = _cp()
+    c = Consumer(cp)
+    cp.remove_rule("payments", 1, "gold")          # un-reference gold-pool
+    c.set_load(cp.endpoint_slot("gold-pool", 5), 3)    # drain stays pending
+    cp.drain_endpoint("gold-pool", 5)
+    assert cp.endpoint_slot("gold-pool", 5) >= 0   # loaded: not reaped
+    # the whole cluster goes away with a drain still pending — the reaper
+    # must not resurrect or crash on the dangling (cluster, instance) pair
+    cp.remove_cluster("gold-pool")
+    cp.reap()                                      # no KeyError, no-op
+    assert "gold-pool" not in cp.ids["clusters"]
+
+
 def test_abandoned_consumer_does_not_pin_drained_endpoint():
     """Consumers are weak-referenced: a dropped loop whose frozen state
     still showed load must not block the reaper (or receive splices)."""

@@ -261,6 +261,59 @@ def test_host_router_weighted_zero_weights_uniform():
     assert int(hr.t.ep_load[:2].sum()) == 32    # every pick counted
 
 
+@pytest.mark.parametrize("policy", [POLICY_RR, POLICY_RANDOM,
+                                    POLICY_LEAST_REQUEST, POLICY_WEIGHTED])
+def test_staged_select_skips_drained_endpoint(policy):
+    """The datapath-visible drain mask on the STAGED path: a drained
+    endpoint receives no new traffic under any policy (the pre-mask gap:
+    only WEIGHTED honored weight→0), and the survivors absorb the batch."""
+    services = [ServiceConfig("s", rules=[Rule(0, None, "pool")])]
+    clusters = [Cluster("pool", endpoints=[0, 1, 2], policy=policy,
+                        weights=[1.0, 9.0, 1.0])]
+    st, ids = build_state(services, clusters)
+    st = st._replace(ep_drained=st.ep_drained.at[1].set(1))
+    cl = jnp.full((24,), ids["clusters"]["pool"], jnp.int32)
+    sel, st2 = policies.select(st, cl, jax.random.PRNGKey(4))
+    eps = np.asarray(sel.endpoint)
+    assert (eps != 1).all()                        # drained: zero traffic
+    assert (eps >= 0).all()                        # cluster still routable
+    assert int(st2.ep_load[1]) == 0
+    assert int(st2.ep_load[:3].sum()) == 24
+
+
+def test_staged_select_fully_drained_cluster_unroutable():
+    services = [ServiceConfig("s", rules=[Rule(0, None, "pool")])]
+    clusters = [Cluster("pool", endpoints=[0, 1], policy=POLICY_RR)]
+    st, ids = build_state(services, clusters)
+    st = st._replace(ep_drained=st.ep_drained.at[:2].set(1))
+    cl = jnp.full((4,), ids["clusters"]["pool"], jnp.int32)
+    sel, st2 = policies.select(st, cl, jax.random.PRNGKey(5))
+    assert (np.asarray(sel.endpoint) == -1).all()
+    assert (np.asarray(sel.instance) == -1).all()
+    np.testing.assert_array_equal(np.asarray(st2.ep_load),
+                                  np.asarray(st.ep_load))
+
+
+@pytest.mark.parametrize("policy", [POLICY_RR, POLICY_RANDOM,
+                                    POLICY_LEAST_REQUEST, POLICY_WEIGHTED])
+def test_host_router_skips_drained_endpoint(policy):
+    """Same contract on the sidecar HostRouter (istio/cilium baselines)."""
+    from repro.core import sidecar
+
+    services = [ServiceConfig("s", rules=[Rule(0, None, "pool")])]
+    clusters = [Cluster("pool", endpoints=[0, 1, 2], policy=policy,
+                        weights=[1.0, 9.0, 1.0])]
+    st, ids = build_state(services, clusters)
+    st = st._replace(ep_drained=st.ep_drained.at[1].set(1))
+    hr = sidecar.HostRouter(st)
+    picks = [hr.select(ids["clusters"]["pool"])[0] for _ in range(24)]
+    assert all(p in (0, 2) for p in picks)
+    assert int(hr.t.ep_load[1]) == 0
+    # a fully drained cluster is unroutable
+    hr.t.ep_drained[[0, 2]] = 1
+    assert hr.select(ids["clusters"]["pool"]) == (-1, -1)
+
+
 def test_weighted_policy_distribution(state):
     st, ids = state
     ci = ids["clusters"]["stable"]

@@ -230,17 +230,19 @@ def _assert_admit_commit_matches(got, want):
                                   err_msg="pool field 'active'")
 
 
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
 @pytest.mark.parametrize("R,block_r", [(64, 64), (128, 32), (256, 64)])
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_admit_matches_sequential_oracle(R, block_r, seed):
+def test_admit_matches_sequential_oracle(R, block_r, seed, fold):
     """Property cross-check: all four policies, NO_ROUTE rows, padding rows,
-    partially occupied pools (held requests), multi-tile scratch carry."""
+    partially occupied pools (held requests), multi-tile scratch carry —
+    under BOTH aggregation strategies (dense one-hot and segment fold)."""
     st, _, _ = _admit_state(seed=seed + 10)
     rid, svc, feats, msgb, rnd, gum = _admit_batch(R, seed)
     I, C = 8, 4                                # small pool → forces held
     free = jax.random.bernoulli(jax.random.PRNGKey(seed + 20), 0.5, (I, C))
     got = ops.admit(_rb(rid, svc, feats, msgb), st, free, rnd, gum,
-                    block_r=block_r)
+                    block_r=block_r, fold=fold)
     want = ref.admit_ref(rid, svc, feats, msgb, st, free, rnd, gum)
     _assert_admit_matches(got, want)
     # the batch actually exercised the interesting paths
@@ -371,12 +373,13 @@ def _pool_arrays(I: int, C: int, seed: int, active_p: float = 0.5):
             active)
 
 
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
 @pytest.mark.parametrize("R,block_r", [(64, 64), (128, 32), (256, 64)])
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_admit_commit_matches_sequential_oracle(R, block_r, seed):
+def test_admit_commit_matches_sequential_oracle(R, block_r, seed, fold):
     """Property cross-check of the pool-commit stage: all four policies,
     NO_ROUTE rows, padding rows, held requests, partially occupied pools,
-    multi-tile pool writeback carry."""
+    multi-tile pool writeback carry — under both aggregation strategies."""
     st, _, _ = _admit_state(seed=seed + 10)
     rid, svc, feats, msgb, rnd, gum = _admit_batch(R, seed)
     tok = jax.random.randint(jax.random.PRNGKey(seed + 30), (R,), 0, 97,
@@ -384,7 +387,8 @@ def test_admit_commit_matches_sequential_oracle(R, block_r, seed):
     I, C = 8, 4                                # small pool → forces held
     pool = _pool_arrays(I, C, seed + 40)
     got = ops.admit_commit(_rb(rid, svc, feats, msgb, tok), st,
-                           PoolState(*pool), rnd, gum, block_r=block_r)
+                           PoolState(*pool), rnd, gum, block_r=block_r,
+                           fold=fold)
     want = ref.admit_commit_ref(rid, svc, feats, msgb, tok, st, *pool,
                                 rnd, gum)
     _assert_admit_commit_matches(got, want)
@@ -496,16 +500,18 @@ def _complete_case(I, C, seed, eos=1, active_p=0.6):
     return pool, nxt, load, rx
 
 
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
 @pytest.mark.parametrize("I,C,block_i", [(2, 8, 2), (8, 16, 2), (8, 64, 8)])
 @pytest.mark.parametrize("seed", [0, 1, 2])
-def test_complete_matches_sequential_oracle(I, C, block_i, seed):
+def test_complete_matches_sequential_oracle(I, C, block_i, seed, fold):
     """Property cross-check: EOS and length-budget completion, inactive
-    lanes, load release, per-service rx metrics, multi-tile scratch carry."""
+    lanes, load release, per-service rx metrics, multi-tile scratch carry —
+    under both aggregation strategies."""
     pool, nxt, load, rx = _complete_case(I, C, seed)
     # mix of lengths: some hit the max_len budget regardless of token
     max_len = 8
     got = ops.complete(PoolState(*pool), nxt, load, rx, eos=1,
-                       max_len=max_len, block_i=block_i)
+                       max_len=max_len, block_i=block_i, fold=fold)
     want = ref.complete_ref(*pool, nxt, load, rx, eos=1, max_len=max_len)
     for name in ("req_id", "endpoint", "svc", "length", "token"):
         np.testing.assert_array_equal(np.asarray(getattr(got.pool, name)),
@@ -553,6 +559,143 @@ def test_complete_releases_load_exactly_once():
     eps = np.asarray(pool[1])
     n_rel = int(((eps >= 0) & done).sum())
     assert int(np.asarray(load).sum() - np.asarray(got.ep_load).sum()) == n_rel
+
+
+# --------------------------------------------------------------------------- #
+# segment-fold kernels at engine scale (ISSUE 4 acceptance shapes)
+# --------------------------------------------------------------------------- #
+
+
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
+def test_admit_large_batch_multi_tile_oracle(fold):
+    """Batch 4096 over a 16×256 pool, 8-tile grid: the acceptance-criteria
+    shape for the segment-fold rewrite.  All four policies, NO_ROUTE rows,
+    held requests, cross-tile cursor/load/rank carry — bit-exact."""
+    st, _, _ = _admit_state(seed=31)
+    R = 4096
+    rid, svc, feats, msgb, rnd, gum = _admit_batch(R, seed=32)
+    I, C = 16, 256
+    # sparse free mask: routable traffic overflows capacity → held > 0
+    free = jax.random.bernoulli(jax.random.PRNGKey(33), 0.15, (I, C))
+    got = ops.admit(_rb(rid, svc, feats, msgb), st, free, rnd, gum,
+                    block_r=512, fold=fold)
+    want = ref.admit_ref(rid, svc, feats, msgb, st, free, rnd, gum)
+    _assert_admit_matches(got, want)
+    assert int(np.asarray(got.no_route)) > 0
+    assert int(np.asarray(got.held)) > 0
+    assert int(np.asarray(got.ok).sum()) > 100
+
+
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
+def test_admit_commit_large_pool_oracle(fold):
+    """Pool commit over the 16×256 grid with a multi-tile batch: the
+    scatter-set (segment) and one-hot (onehot) writebacks both land every
+    admitted request at its (instance, slot) and leave pre-existing
+    connections untouched."""
+    st, _, _ = _admit_state(seed=41)
+    R = 1024
+    rid, svc, feats, msgb, rnd, gum = _admit_batch(R, seed=42)
+    tok = jax.random.randint(jax.random.PRNGKey(43), (R,), 0, 97,
+                             dtype=jnp.int32)
+    pool = _pool_arrays(16, 256, seed=44, active_p=0.9)
+    got = ops.admit_commit(_rb(rid, svc, feats, msgb, tok), st,
+                           PoolState(*pool), rnd, gum, block_r=256,
+                           fold=fold)
+    want = ref.admit_commit_ref(rid, svc, feats, msgb, tok, st, *pool,
+                                rnd, gum)
+    _assert_admit_commit_matches(got, want)
+    assert int(np.asarray(got.ok).sum()) > 0
+    pre = np.asarray(pool[5])
+    np.testing.assert_array_equal(np.asarray(got.pool.req_id)[pre],
+                                  np.asarray(pool[0])[pre])
+
+
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
+def test_complete_large_pool_oracle(fold):
+    """Completion over the 16×256 pool (the BENCH_step scale) with a
+    multi-tile grid: load release and rx metrics stay bit-exact when the
+    (N, E) one-hot is replaced by the scatter fold."""
+    pool, nxt, load, rx = _complete_case(16, 256, seed=51, active_p=0.7)
+    got = ops.complete(PoolState(*pool), nxt, load, rx, eos=1, max_len=8,
+                       block_i=8, fold=fold)
+    want = ref.complete_ref(*pool, nxt, load, rx, eos=1, max_len=8)
+    np.testing.assert_array_equal(np.asarray(got.ep_load),
+                                  np.asarray(want.ep_load))
+    np.testing.assert_array_equal(np.asarray(got.rx_bytes),
+                                  np.asarray(want.rx_bytes))
+    np.testing.assert_array_equal(np.asarray(got.done),
+                                  np.asarray(want.done) > 0)
+    np.testing.assert_array_equal(np.asarray(got.pool.req_id),
+                                  np.asarray(want.req_id))
+    assert int(np.asarray(got.done).sum()) > 100
+
+
+# --------------------------------------------------------------------------- #
+# datapath-visible drain mask (every selection path consults ep_drained)
+# --------------------------------------------------------------------------- #
+
+
+def _drain_state(policy):
+    """One cluster of three endpoints under ``policy``; endpoint at window
+    offset 1 (global slot 1) is draining."""
+    services = [ServiceConfig("s", rules=[Rule(0, None, "pool")])]
+    clusters = [Cluster("pool", endpoints=[0, 1, 2], policy=policy,
+                        weights=[1.0, 9.0, 1.0])]
+    st, _ = build_state(services, clusters)
+    return st._replace(ep_drained=st.ep_drained.at[1].set(1))
+
+
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
+@pytest.mark.parametrize("policy", [POLICY_RR, POLICY_RANDOM,
+                                    POLICY_LEAST_REQUEST, POLICY_WEIGHTED])
+def test_admit_drained_endpoint_gets_no_traffic(policy, fold):
+    """The ControlPlane drain mask stops NEW traffic under EVERY policy in
+    the fused kernel (the pre-mask gap: only WEIGHTED honored weight→0) —
+    and stays bit-exact vs the oracle, including across tile boundaries
+    (the raw-cursor carry)."""
+    st = _drain_state(policy)
+    R = 32
+    rid = jnp.arange(R, dtype=jnp.int32)
+    z = jnp.zeros((R,), jnp.int32)
+    rnd = jax.random.randint(jax.random.PRNGKey(7), (R,), 0, 1 << 30,
+                             dtype=jnp.int32)
+    gum = jax.random.gumbel(jax.random.PRNGKey(8),
+                            (R, MAX_EPS_PER_CLUSTER), jnp.float32)
+    free = jnp.ones((3, 16), bool)
+    got = ops.admit(_rb(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1), st,
+                    free, rnd, gum, block_r=8, fold=fold)
+    want = ref.admit_ref(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1, st,
+                         free, rnd, gum)
+    _assert_admit_matches(got, want)
+    eps = np.asarray(got.endpoint)
+    assert (eps != 1).all()                    # drained slot: zero traffic
+    assert (eps >= 0).all()                    # but the cluster stays up
+    assert int(np.asarray(got.ep_load)[1]) == int(np.asarray(st.ep_load)[1])
+
+
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
+def test_admit_fully_drained_cluster_unroutable(fold):
+    """Every endpoint draining ≡ empty cluster: unroutable, no counters
+    touched, no held/no_route miscounts — bit-exact vs the oracle."""
+    services = [ServiceConfig("s", rules=[Rule(0, None, "pool")])]
+    clusters = [Cluster("pool", endpoints=[0, 1], policy=POLICY_RR)]
+    st, _ = build_state(services, clusters)
+    st = st._replace(ep_drained=st.ep_drained.at[:2].set(1))
+    R = 8
+    rid = jnp.arange(R, dtype=jnp.int32)
+    z = jnp.zeros((R,), jnp.int32)
+    gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
+    free = jnp.ones((2, 4), bool)
+    got = ops.admit(_rb(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1), st,
+                    free, z, gum, fold=fold)
+    want = ref.admit_ref(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1, st,
+                         free, z, gum)
+    _assert_admit_matches(got, want)
+    assert (np.asarray(got.endpoint) == -1).all()
+    assert int(np.asarray(got.held)) == 0
+    assert int(np.asarray(got.no_route)) == 0
+    np.testing.assert_array_equal(np.asarray(got.ep_load),
+                                  np.asarray(st.ep_load))
 
 
 # --------------------------------------------------------------------------- #

@@ -12,8 +12,9 @@ from repro.configs import get_config, smoke_config
 from repro.core import interpose
 from repro.core.balancer import ENGINE_KINDS, make_balancer
 from repro.core.control import ControlPlane
-from repro.core.routing_table import (Cluster, POLICY_RR, Rule, ServiceConfig,
-                                      build_state)
+from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST,
+                                      POLICY_RANDOM, POLICY_RR, Rule,
+                                      ServiceConfig, build_state)
 from repro.models import model as M
 from repro.runtime.serve_loop import Request, ServeLoop
 
@@ -174,6 +175,39 @@ def test_delta_refresh_zero_recompilation(setup):
     assert int(np.asarray(loop.routing.version)) == 1
     assert int(np.asarray(
         loop.routing.cluster_ep_count)[cp.cluster_id("pool")]) == I + 1
+
+
+@pytest.mark.parametrize("policy", [POLICY_RR, POLICY_RANDOM,
+                                    POLICY_LEAST_REQUEST])
+def test_drain_endpoint_stops_new_traffic_mid_serve(setup, policy):
+    """The ROADMAP gap, closed: ``drain_endpoint`` on a LOADED endpoint
+    must stop new admissions under rr/random/least-request (not just
+    WEIGHTED) via the datapath-visible ``ep_drained`` mask, while the
+    in-flight connection keeps its slot until it completes."""
+    cfg, params = setup
+    cp = _cp_pool(policy)
+    eng = interpose.Engine(cfg, I, C, max_len=32)      # nothing completes
+    loop = ServeLoop(eng, params, cp, admit_batch=2)
+    for r in range(2):                                 # one per instance
+        loop.submit(_req(r))
+    loop.tick()
+    slot = cp.endpoint_slot("pool", 1)
+    assert int(np.asarray(loop.routing.ep_load)[slot]) == 1
+    cp.drain_endpoint("pool", 1)                       # loaded → masked,
+    assert cp.endpoint_slot("pool", 1) == slot         # not reaped
+    assert int(np.asarray(loop.routing.ep_drained)[slot]) == 1
+    for r in range(10, 14):
+        loop.submit(_req(r))
+    loop.tick()
+    loop.tick()
+    pool = loop.state.pool
+    act = np.asarray(pool.active)
+    pe = np.asarray(pool.endpoint)
+    # every NEW admission avoided the draining endpoint: it still holds
+    # exactly its one pre-drain connection, instance 0 absorbed the rest
+    assert int(((pe == slot) & act).sum()) == 1
+    assert int(np.asarray(loop.routing.ep_load)[slot]) == 1
+    assert int(act.sum()) > 2                          # traffic kept flowing
 
 
 def test_weight_update_visible_to_all_three_engines(setup):
