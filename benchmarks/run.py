@@ -435,6 +435,43 @@ def bench_step():
     _append_trend("step", record)
 
 
+def _run_on_host_mesh(argv: list, shards: int, *, what: str,
+                      timeout: int = 1800):
+    """Run a python subprocess on an M-device virtual host mesh (XLA_FLAGS
+    must precede jax init, and this process already booted a 1-device
+    jax).  Exits with the captured output on failure."""
+    import os
+    import subprocess
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={shards}"
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable] + argv, env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if out.returncode != 0:
+        sys.exit(f"{what} FAILED —\n{out.stdout}\n{out.stderr[-2000:]}")
+    return out
+
+
+def bench_shard():
+    """Sharded-admission microbenchmark (ROADMAP scale-out): the mesh-
+    sharded datapath (``ops.admit_commit_sharded`` — per-shard fused kernel
+    + psum reconciliation + commit relay) vs the single-shard fused kernel
+    on the same batch, on an M-way host mesh.  Runs the measurement in a
+    subprocess (``benchmarks/shard_bench.py``).  Rows append to
+    BENCH_TREND.jsonl; the CPU-interpreter ratio is advisory (M "hosts"
+    timeshare one machine) — the real read is the TPU leg."""
+    shards = 2
+    out = _run_on_host_mesh(["-m", "benchmarks.shard_bench", str(shards)],
+                            shards, what="bench_shard worker")
+    record = json.loads(out.stdout.strip().splitlines()[-1])
+    for b, s1, s2, r in zip(record["batch"], record["single_us"],
+                            record["sharded_us"], record["ratio"]):
+        emit("shard", "single", f"us@{b}", s1)
+        emit("shard", "sharded", f"us@{b}x{shards}", s2)
+        emit("shard", "sharded", f"ratio@{b}", r)
+    _append_trend("shard", record)
+
+
 def check_gates(remeasured: bool = False) -> None:
     """Regression gates (ROADMAP): the fused admission kernel must hold
     speedup >= 1.3 over the staged chain at batch >= 256 per the last
@@ -478,6 +515,7 @@ def check_gates(remeasured: bool = False) -> None:
                       zip(srec["pool"], srec["speedup"]) if p == "2x16"),
           flush=True)
     smoke_engines()
+    smoke_shards()
 
 
 def smoke_engines() -> None:
@@ -499,8 +537,23 @@ def smoke_engines() -> None:
               flush=True)
 
 
+def smoke_shards(shards: int = 2) -> None:
+    """--check gate for the scale-out layer: boot ``launch/serve.py
+    --shards 2`` on a virtual host mesh and require every request to
+    complete through the sharded admission datapath."""
+    n_req = 4
+    code = ("import sys; from repro.launch.serve import main; "
+            f"sys.exit(0 if main(['--shards', '{shards}', "
+            f"'--instances', '2', '--slots', '2', '--requests', "
+            f"'{n_req}', '--max-len', '6']) == {n_req} else 1)")
+    _run_on_host_mesh(["-c", code], shards, what="check: sharded serve "
+                      "smoke", timeout=1200)
+    print(f"# check: sharded serve smoke OK — --shards {shards} "
+          f"{n_req}/{n_req}", flush=True)
+
+
 BENCHES = {
-    "admit": bench_admit, "step": bench_step,
+    "admit": bench_admit, "step": bench_step, "shard": bench_shard,
     "table1": bench_table1, "table2": bench_table2, "fig5": bench_fig5,
     "fig6": bench_fig6, "fig7": bench_fig7, "fig8": bench_fig8,
     "fig9": bench_fig9, "fig10": bench_fig10, "fig11": bench_fig11,

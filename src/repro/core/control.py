@@ -73,11 +73,39 @@ CONFIG_FIELDS = ("svc_rule_start", "svc_rule_count", "rule_field",
 
 
 class RefreshPlan(NamedTuple):
-    """One committed transaction, ready to splice into any live state."""
+    """One committed transaction, ready to splice into any live state.
+
+    The plan is the control plane's *wire format*: one commit produces one
+    plan, and the same plan pytree fans out to every attached consumer —
+    a local ``ServeLoop``, a mesh-sharded engine (whose replicated routing
+    swaps once and is thereby visible on every shard with a single version
+    bump), or a remote ingress host that receives it through
+    ``pack_plan``/``unpack_plan`` (plain ndarray dict, transport-agnostic).
+    """
 
     config: tuple            # new config arrays, CONFIG_FIELDS order
     ep_src: np.ndarray       # (E,) i32: new slot → old slot (-1 = fresh)
     ep_dst: np.ndarray       # (E,) i32: old slot → new slot (-1 = removed)
+
+
+def pack_plan(plan: RefreshPlan) -> dict:
+    """Flatten a plan into a name→ndarray dict for shipping to a consumer
+    that is not in this process (a remote ingress host of the sharded
+    fleet).  Inverse of :func:`unpack_plan`; round-trip is bit-exact."""
+    out = {k: np.asarray(v) for k, v in zip(CONFIG_FIELDS, plan.config)}
+    out["ep_src"] = np.asarray(plan.ep_src)
+    out["ep_dst"] = np.asarray(plan.ep_dst)
+    return out
+
+
+def unpack_plan(arrays: dict) -> RefreshPlan:
+    """Rebuild a :class:`RefreshPlan` from ``pack_plan`` output — the
+    receiving host applies it with the same ``apply_refresh`` seam local
+    consumers use (one splice, one version bump)."""
+    return RefreshPlan(
+        config=tuple(np.asarray(arrays[k]) for k in CONFIG_FIELDS),
+        ep_src=np.asarray(arrays["ep_src"]),
+        ep_dst=np.asarray(arrays["ep_dst"]))
 
 
 @jax.jit

@@ -63,6 +63,30 @@ class Engine:
     block_r: int | None = None
     block_i: int | None = None
     fold: str | None = None
+    # mesh-sharded admission (DESIGN.md §7): with shards > 1 the admit
+    # batch splits (R/M,) and the pool (I/M,) over ``shard_axis`` of
+    # ``shard_mesh``, the fused kernel runs per shard, and one collective
+    # pass reconciles — bit-exact vs the single-shard path on the same
+    # batch.  Requires n_instances % shards == 0 and a mesh with >= shards
+    # devices (launch/mesh.py::make_shard_mesh).
+    shards: int = 1
+    shard_mesh: Any = None
+    shard_axis: str = "shard"
+
+    def __post_init__(self):
+        if self.shards > 1:
+            if self.shard_mesh is None:
+                raise ValueError("shards > 1 needs a shard_mesh "
+                                 "(launch/mesh.py::make_shard_mesh)")
+            mesh_m = self.shard_mesh.shape[self.shard_axis]
+            if mesh_m != self.shards:
+                raise ValueError(
+                    f"shards={self.shards} but shard_mesh axis "
+                    f"{self.shard_axis!r} is {mesh_m}-way — the datapath "
+                    "would silently shard at the mesh width")
+            if self.n_instances % self.shards:
+                raise ValueError(f"n_instances ({self.n_instances}) must "
+                                 f"divide over {self.shards} shards")
 
     # ------------------------------------------------------------------ #
     def init_state(self, routing: RoutingState, dtype=None) -> EngineState:
@@ -93,8 +117,13 @@ class Engine:
         rnd = jax.random.randint(kr, (R,), 0, 1 << 30, dtype=jnp.int32)
         gumbel = jax.random.gumbel(kw, (R, MAX_EPS_PER_CLUSTER), jnp.float32)
 
-        res = ops.admit_commit(reqs, rstate, state.pool, rnd, gumbel,
-                               block_r=self.block_r, fold=self.fold)
+        if self.shards > 1:
+            res = ops.admit_commit_sharded(
+                reqs, rstate, state.pool, rnd, gumbel, mesh=self.shard_mesh,
+                axis=self.shard_axis, block_r=self.block_r, fold=self.fold)
+        else:
+            res = ops.admit_commit(reqs, rstate, state.pool, rnd, gumbel,
+                                   block_r=self.block_r, fold=self.fold)
         # the committed pool, load counters, rr cursors, held release and
         # flow metrics all come fused out of the kernel
         rstate = rstate._replace(ep_load=res.ep_load, rr_cursor=res.rr_cursor)
@@ -102,6 +131,9 @@ class Engine:
             requests=metrics.requests + res.svc_requests,
             tx_bytes=metrics.tx_bytes + res.svc_tx_bytes,
             no_route_match=metrics.no_route_match + res.no_route,
+            # per-ATTEMPT hold events: a request the host re-queues and
+            # re-admits counts once per attempt (FlowMetrics docstring);
+            # distinct held requests live on the host (ServeLoop.held_first)
             overflow=metrics.overflow + res.held,
         )
         return EngineState(rstate, res.pool, state.cache, metrics, key)

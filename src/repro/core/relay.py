@@ -39,8 +39,11 @@ class RelayMeta(NamedTuple):
 
     idx: jax.Array        # (N,) int32 destination id per payload row
     slot: jax.Array       # (N,) int32 slot within the destination pool
-    ok: jax.Array         # (N,) bool  row fit inside capacity
-    load: jax.Array       # (E,) int32 rows destined per backend (pre-drop)
+    ok: jax.Array         # (N,) bool  row fit inside capacity (per-SOURCE
+    #                       quota under sharded_apply — see its docstring)
+    load: jax.Array       # (E,) int32 rows destined per backend, pre-drop
+    #                       (GLOBAL — psum'd over the axis — when produced
+    #                       by sharded_apply; local rows otherwise)
     overflow_frac: jax.Array  # () fraction of rows dropped
 
 
@@ -152,6 +155,16 @@ def sharded_apply(x, idx, weights, n_dest: int, capacity: int, axis: str,
     ``n_dest % M == 0``; backend b lives on shard b // (n_dest // M).
     x: (N_loc, D) local rows; idx: (N_loc,) global destination ids.
     Returns (out (N_loc,D), meta).
+
+    Meta semantics across the shards (pinned by the 4-shard round-trip test
+    in tests/test_shard_admit.py): ``ok``/``slot``/``overflow_frac`` are
+    **per-source** — each source shard owns ``capacity`` slots at every
+    destination, so a row is dropped against its own shard's quota (a
+    destination absorbs up to ``M * capacity`` rows in total) and
+    ``overflow_frac`` is the axis-mean of the per-source drop fractions;
+    ``load`` is the **global pre-drop** row count per destination
+    (psum'd over ``axis``), matching the single-shard dispatch on the
+    concatenated rows.
     """
     from repro.compat import axis_size
     M = axis_size(axis)
@@ -171,4 +184,7 @@ def sharded_apply(x, idx, weights, n_dest: int, capacity: int, axis: str,
     out_pool = jax.lax.all_to_all(out_pool, axis, split_axis=0, concat_axis=0,
                                   tiled=False)
     out_buf = out_pool.reshape(n_dest, capacity, -1)
+    meta = meta._replace(
+        load=jax.lax.psum(meta.load, axis),
+        overflow_frac=jax.lax.pmean(meta.overflow_frac, axis))
     return relay_combine(out_buf, meta, weights), meta

@@ -66,13 +66,21 @@ class RoutingState(NamedTuple):
 
 
 class FlowMetrics(NamedTuple):
-    """Per-service traffic metrics (paper §4.2 third state type)."""
+    """Per-service traffic metrics (paper §4.2 third state type).
+
+    ``overflow`` counts **hold events, one per admission attempt** — the
+    datapath has no memory of a request across batches, so a request the
+    host re-queues and re-admits k times before it lands contributes k
+    (bounded by the host's retry cap, 64 in ``ServeLoop``).  Distinct
+    held *requests* are a host-side notion: ``ServeLoop.held_first``
+    counts each re-queued request exactly once."""
 
     tx_bytes: jax.Array          # (MAX_SERVICES,) i32
     rx_bytes: jax.Array          # (MAX_SERVICES,) i32
     requests: jax.Array          # (MAX_SERVICES,) i32
     no_route_match: jax.Array    # () i32
-    overflow: jax.Array          # () i32  (pool exhaustion / held requests)
+    overflow: jax.Array          # () i32  hold events (per ATTEMPT — see
+    #                              class docstring; not distinct requests)
 
     @staticmethod
     def zeros() -> "FlowMetrics":

@@ -32,7 +32,8 @@ import jax
 from repro.core.balancer import PoolState, RequestBatch
 from repro.kernels import (completion as _cp, decode_attention as _da,
                            flash_attention as _fa, relay_dispatch as _rd,
-                           route_match as _rm, ssd_scan as _ss, tune)
+                           route_match as _rm, shard_admit as _sa,
+                           ssd_scan as _ss, tune)
 from repro.kernels.backend import default_interpret  # re-export  # noqa: F401
 from repro.kernels.route_match import AdmitResult  # re-export  # noqa: F401
 
@@ -133,6 +134,34 @@ def admit_commit(reqs: RequestBatch, routing, pool: PoolState, rnd, gumbel,
                                     fold=fold, commit=True)
     return _admit_commit(reqs, routing, pool, rnd, gumbel, block_r=block_r,
                          fold=fold)
+
+
+def admit_commit_sharded(reqs: RequestBatch, routing, pool: PoolState, rnd,
+                         gumbel, *, mesh, axis: str = "shard",
+                         block_r: int | None = None,
+                         fold: str | None = None) -> AdmitCommitOut:
+    """``admit_commit`` sharded over mesh axis ``axis``: the batch splits
+    ``(R/M,)``, the pool ``(I/M,)``, routing tables replicate, and ONE
+    collective pass reconciles the datapath-owned state (psum'd loads /
+    metrics / counts, modulo-merged rr cursors, pool commits relayed to
+    their owner shards) — bit-exact vs single-shard ``admit_commit`` on the
+    concatenated batch (``kernels/shard_admit.py``, DESIGN.md §7).  The
+    jit + shard_map program is cached per (mesh, plan, local shape)."""
+    M = mesh.shape[axis]
+    R_loc = -(-max(reqs.req_id.shape[0], 1) // M)
+    block_r, fold = tune.plan_admit(R_loc, pool.req_id.shape,
+                                    block_r=block_r, fold=fold, commit=True)
+    res = _sa.admit_commit_sharded(
+        reqs.req_id, reqs.svc, reqs.features, reqs.msg_bytes, reqs.token,
+        routing, pool.req_id, pool.endpoint, pool.svc, pool.length,
+        pool.token, pool.active, rnd, gumbel, mesh=mesh, axis=axis,
+        block_r=block_r, fold=fold)
+    return AdmitCommitOut(
+        res.cluster, res.endpoint, res.instance, res.slot, res.ok,
+        res.ep_load, res.rr_cursor, res.svc_requests, res.svc_tx_bytes,
+        res.no_route, res.held,
+        PoolState(res.pool_req_id, res.pool_endpoint, res.pool_svc,
+                  res.pool_length, res.pool_token, res.pool_active > 0))
 
 
 @partial(jax.jit, static_argnames=("eos", "max_len", "block_i", "fold"))

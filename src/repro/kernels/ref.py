@@ -255,6 +255,44 @@ def admit_commit_ref(req_id, svc, features, msg_bytes, token, state,
     return AdmitCommitResult(*base, preq, pep, psvc, plen, ptok, pact)
 
 
+def admit_sharded_ref(req_id, svc, features, msg_bytes, token, state,
+                      pool_req_id, pool_endpoint, pool_svc, pool_length,
+                      pool_token, pool_active, rnd, gumbel):
+    """Oracle for the mesh-sharded admission (``ops.admit_commit_sharded``).
+
+    Per-request inputs arrive stacked per shard — ``(M, R_loc)`` (features
+    ``(M, R_loc, F)``, gumbel ``(M, R_loc, WE)``) — and the deterministic
+    merge rule is **shard-major order**: the sharded datapath must behave
+    exactly as if one host had ingested shard 0's rows, then shard 1's, and
+    so on.  Under that rule every field is pinned bit-exactly by
+    ``admit_commit_ref`` on the concatenation:
+
+      * order-insensitive state — ``ep_load`` (rr/water-fill/random/weighted
+        multisets depend only on counts + per-request draws), per-service
+        metrics, the ``no_route``/``held`` counts and the pool occupancy
+        multiset — is identical under ANY serialization of the shards;
+      * order-sensitive outputs — which (instance, slot) each request lands
+        in, and WHICH requests are held when a pool fills — are resolved by
+        the shard-major rule (global per-instance arrival rank = preceding
+        shards' counts + local rank).
+
+    Returns ``AdmitCommitResult`` with per-request fields back in
+    ``(M, R_loc)`` shard layout.
+    """
+    M, R_loc = req_id.shape
+    flat = lambda a: a.reshape(M * R_loc, *a.shape[2:])
+    base = admit_commit_ref(flat(req_id), flat(svc), flat(features),
+                            flat(msg_bytes), flat(token), state,
+                            pool_req_id, pool_endpoint, pool_svc,
+                            pool_length, pool_token, pool_active,
+                            flat(rnd), flat(gumbel))
+    from repro.kernels.route_match import AdmitCommitResult
+    unflat = lambda a: a.reshape(M, R_loc)
+    return AdmitCommitResult(
+        unflat(base.cluster), unflat(base.endpoint), unflat(base.instance),
+        unflat(base.slot), unflat(base.ok), *base[5:])
+
+
 def complete_ref(pool_req_id, pool_endpoint, pool_svc, pool_length,
                  pool_token, pool_active, nxt, ep_load, rx_bytes, *,
                  eos: int, max_len: int):

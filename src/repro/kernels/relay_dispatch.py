@@ -39,8 +39,10 @@ def _relay_kernel(idx_ref, slot_ref, load_ref, counts_ref, *, n_dest: int,
         jnp.int32, (block_n, n_dest), 1)).astype(jnp.int32)
     local_rank = jnp.cumsum(oh, axis=0) - oh            # rank before self
     base = counts_ref[...]                              # (E,)
-    slot_ref[...] = (base[idx] + jnp.sum(local_rank * oh, axis=1)
-                     ).astype(jnp.int32)
+    # padding rows carry the sentinel destination n_dest: no one-hot lane
+    # matches them (no rank, no load), and the base gather clamps in-range
+    slot_ref[...] = (base[jnp.minimum(idx, n_dest - 1)]
+                     + jnp.sum(local_rank * oh, axis=1)).astype(jnp.int32)
     counts_ref[...] = base + jnp.sum(oh, axis=0)
 
     @pl.when(i == n - 1)
@@ -50,20 +52,29 @@ def _relay_kernel(idx_ref, slot_ref, load_ref, counts_ref, *, n_dest: int,
 
 def relay_slots(idx, n_dest: int, *, block_n: int = 1024,
                 interpret: bool | None = None):
-    """idx: (N,) int32 → (slot (N,), load (E,)).  Oracle: relay.positions_*."""
+    """idx: (N,) int32 → (slot (N,), load (E,)).  Oracle: relay.positions_*.
+
+    Any ``N`` works: non-tile-divisible batches pad up to the block multiple
+    with the sentinel destination ``n_dest`` (inert in-kernel — matches no
+    one-hot lane, counts no load) and the padded slots are sliced off."""
     N = idx.shape[0]
+    if N == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((n_dest,), jnp.int32))
     block_n = min(block_n, N)
-    assert N % block_n == 0
-    grid = (N // block_n,)
+    Np = -(-N // block_n) * block_n
+    idx = idx.astype(jnp.int32)
+    if Np != N:
+        idx = jnp.concatenate([idx, jnp.full((Np - N,), n_dest, jnp.int32)])
+    grid = (Np // block_n,)
     slot, load = pl.pallas_call(
         functools.partial(_relay_kernel, n_dest=n_dest, block_n=block_n),
         grid=grid,
         in_specs=[pl.BlockSpec((block_n,), lambda i: (i,))],
         out_specs=[pl.BlockSpec((block_n,), lambda i: (i,)),
                    pl.BlockSpec((n_dest,), lambda i: (0,))],
-        out_shape=[jax.ShapeDtypeStruct((N,), jnp.int32),
+        out_shape=[jax.ShapeDtypeStruct((Np,), jnp.int32),
                    jax.ShapeDtypeStruct((n_dest,), jnp.int32)],
         scratch_shapes=[pltpu.VMEM((n_dest,), jnp.int32)],
         interpret=resolve_interpret(interpret),
-    )(idx.astype(jnp.int32))
-    return slot, load
+    )(idx)
+    return slot[:N], load

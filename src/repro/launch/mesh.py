@@ -32,3 +32,20 @@ def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
     n = len(jax.devices())
     assert data * model <= n, (data, model, n)
     return make_mesh((data, model), ("data", "model"))
+
+
+def make_shard_mesh(shards: int, axis: str = "shard") -> Mesh:
+    """1-D mesh for the sharded admission datapath (many ingress hosts
+    feeding one fleet — ops.admit_commit_sharded, DESIGN.md §7).
+
+    Needs ``shards`` addressable devices; off-hardware runs get them via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before jax
+    initializes (cf. tests/test_distributed.py)."""
+    n = len(jax.devices())
+    if shards > n:
+        raise RuntimeError(
+            f"{shards}-way admission sharding needs {shards} devices, "
+            f"found {n}; off-TPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count="
+            f"{shards} before jax initializes")
+    return make_mesh((shards,), (axis,))

@@ -34,6 +34,10 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=24)
+    ap.add_argument("--shards", type=int, default=1,
+                    help="shard the admission batch + pool over an M-way "
+                    "mesh axis (xlb engine only; needs M devices — off-TPU "
+                    "set XLA_FLAGS=--xla_force_host_platform_device_count)")
     args = ap.parse_args(argv)
 
     cfg = smoke_config(get_config(args.arch))
@@ -45,8 +49,20 @@ def main(argv=None) -> int:
         [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
         [Cluster("pool", endpoints=list(range(args.instances)),
                  policy=POLICY_LEAST_REQUEST)])
+    kw = {}
+    if args.shards > 1:
+        if args.engine != "xlb":
+            raise SystemExit("--shards needs the in-graph engine "
+                             "(--engine xlb); the sidecar baselines route "
+                             "on the host")
+        if args.instances % args.shards:
+            raise SystemExit(f"--instances {args.instances} must divide "
+                             f"over --shards {args.shards}")
+        from repro.launch.mesh import make_shard_mesh
+        kw = dict(shards=args.shards,
+                  shard_mesh=make_shard_mesh(args.shards))
     eng = make_balancer(args.engine, cfg, args.instances, args.slots,
-                        args.max_len)
+                        args.max_len, **kw)
     loop = ServeLoop(eng, params, cp, admit_batch=8, dtype=jnp.float32)
 
     t0 = time.perf_counter()

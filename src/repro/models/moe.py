@@ -145,8 +145,13 @@ def moe_ffn(cfg: ModelConfig, p: Params, x: jax.Array, *,
             out, meta = relay.sharded_apply(
                 xx, ii, ww, n_dest=m.n_experts, capacity=cap, axis="model",
                 backend_fn=_expert_ffn, backend_params=pp)
-            ovf = jax.lax.pmean(meta.overflow_frac, tok_axes)
-            load = jax.lax.psum(meta.load, tok_axes)
+            # sharded_apply already reduces meta over its relay axis
+            # ("model"): load is global pre-drop, overflow_frac the axis
+            # mean — only the data axes remain to fold in here
+            ovf = (jax.lax.pmean(meta.overflow_frac, dp_axes) if dp_axes
+                   else meta.overflow_frac)
+            load = (jax.lax.psum(meta.load, dp_axes) if dp_axes
+                    else meta.load)
             return out, ovf, load
 
         wdict = {n: p[n] for n in ("w_in", "w_gate", "w_out")}

@@ -48,6 +48,10 @@ class DrainReport(NamedTuple):
     dropped: list         # gave up after max retries (== loop.dropped)
     queued: int           # still waiting at the ingress when draining ended
     inflight: int         # still holding a pool slot when draining ended
+    held_first: int = 0   # DISTINCT requests ever re-queued (held or
+    #                       unroutable) — each counts once, however many
+    #                       attempts it took; the engine's metrics.overflow
+    #                       counts per-ATTEMPT hold events (FlowMetrics)
 
 
 def parse_features(headers: dict[str, str]) -> np.ndarray:
@@ -79,6 +83,10 @@ class ServeLoop:
         self.inflight: dict[int, Request] = {}
         self.done: list[Request] = []
         self.dropped: list[Request] = []    # gave up after max retries
+        self.held_first = 0                 # distinct requests ever re-queued
+        #                                     (first attempt only — the
+        #                                     engine's overflow metric counts
+        #                                     every attempt, FlowMetrics doc)
 
     # ------------------------------------------------------------------ #
     # control-plane seam
@@ -145,6 +153,8 @@ class ServeLoop:
         for r in taken:
             if r.req_id not in serviced and r.req_id in self.inflight:
                 self.inflight.pop(r.req_id)
+                if r.retries == 0:          # first hold: count the REQUEST
+                    self.held_first += 1    # (attempts land in overflow)
                 r.retries += 1
                 if r.retries < 64:
                     self.queue.appendleft(r)
@@ -164,4 +174,5 @@ class ServeLoop:
             t += 1
         return DrainReport(done=self.done, dropped=self.dropped,
                            queued=len(self.queue),
-                           inflight=len(self.inflight))
+                           inflight=len(self.inflight),
+                           held_first=self.held_first)

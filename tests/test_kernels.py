@@ -711,3 +711,23 @@ def test_relay_slots(N, E, bn):
     slot_ref, load_ref = ref.relay_slots_ref(idx, E)
     np.testing.assert_array_equal(np.asarray(slot), np.asarray(slot_ref))
     np.testing.assert_array_equal(np.asarray(load), np.asarray(load_ref))
+
+
+@pytest.mark.parametrize("N,E,bn", [
+    (1536, 16, 1024),     # the reported crash: 1536 % 1024 != 0
+    (1, 4, 1024),         # single row under the default block
+    (7, 3, 4),            # N > bn with a ragged tail
+    (1000, 8, 256),       # several full tiles + a partial one
+    (5, 2, 8),            # block_n clamps to N, then N % block == 0
+])
+def test_relay_slots_non_divisible_n(N, E, bn):
+    """Regression: ``relay_slots`` used to hard-assert N % block_n == 0
+    after clamping — any non-tile-divisible N crashed instead of padding.
+    Padded rows carry the sentinel destination (matches nothing, counts no
+    load) and are sliced off, so awkward N is bit-exact vs the oracle."""
+    idx = jax.random.randint(jax.random.PRNGKey(11), (N,), 0, E)
+    slot, load = ops.relay_slots(idx, E, block_n=bn)
+    slot_ref, load_ref = ref.relay_slots_ref(idx, E)
+    assert slot.shape == (N,)
+    np.testing.assert_array_equal(np.asarray(slot), np.asarray(slot_ref))
+    np.testing.assert_array_equal(np.asarray(load), np.asarray(load_ref))

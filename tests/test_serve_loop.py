@@ -223,3 +223,31 @@ def test_weight_update_visible_to_all_three_engines(setup):
     for kind, lp in loops.items():
         assert float(np.asarray(lp.routing.ep_weight)[slot]) == 7.5, kind
         assert int(np.asarray(lp.routing.version)) == 1, kind
+
+
+def test_held_request_overflow_is_bounded_and_documented(setup):
+    """Regression: ``Engine.admit`` adds ``res.held`` into
+    ``metrics.overflow`` on EVERY attempt, so one request re-queued k times
+    used to read like k distinct pool exhaustions.  The semantics are now
+    pinned (FlowMetrics docstring): ``overflow`` counts hold events per
+    attempt — exactly the held request's retry count, bounded by the host's
+    64-retry cap — while ``ServeLoop.held_first`` counts the REQUEST once,
+    however long it waited."""
+    cfg, params = setup
+    eng = interpose.Engine(cfg, 1, 1, max_len=5)       # one slot total
+    services = [ServiceConfig("svc", rules=[Rule(0, None, "pool")])]
+    clusters = [Cluster("pool", endpoints=[0], policy=POLICY_RR)]
+    routing, _ = build_state(services, clusters)
+    loop = ServeLoop(eng, params, routing, admit_batch=2)
+    loop.submit(_req(0))
+    loop.submit(_req(1))           # held until request 0 frees the slot
+    rep = loop.drain(max_ticks=100)
+    assert {r.req_id for r in rep.done} == {0, 1}
+    held = next(r for r in rep.done if r.req_id == 1)
+    assert held.retries >= 1                    # it really was held
+    overflow = int(np.asarray(loop.state.metrics.overflow))
+    # one hold event per failed attempt, nothing more: the eventually-
+    # admitted request contributes exactly its retry count (< 64), not 64x
+    assert overflow == held.retries
+    assert loop.held_first == 1 == rep.held_first
+    assert rep.held_first < 64
