@@ -65,12 +65,19 @@ class HopStats:
 
 
 class Service:
-    """One service fleet behind any Balancer (mode: xlb | istio | cilium)."""
+    """One service fleet behind any Balancer (mode: xlb | istio | cilium).
+
+    ``eos`` reaches the engine's completion path (``eos=-1`` makes requests
+    purely length-driven — the deterministic setting the degraded scenario
+    measures latency in).  ``fault`` is an optional
+    ``runtime.serve_loop.FaultInjector`` applied to the pool before every
+    step (progress rollback: the fault-injection harness)."""
 
     def __init__(self, mode: str, n_instances: int, slots: int,
-                 tokens_per_req: int, admit_batch: int = 16):
+                 tokens_per_req: int, admit_batch: int = 16, eos: int = 1,
+                 fault=None):
         self.eng = make_balancer(mode, CFG, n_instances, slots,
-                                 max_len=tokens_per_req + 1)
+                                 max_len=tokens_per_req + 1, eos=eos)
         self.cp = build_cp(n_instances)
         self.state = self.eng.init_state(self.cp.snapshot(),
                                          dtype=jnp.float32)
@@ -81,6 +88,9 @@ class Service:
         self.dropped: list[int] = []        # gave up after max retries
         self._retries: dict[int, int] = {}
         self.stats = HopStats()
+        self.fault = fault
+        self.tick_no = 0                    # absolute ticks (never reset —
+        #                                     fault schedules key off it)
 
     # control-plane consumer hooks (cp.attach) ------------------------- #
     @property
@@ -96,6 +106,12 @@ class Service:
 
     def tick(self) -> list[int]:
         """One engine step. Returns req_ids completed this tick."""
+        self.cp.heartbeat(self)             # liveness lease (core/control)
+        if self.fault is not None:          # injected faults roll progress
+            pool = self.fault.apply(self.state.pool, self.tick_no)
+            if pool is not self.state.pool:  # back BEFORE the step, so a
+                self.state = self.state._replace(pool=pool)  # held slot
+        self.tick_no += 1                   # can't complete this tick
         take = self.queue[: self.admit_batch]
         self.queue = self.queue[self.admit_batch:]
         reqs = request_batch(take, self.admit_batch)
@@ -189,6 +205,93 @@ def run_closed_loop(mode: str, *, n_requests: int, n_instances: int = 2,
         "avg_ms": 1e3 * float(np.mean(lat)) if lat else float("nan"),
         "p99_ms": 1e3 * float(np.percentile(lat, 99)) if lat else float("nan"),
         "ticks": ticks,
+    }
+
+
+def run_degraded(mode: str = "xlb", *, n_instances: int = 4, slots: int = 4,
+                 tokens_per_req: int = 2, arrivals_per_tick: int = 2,
+                 fault_start: int = 40, fault_end: int = 160,
+                 factor: int = 10, epoch_interval: int = 6,
+                 total_ticks: int = 280, warmup: int = 10) -> dict:
+    """The closed-loop health scenario (DESIGN.md §8): one instance goes
+    ``factor``× slower mid-run; the HealthPolicy daemon must eject it and,
+    once the fault clears, re-admit it — with ZERO operator transactions —
+    and tail latency over the post-detection window must recover to the
+    healthy baseline.
+
+    Latency is measured in engine ticks (submit tick → completion tick)
+    with ``eos=-1`` so completion is purely length-driven — deterministic,
+    and immune to host jitter.  The breaker's cooldown is sized so the
+    half-open probe lands after the fault clears (the mid-fault re-eject
+    cycle is pinned by tests/test_health.py instead — here we measure the
+    clean recovery the gate checks)."""
+    from repro.core.health import CLOSED, OPEN, HealthConfig, HealthPolicy
+    from repro.runtime.serve_loop import Fault, FaultInjector
+
+    sick = n_instances - 1
+    inj = FaultInjector([Fault(sick, "slow", factor=factor,
+                               start=fault_start, end=fault_end)])
+    svc = Service(mode, n_instances, slots, tokens_per_req, eos=-1,
+                  fault=inj)
+    # first probe at ~eject + cooldown·interval: past fault_end by design
+    cooldown = (fault_end - fault_start) // epoch_interval
+    pol = HealthPolicy(svc.cp, HealthConfig(
+        trip_after=2, cooldown=cooldown, recover_after=2,
+        probe_patience=10), clusters=["pool"])
+    v0 = svc.cp.version
+    submit_t: dict[int, int] = {}
+    done_t: dict[int, int] = {}
+    rid = 0
+    eject_tick = uneject_tick = None
+    for t in range(total_ticks):
+        wave = list(range(rid, rid + arrivals_per_tick))
+        rid += len(wave)
+        svc.submit(wave)
+        for r in wave:
+            submit_t[r] = t
+        for r in svc.tick():
+            done_t[r] = t
+        if (t + 1) % epoch_interval == 0:
+            pol.epoch(svc.routing)
+            st = pol.state_of("pool", sick)
+            if st == OPEN and eject_tick is None:
+                eject_tick = t
+            if eject_tick is not None and uneject_tick is None \
+                    and st == CLOSED:
+                uneject_tick = t
+
+    lat = {r: done_t[r] - submit_t[r] for r in done_t}
+
+    def p99(lo, hi):
+        xs = [lat[r] for r, d in done_t.items() if lo <= d < hi]
+        return float(np.percentile(xs, 99)) if xs else float("nan")
+
+    # stragglers stuck on the slow instance at ejection time finish within
+    # ~tokens·factor ticks; the recovered window starts after they clear
+    settle = (tokens_per_req + 2) * factor
+    detect = eject_tick if eject_tick is not None else fault_end
+    healthy = p99(warmup, fault_start)
+    degraded = p99(fault_start + 2, min(detect + settle, fault_end))
+    recovered = p99(detect + settle, fault_end)
+    snap = svc.cp.snapshot()
+    ep_slots = [svc.cp.endpoint_slot("pool", i) for i in range(n_instances)]
+    end_drained = int(sum(int(np.asarray(snap.ep_drained)[s])
+                          for s in ep_slots))
+    return {
+        "mode": mode, "n_instances": n_instances, "slots": slots,
+        "factor": factor, "fault_start": fault_start,
+        "fault_end": fault_end, "ticks": total_ticks,
+        "completed": len(done_t), "dropped": len(svc.dropped),
+        "healthy_p99_ticks": healthy, "degraded_p99_ticks": degraded,
+        "recovered_p99_ticks": recovered,
+        "recovery_ratio": recovered / healthy if healthy else float("nan"),
+        "eject_tick": eject_tick, "uneject_tick": uneject_tick,
+        # closed-loop requirement: every commit was authored by the daemon
+        "operator_txns": (svc.cp.version - v0) - pol.commits,
+        "daemon_txns": pol.commits,
+        "end_drained": end_drained,
+        "end_state": pol.state_of("pool", sick),
+        "end_weight": float(svc.cp.endpoint_weight("pool", sick)),
     }
 
 

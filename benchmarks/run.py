@@ -435,6 +435,72 @@ def bench_step():
     _append_trend("step", record)
 
 
+def bench_degraded():
+    """Degraded-operation scenario (DESIGN.md §8): one instance turns 10×
+    slower mid-run; the health daemon must detect it through the in-kernel
+    latency EWMAs, eject it, hold tail latency at the healthy baseline,
+    and — once the fault clears — probe and fully restore it with ZERO
+    operator transactions.  Writes BENCH_degraded.json and appends the
+    record to BENCH_TREND.jsonl."""
+    from benchmarks import common
+    r = common.run_degraded("xlb")
+    for k in ("healthy_p99_ticks", "degraded_p99_ticks",
+              "recovered_p99_ticks", "recovery_ratio"):
+        emit("degraded", "xlb", k, r[k])
+    emit("degraded", "xlb", "eject_tick",
+         -1 if r["eject_tick"] is None else r["eject_tick"])
+    emit("degraded", "xlb", "uneject_tick",
+         -1 if r["uneject_tick"] is None else r["uneject_tick"])
+    for k in ("operator_txns", "daemon_txns", "end_drained", "completed",
+              "dropped"):
+        emit("degraded", "xlb", k, r[k])
+    with open("BENCH_degraded.json", "w") as f:
+        json.dump(r, f, indent=2)
+        f.write("\n")
+    print("# wrote BENCH_degraded.json", flush=True)
+    _append_trend("degraded", r)
+    _gate_degraded(r)
+
+
+def _gate_degraded(r: dict) -> None:
+    """The closed-loop health gate (ROADMAP): after the fault clears the
+    loop must have recovered on its own — tail latency back near baseline,
+    the sick endpoint re-admitted at full weight, and not a single
+    config transaction authored by anything but the daemon."""
+    fails = []
+    if not r["recovery_ratio"] <= 1.5:       # catches NaN too
+        fails.append(f"recovered/healthy p99 {r['recovery_ratio']:.3f} "
+                     "> 1.5 (tail latency never recovered)")
+    if r["eject_tick"] is None:
+        fails.append("sick endpoint was never ejected")
+    if r["uneject_tick"] is None:
+        fails.append("ejected endpoint never re-admitted after the fault "
+                     "cleared")
+    if r["end_drained"] != 0:
+        fails.append(f"{r['end_drained']} endpoint(s) still drained at end "
+                     "of run")
+    if r["end_state"] != "closed":
+        fails.append(f"breaker ended {r['end_state']!r}, want 'closed'")
+    if r["operator_txns"] != 0:
+        fails.append(f"{r['operator_txns']} non-daemon config txns — "
+                     "recovery was not closed-loop")
+    if fails:
+        sys.exit("check: degraded-recovery gate FAILED — " +
+                 "; ".join(fails))
+    print(f"# check: degraded gate OK — eject@{r['eject_tick']} "
+          f"uneject@{r['uneject_tick']} ratio {r['recovery_ratio']:.2f} "
+          f"(daemon txns {r['daemon_txns']}, operator txns 0)", flush=True)
+
+
+def check_degraded() -> None:
+    """--check leg for the closed health loop: run the degraded scenario
+    small and gate on autonomous recovery (run.py --check always
+    re-measures this one — it is cheap and fully deterministic, so there
+    is no recorded-file staleness to tolerate)."""
+    from benchmarks import common
+    _gate_degraded(common.run_degraded("xlb"))
+
+
 def _run_on_host_mesh(argv: list, shards: int, *, what: str,
                       timeout: int = 1800):
     """Run a python subprocess on an M-device virtual host mesh (XLA_FLAGS
@@ -477,8 +543,9 @@ def check_gates(remeasured: bool = False) -> None:
     speedup >= 1.3 over the staged chain at batch >= 256 per the last
     recorded BENCH_admit.json; the fused completion kernel must hold
     fused/staged >= 0.8 at the engine-sized 2x16 pool per BENCH_step.json;
-    and all three engines must still drive the serving launcher end-to-end
-    through the Balancer protocol."""
+    all three engines must still drive the serving launcher end-to-end
+    through the Balancer protocol; and the closed health loop must recover
+    the degraded scenario autonomously (``check_degraded``)."""
     if not remeasured:
         print("# check: gating the last recorded BENCH_admit.json / "
               "BENCH_step.json (not re-measured this run)", flush=True)
@@ -516,6 +583,7 @@ def check_gates(remeasured: bool = False) -> None:
           flush=True)
     smoke_engines()
     smoke_shards()
+    check_degraded()
 
 
 def smoke_engines() -> None:
@@ -554,6 +622,7 @@ def smoke_shards(shards: int = 2) -> None:
 
 BENCHES = {
     "admit": bench_admit, "step": bench_step, "shard": bench_shard,
+    "degraded": bench_degraded,
     "table1": bench_table1, "table2": bench_table2, "fig5": bench_fig5,
     "fig6": bench_fig6, "fig7": bench_fig7, "fig8": bench_fig8,
     "fig9": bench_fig9, "fig10": bench_fig10, "fig11": bench_fig11,

@@ -64,8 +64,8 @@ from repro.core.routing_table import (MAX_CLUSTERS, MAX_ENDPOINTS,
                                       build_state, fnv1a)
 
 # The tables the control plane owns.  Everything else in RoutingState
-# (ep_load, rr_cursor, version) is datapath-owned and only ever *migrated*
-# by a commit, never authored.
+# (ep_load, ep_inflight_ewma, ep_tput_ewma, rr_cursor, version) is
+# datapath-owned and only ever *migrated* by a commit, never authored.
 CONFIG_FIELDS = ("svc_rule_start", "svc_rule_count", "rule_field",
                  "rule_value", "rule_cluster", "cluster_ep_start",
                  "cluster_ep_count", "cluster_policy", "ep_instance",
@@ -110,12 +110,18 @@ def unpack_plan(arrays: dict) -> RefreshPlan:
 
 @jax.jit
 def apply_plan(live: RoutingState, plan: RefreshPlan) -> RoutingState:
-    """The single buffer swap: new config in, live loads migrated through
-    the slot permutation, rr cursors untouched, version + 1."""
+    """The single buffer swap: new config in, live loads + health EWMAs
+    migrated through the slot permutation (fresh slots start cold at zero),
+    rr cursors untouched, version + 1."""
     cfg = {k: jnp.asarray(v) for k, v in zip(CONFIG_FIELDS, plan.config)}
     src = jnp.asarray(plan.ep_src)
-    load = jnp.where(src >= 0, live.ep_load[jnp.maximum(src, 0)], 0)
+    gather = jnp.maximum(src, 0)
+    load = jnp.where(src >= 0, live.ep_load[gather], 0)
+    ewl = jnp.where(src >= 0, live.ep_inflight_ewma[gather], 0.0)
+    ewt = jnp.where(src >= 0, live.ep_tput_ewma[gather], 0.0)
     return live._replace(ep_load=load.astype(jnp.int32),
+                         ep_inflight_ewma=ewl.astype(jnp.float32),
+                         ep_tput_ewma=ewt.astype(jnp.float32),
                          version=live.version + 1, **cfg)
 
 
@@ -184,7 +190,11 @@ class _Store:
     clusters: dict
     ep_free: list
     rule_free: list
-    draining: set           # {(cluster_name, instance)}
+    draining: dict          # {(cluster_name, instance): reason}; reason is
+    #                         "operator" (drain_endpoint default — the reaper
+    #                         removes the row once load hits zero) or
+    #                         "health" (circuit-breaker ejection — temporary:
+    #                         never reaped, only HealthPolicy lifts it)
     # directory-id recycling: removed service/cluster ids return here and
     # are reused before the high-water counters grow the tables
     svc_id_free: list = dataclasses.field(default_factory=list)
@@ -204,14 +214,14 @@ class ControlPlane:
     """Owner of the routing config: directory + allocator + transactions."""
 
     def __init__(self, services: list[ServiceConfig] = (),
-                 clusters: list[Cluster] = ()):
+                 clusters: list[Cluster] = (), *, lease_epochs: int = 0):
         # One packing implementation: the initial build IS a build_state
         # rebuild (bit-exact by construction); the directory and free-lists
         # are recovered from its window layout.
         st, ids = build_state(list(services), list(clusters))
         cfg = {k: np.array(getattr(st, k)) for k in CONFIG_FIELDS}
         store = _Store(cfg=cfg, services={}, clusters={}, ep_free=[],
-                       rule_free=[], draining=set())
+                       rule_free=[], draining={})
         ep_cursor = 0
         for c in clusters:
             ci = ids["clusters"][c.name]
@@ -235,6 +245,13 @@ class ControlPlane:
         self.version = 0
         self.last_commit_log: list[tuple] = []
         self.last_plan: RefreshPlan | None = None
+        # liveness leases: a consumer's heartbeat records the control epoch
+        # it was last seen alive at.  With lease_epochs > 0 the drain reaper
+        # ignores load pinned by a consumer whose lease expired (a dead host
+        # cannot deadlock drain-before-remove); 0 disables expiry.
+        self.lease_epochs = lease_epochs
+        self.epoch = 0
+        self._leases: weakref.WeakKeyDictionary = weakref.WeakKeyDictionary()
 
     # ------------------------------------------------------------------ #
     # directory / snapshots
@@ -260,22 +277,51 @@ class ControlPlane:
 
     def snapshot(self) -> RoutingState:
         """A fresh RoutingState at the control plane's current config (zero
-        load/cursors — the datapath owns those from here on)."""
+        load/cursors/EWMAs — the datapath owns those from here on)."""
         cfg = self._store.cfg
         return RoutingState(
             ep_load=jnp.zeros((MAX_ENDPOINTS,), jnp.int32),
+            ep_inflight_ewma=jnp.zeros((MAX_ENDPOINTS,), jnp.float32),
+            ep_tput_ewma=jnp.zeros((MAX_ENDPOINTS,), jnp.float32),
             rr_cursor=jnp.zeros((MAX_CLUSTERS,), jnp.int32),
             version=jnp.asarray(self.version, jnp.int32),
             **{k: jnp.asarray(cfg[k]) for k in CONFIG_FIELDS})
+
+    def cluster_names(self) -> list[str]:
+        return list(self._store.clusters)
+
+    def cluster_members(self, name: str) -> list[tuple[int, int]]:
+        """[(global slot, instance), ...] currently in cluster ``name`` —
+        the HealthPolicy's view of who it may judge."""
+        store = self._txn.store if self._txn is not None else self._store
+        d = store.clusters[name]
+        n = int(store.cfg["cluster_ep_count"][d.id])
+        return [(d.win.start + j,
+                 int(store.cfg["ep_instance"][d.win.start + j]))
+                for j in range(n)]
+
+    def endpoint_weight(self, cluster: str, instance: int) -> float:
+        store = self._txn.store if self._txn is not None else self._store
+        slot = self._find_slot(store, cluster, instance)
+        if slot < 0:
+            raise KeyError(f"no endpoint {instance} in {cluster!r}")
+        return float(store.cfg["ep_weight"][slot])
+
+    def drain_reason(self, cluster: str, instance: int) -> str | None:
+        """Pending drain reason for an endpoint, or None if not draining."""
+        store = self._txn.store if self._txn is not None else self._store
+        return store.draining.get((cluster, instance))
 
     def attach(self, consumer) -> None:
         """Register a consumer (``ServeLoop``, benchmark service, ...): its
         ``apply_refresh(plan)`` runs on every commit, and its live
         ``routing.ep_load`` gates the drain reaper.  Held by weak
         reference — an abandoned consumer drops out on its own instead of
-        pinning drained endpoints alive (and paying a splice) forever."""
+        pinning drained endpoints alive (and paying a splice) forever.
+        Attaching is an implicit heartbeat (the lease starts now)."""
         if consumer not in self._consumers():
             self._refs.append(weakref.ref(consumer))
+        self.heartbeat(consumer)
 
     def detach(self, consumer) -> None:
         self._refs = [r for r in self._refs if r() is not consumer]
@@ -284,6 +330,30 @@ class ControlPlane:
         live = [(r, r()) for r in self._refs]
         self._refs = [r for r, c in live if c is not None]
         return [c for _, c in live if c is not None]
+
+    # ------------------------------------------------------------------ #
+    # liveness leases
+    # ------------------------------------------------------------------ #
+    def heartbeat(self, consumer) -> None:
+        """Record the consumer alive at the current control epoch."""
+        try:
+            self._leases[consumer] = self.epoch
+        except TypeError:                  # non-weakref-able consumer: the
+            pass                           # lease never expires for it
+
+    def advance_epoch(self) -> int:
+        """Tick the control-epoch clock (the HealthPolicy daemon's cadence;
+        anything periodic may drive it)."""
+        self.epoch += 1
+        return self.epoch
+
+    def _lease_live(self, consumer) -> bool:
+        if self.lease_epochs <= 0:
+            return True
+        last = self._leases.get(consumer)
+        if last is None:                   # never heard from: treat the
+            return True                    # attach itself as the heartbeat
+        return (self.epoch - last) <= self.lease_epochs
 
     # ------------------------------------------------------------------ #
     # transactions
@@ -318,16 +388,22 @@ class ControlPlane:
     def _commit(self, txn: _Txn) -> None:
         consumers = self._consumers()
         # drain reaper: a drained endpoint leaves once no attached consumer
-        # still counts in-flight load against it
+        # still counts in-flight load against it.  Health ejections are
+        # temporary by design — never reaped, only HealthPolicy lifts them —
+        # and a consumer with an expired lease no longer votes (a dead host's
+        # phantom load cannot deadlock drain-before-remove).
+        leased = [c for c in consumers if self._lease_live(c)]
         for cl, inst in sorted(txn.store.draining):
+            if txn.store.draining.get((cl, inst)) == "health":
+                continue
             slot = self._find_slot(txn.store, cl, inst)
             if slot < 0:
-                txn.store.draining.discard((cl, inst))
+                txn.store.draining.pop((cl, inst), None)
                 continue
             old = int(txn.src[slot])
             load = 0 if old < 0 else max(
                 (int(np.asarray(c.routing.ep_load)[old])
-                 for c in consumers), default=0)
+                 for c in leased), default=0)
             if load == 0:
                 self._do_remove_endpoint(txn, cl, inst)
                 txn.log.append(("reap", cl, inst))
@@ -422,35 +498,62 @@ class ControlPlane:
         with self._auto() as t:
             self._do_remove_endpoint(t, cluster, instance)
 
-    def drain_endpoint(self, cluster: str, instance: int) -> None:
+    def drain_endpoint(self, cluster: str, instance: int,
+                       reason: str = "operator") -> None:
         """Graceful removal: the weight drops to zero AND the endpoint's
         ``ep_drained`` bit raises at once — the datapath-visible draining
         mask every selection path consults (the fused admit kernel, the
         staged ``policies.select``, the sidecar ``HostRouter``), so new
         traffic stops immediately under EVERY policy, not just WEIGHTED.
-        The row itself survives until a later commit finds every attached
-        consumer's live load for it at zero, then the reaper removes it."""
+
+        ``reason="operator"`` (default): the row survives until a later
+        commit finds every attached consumer's live load for it at zero,
+        then the reaper removes it.  ``reason="health"``: a circuit-breaker
+        ejection — temporary, never reaped, and immune to ``set_weight``
+        (only ``undrain_endpoint``, i.e. the HealthPolicy, lifts it)."""
+        if reason not in ("operator", "health"):
+            raise ValueError(f"unknown drain reason {reason!r}")
         with self._auto() as t:
             slot = self._find_slot(t.store, cluster, instance)
             if slot < 0:
                 raise KeyError(f"no endpoint {instance} in {cluster!r}")
             t.store.cfg["ep_weight"][slot] = 0.0
             t.store.cfg["ep_drained"][slot] = 1
-            t.store.draining.add((cluster, instance))
-            t.log.append(("drain", t.store.clusters[cluster].id, instance))
+            t.store.draining[(cluster, instance)] = reason
+            t.log.append(("drain", t.store.clusters[cluster].id, instance,
+                          reason))
 
-    def set_weight(self, cluster: str, instance: int,
-                   weight: float) -> None:
-        """Set an endpoint's weight — and cancel any pending drain on it
-        (an operator re-weighting a draining endpoint is changing their
-        mind; the reaper must not remove it later)."""
+    def undrain_endpoint(self, cluster: str, instance: int,
+                         weight: float = 1.0) -> None:
+        """Lift a pending drain (any reason) and restore the endpoint to
+        service at ``weight`` — the HealthPolicy's half-open re-admission
+        path (a small probe weight) and full recovery path (the saved
+        weight)."""
         with self._auto() as t:
             slot = self._find_slot(t.store, cluster, instance)
             if slot < 0:
                 raise KeyError(f"no endpoint {instance} in {cluster!r}")
             t.store.cfg["ep_weight"][slot] = weight
-            t.store.cfg["ep_drained"][slot] = 0    # drain cancelled: unmask
-            t.store.draining.discard((cluster, instance))
+            t.store.cfg["ep_drained"][slot] = 0
+            t.store.draining.pop((cluster, instance), None)
+            t.log.append(("undrain", t.store.clusters[cluster].id, instance))
+
+    def set_weight(self, cluster: str, instance: int,
+                   weight: float) -> None:
+        """Set an endpoint's weight — and cancel a pending *operator* drain
+        on it (an operator re-weighting a draining endpoint is changing
+        their mind; the reaper must not remove it later).  A *health* drain
+        is NOT cancelled: an operator weight change must never silently
+        un-eject a sick endpoint — the weight is staged for when the
+        breaker closes, but the drained mask stays up."""
+        with self._auto() as t:
+            slot = self._find_slot(t.store, cluster, instance)
+            if slot < 0:
+                raise KeyError(f"no endpoint {instance} in {cluster!r}")
+            t.store.cfg["ep_weight"][slot] = weight
+            if t.store.draining.get((cluster, instance)) != "health":
+                t.store.cfg["ep_drained"][slot] = 0  # drain cancelled
+                t.store.draining.pop((cluster, instance), None)
             t.log.append(("weight", slot))
 
     def set_policy(self, cluster: str, policy: int) -> None:
@@ -483,8 +586,8 @@ class ControlPlane:
             cfg["cluster_ep_start"][d.id] = 0
             cfg["cluster_policy"][d.id] = 0
             _extent_free(t.store.ep_free, d.win.start, d.win.cap)
-            t.store.draining = {(c, i) for c, i in t.store.draining
-                                if c != name}
+            t.store.draining = {(c, i): r for (c, i), r
+                                in t.store.draining.items() if c != name}
             del t.store.clusters[name]
             t.store.cluster_id_free.append(d.id)
             t.store.cluster_id_free.sort()
@@ -624,7 +727,7 @@ class ControlPlane:
         if slot != last:
             self._move_ep(t, slot, last)       # swap-with-last + load migrate
         self._clear_ep(t, last)                # vacated slot zeroed
-        t.store.draining.discard((cluster, instance))
+        t.store.draining.pop((cluster, instance), None)
 
     def _grow_ep_window(self, t: _Txn, cluster: str) -> None:
         """Relocate a full cluster window to a larger extent (bottom-up:

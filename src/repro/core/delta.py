@@ -46,6 +46,8 @@ def add_endpoint(state: RoutingState, cluster_id: int, ep_slot: int,
         ep_weight=state.ep_weight.at[ep_slot].set(weight),
         ep_drained=state.ep_drained.at[ep_slot].set(0),
         ep_load=state.ep_load.at[ep_slot].set(0),
+        ep_inflight_ewma=state.ep_inflight_ewma.at[ep_slot].set(0.0),
+        ep_tput_ewma=state.ep_tput_ewma.at[ep_slot].set(0.0),
     )
     st = st._replace(
         cluster_ep_count=st.cluster_ep_count.at[cluster_id].add(1))
@@ -73,12 +75,17 @@ def remove_endpoint(state: RoutingState, cluster_id: int, ep_off: int
         ep_weight=st.ep_weight.at[tgt].set(st.ep_weight[last]),
         ep_drained=st.ep_drained.at[tgt].set(st.ep_drained[last]),
         ep_load=st.ep_load.at[tgt].set(st.ep_load[last]),
+        ep_inflight_ewma=st.ep_inflight_ewma.at[tgt].set(
+            st.ep_inflight_ewma[last]),
+        ep_tput_ewma=st.ep_tput_ewma.at[tgt].set(st.ep_tput_ewma[last]),
     )
     st = st._replace(
         ep_instance=st.ep_instance.at[last].set(-1),
         ep_weight=st.ep_weight.at[last].set(1.0),
         ep_drained=st.ep_drained.at[last].set(0),
         ep_load=st.ep_load.at[last].set(0),
+        ep_inflight_ewma=st.ep_inflight_ewma.at[last].set(0.0),
+        ep_tput_ewma=st.ep_tput_ewma.at[last].set(0.0),
     )
     return _bump(st)
 

@@ -155,11 +155,23 @@ class Engine:
                                       cache, ctx=self.ctx)
         nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32).reshape(I, C)
 
-        res = ops.complete(pool, nxt, state.routing.ep_load,
-                           state.metrics.rx_bytes,
-                           eos=self.eos, max_len=self.max_len,
-                           block_i=self.block_i, fold=self.fold)
-        rstate = state.routing._replace(ep_load=res.ep_load)
+        if self.shards > 1:
+            res = ops.complete_sharded(
+                pool, nxt, state.routing.ep_load, state.metrics.rx_bytes,
+                state.routing.ep_inflight_ewma, state.routing.ep_tput_ewma,
+                mesh=self.shard_mesh, axis=self.shard_axis,
+                eos=self.eos, max_len=self.max_len,
+                block_i=self.block_i, fold=self.fold)
+        else:
+            res = ops.complete(pool, nxt, state.routing.ep_load,
+                               state.metrics.rx_bytes,
+                               state.routing.ep_inflight_ewma,
+                               state.routing.ep_tput_ewma,
+                               eos=self.eos, max_len=self.max_len,
+                               block_i=self.block_i, fold=self.fold)
+        rstate = state.routing._replace(ep_load=res.ep_load,
+                                        ep_inflight_ewma=res.ep_inflight_ewma,
+                                        ep_tput_ewma=res.ep_tput_ewma)
         metrics = state.metrics._replace(rx_bytes=res.rx_bytes)
         out = {"emitted": nxt, "done": res.done,
                "req_id": state.pool.req_id,     # ids that produced this tick

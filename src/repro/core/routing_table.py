@@ -61,6 +61,11 @@ class RoutingState(NamedTuple):
     #                              the datapath only reads it)
     # --- mutable datapath state (load-balancing states, paper §4.2) ----- #
     ep_load: jax.Array           # (MAX_ENDPOINTS,) i32 outstanding requests
+    ep_inflight_ewma: jax.Array  # (MAX_ENDPOINTS,) f32 EWMA of requests in
+    #                              flight (ticks-in-flight mass; the latency
+    #                              numerator under Little's law — DESIGN §8)
+    ep_tput_ewma: jax.Array      # (MAX_ENDPOINTS,) f32 EWMA of completions
+    #                              per step (the latency denominator)
     rr_cursor: jax.Array         # (MAX_CLUSTERS,) i32 round-robin cursor
     version: jax.Array           # () i32, bumped by every delta refresh
 
@@ -102,7 +107,10 @@ def empty_state() -> RoutingState:
         ep_instance=jnp.full((MAX_ENDPOINTS,), -1, jnp.int32),
         ep_weight=jnp.ones((MAX_ENDPOINTS,), jnp.float32),
         ep_drained=i(MAX_ENDPOINTS),
-        ep_load=i(MAX_ENDPOINTS), rr_cursor=i(MAX_CLUSTERS),
+        ep_load=i(MAX_ENDPOINTS),
+        ep_inflight_ewma=jnp.zeros((MAX_ENDPOINTS,), jnp.float32),
+        ep_tput_ewma=jnp.zeros((MAX_ENDPOINTS,), jnp.float32),
+        rr_cursor=i(MAX_CLUSTERS),
         version=jnp.zeros((), jnp.int32),
     )
 

@@ -41,7 +41,7 @@ from repro.core.routing_table import (MAX_SERVICES, POLICY_LEAST_REQUEST,
                                       POLICY_RANDOM, POLICY_RR,
                                       POLICY_WEIGHTED, FlowMetrics,
                                       RoutingState)
-from repro.kernels.completion import RX_BYTES_PER_TOKEN
+from repro.kernels.completion import RX_BYTES_PER_TOKEN, health_update
 from repro.models import model as M
 from repro.models.transformer import DEFAULT_CTX
 
@@ -245,6 +245,19 @@ class SidecarEngine:
         np.add.at(m.rx_bytes, np.maximum(pool.svc[act], 0),
                   RX_BYTES_PER_TOKEN)
         done = act & ((nxt == self.eos) | (pool.length >= self.max_len - 1))
+        # health EWMAs: same shared epilogue as the fused kernel, on the
+        # same integer observations (occupancy before release, completions
+        # per endpoint) — host-resident parity for the closed loop
+        E = router.t.ep_load.shape[0]
+        occ0 = router.t.ep_load.astype(np.int32).copy()
+        cnt = np.zeros((E,), np.int32)
+        eps = pool.endpoint[done]
+        np.add.at(cnt, eps[(eps >= 0) & (eps < E)], 1)
+        ewl, ewt = health_update(jnp.asarray(router.t.ep_inflight_ewma),
+                                 jnp.asarray(router.t.ep_tput_ewma),
+                                 jnp.asarray(occ0), jnp.asarray(cnt))
+        router.t.ep_inflight_ewma[...] = np.asarray(ewl)
+        router.t.ep_tput_ewma[...] = np.asarray(ewt)
         for ep in pool.endpoint[done]:           # release load counters
             router.release(int(ep))
         pool.active[done] = False

@@ -23,6 +23,17 @@ The per-tile aggregation goes through the shared segment-fold seam
 into the scratch counters in O(tile) — the CPU-interpreter default —
 while ``fold="onehot"`` keeps the dense Mosaic-lowerable dispatch matrix.
 
+The kernel also closes the health-observation loop (DESIGN.md §8): every
+step it folds the per-endpoint completion count (the same segment fold as
+the load release) and carries two f32 EWMA accumulators exactly like
+``ep_load`` — ``ep_inflight_ewma`` (requests in flight at the step, i.e.
+ticks-in-flight mass) and ``ep_tput_ewma`` (completions per step).  Their
+ratio is the per-endpoint latency estimate under Little's law; the
+``HealthPolicy`` daemon (core/health.py) reads it, the kernel never
+decides.  The EWMA epilogue is the shared ``health_update`` helper so the
+single-shard kernel, the psum-reconciled sharded path, the numpy sidecar
+parity, and the ref oracle are bit-exact by construction.
+
 Sequential semantics are pinned by ``kernels.ref.complete_ref`` (bit-exact,
 property-tested in tests/test_kernels.py under both folds).
 """
@@ -43,6 +54,12 @@ from repro.kernels.route_match import _seg_sum, _table_spec
 
 RX_BYTES_PER_TOKEN = 2     # response payload attributed per decoded token
 
+# EWMA smoothing for the health accumulators.  In-flight reacts faster than
+# throughput so occupancy build-up on a degraded endpoint shows before its
+# completion rate has fully decayed.
+ALPHA_INFLIGHT = 0.25
+ALPHA_TPUT = 0.125
+
 
 class CompleteResult(NamedTuple):
     """Everything ``Engine.step`` needs from one fused completion launch."""
@@ -56,13 +73,37 @@ class CompleteResult(NamedTuple):
     done: jax.Array       # (I, C) i32 0/1 finished this step
     ep_load: jax.Array    # (E,) i32 counters after release
     rx_bytes: jax.Array   # (S,) i32 per-service rx metric after this step
+    done_cnt: jax.Array   # (E,) i32 completions this step (raw fold output)
+    inflight_ewma: jax.Array  # (E,) f32 updated in-flight EWMA
+    tput_ewma: jax.Array  # (E,) f32 updated completions-per-step EWMA
+
+
+def health_update(inflight_ewma, tput_ewma, ep_load, done_cnt, *,
+                  alpha_inflight: float = ALPHA_INFLIGHT,
+                  alpha_tput: float = ALPHA_TPUT):
+    """One EWMA step over the integer health observations.
+
+    ``ep_load`` is the occupancy *before* this step's releases (requests in
+    flight during the step) and ``done_cnt`` the per-endpoint completions.
+    Single source of truth for the f32 epilogue: the fused kernel, the
+    sharded psum path, the sidecar baselines and the ref oracle all call
+    this on identical integer inputs, so the EWMAs are bit-exact across
+    folds and shard counts.
+    """
+    occ = ep_load.astype(jnp.float32)
+    cnt = done_cnt.astype(jnp.float32)
+    inflight = inflight_ewma + jnp.float32(alpha_inflight) * (occ - inflight_ewma)
+    tput = tput_ewma + jnp.float32(alpha_tput) * (cnt - tput_ewma)
+    return inflight.astype(jnp.float32), tput.astype(jnp.float32)
 
 
 def _complete_kernel(preq_ref, pep_ref, psvc_ref, plen_ref, ptok_ref,
-                     pact_ref, nxt_ref, load0_ref, rx0_ref,
-                     oreq_ref, oep_ref, osvc_ref, olen_ref, otok_ref,
-                     oact_ref, done_ref, loadout_ref, rxout_ref,
-                     dec_s, rx_s, *, eos: int, max_len: int, fold: str):
+                     pact_ref, nxt_ref, load0_ref, rx0_ref, ewl0_ref,
+                     ewt0_ref, oreq_ref, oep_ref, osvc_ref, olen_ref,
+                     otok_ref, oact_ref, done_ref, loadout_ref, rxout_ref,
+                     cntout_ref, ewlout_ref, ewtout_ref,
+                     dec_s, rx_s, *, eos: int, max_len: int, fold: str,
+                     alpha_inflight: float, alpha_tput: float):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -106,21 +147,37 @@ def _complete_kernel(preq_ref, pep_ref, psvc_ref, plen_ref, ptok_ref,
     def _emit():
         loadout_ref[...] = load0_ref[...] - dec_s[...]
         rxout_ref[...] = rx0_ref[...] + rx_s[...]
+        cntout_ref[...] = dec_s[...]
+        ewl, ewt = health_update(ewl0_ref[...], ewt0_ref[...],
+                                 load0_ref[...], dec_s[...],
+                                 alpha_inflight=alpha_inflight,
+                                 alpha_tput=alpha_tput)
+        ewlout_ref[...] = ewl
+        ewtout_ref[...] = ewt
 
 
 def complete(pool_req_id, pool_endpoint, pool_svc, pool_length, pool_token,
-             pool_active, nxt, ep_load, rx_bytes, *, eos: int, max_len: int,
+             pool_active, nxt, ep_load, rx_bytes, ep_inflight_ewma=None,
+             ep_tput_ewma=None, *, eos: int, max_len: int,
              block_i: int = 8, fold: str | None = None,
+             alpha_inflight: float = ALPHA_INFLIGHT,
+             alpha_tput: float = ALPHA_TPUT,
              interpret: bool | None = None) -> CompleteResult:
     """Fused completion over the pool after one decode step.
 
     pool_*: (I, C) connection state (active may be bool or i32); nxt: (I, C)
-    i32 tokens emitted this step; ep_load: (E,) i32; rx_bytes: (S,) i32.
+    i32 tokens emitted this step; ep_load: (E,) i32; rx_bytes: (S,) i32;
+    ep_inflight_ewma / ep_tput_ewma: (E,) f32 carried health accumulators
+    (None → zeros, i.e. a cold start).
     ``eos`` / ``max_len`` are compile-time constants (engine attributes).
     """
     I, C = pool_req_id.shape
     E = ep_load.shape[0]
     S = rx_bytes.shape[0]
+    if ep_inflight_ewma is None:
+        ep_inflight_ewma = jnp.zeros((E,), jnp.float32)
+    if ep_tput_ewma is None:
+        ep_tput_ewma = jnp.zeros((E,), jnp.float32)
     block_i = max(1, math.gcd(I, block_i))     # tiles must cover I exactly
     grid = (I // block_i,)
     lane = pl.BlockSpec((block_i, C), lambda i: (i, 0))
@@ -129,15 +186,24 @@ def complete(pool_req_id, pool_endpoint, pool_svc, pool_length, pool_token,
             pool_token.astype(jnp.int32), pool_active.astype(jnp.int32)]
     o = pl.pallas_call(
         functools.partial(_complete_kernel, eos=eos, max_len=max_len,
-                          fold=resolve_fold(fold)),
+                          fold=resolve_fold(fold),
+                          alpha_inflight=alpha_inflight,
+                          alpha_tput=alpha_tput),
         grid=grid,
-        in_specs=[lane] * 7 + [_table_spec((E,)), _table_spec((S,))],
-        out_specs=[lane] * 7 + [_table_spec((E,)), _table_spec((S,))],
+        in_specs=[lane] * 7 + [_table_spec((E,)), _table_spec((S,)),
+                               _table_spec((E,)), _table_spec((E,))],
+        out_specs=[lane] * 7 + [_table_spec((E,)), _table_spec((S,)),
+                                _table_spec((E,)), _table_spec((E,)),
+                                _table_spec((E,))],
         out_shape=[jax.ShapeDtypeStruct((I, C), jnp.int32)] * 7
                   + [jax.ShapeDtypeStruct((E,), jnp.int32),
-                     jax.ShapeDtypeStruct((S,), jnp.int32)],
+                     jax.ShapeDtypeStruct((S,), jnp.int32),
+                     jax.ShapeDtypeStruct((E,), jnp.int32),
+                     jax.ShapeDtypeStruct((E,), jnp.float32),
+                     jax.ShapeDtypeStruct((E,), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((E,), jnp.int32),
                         pltpu.VMEM((S,), jnp.int32)],
         interpret=resolve_interpret(interpret),
-    )(*pool, nxt.astype(jnp.int32), ep_load, rx_bytes)
+    )(*pool, nxt.astype(jnp.int32), ep_load, rx_bytes,
+      ep_inflight_ewma.astype(jnp.float32), ep_tput_ewma.astype(jnp.float32))
     return CompleteResult(*o)

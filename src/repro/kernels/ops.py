@@ -28,6 +28,7 @@ from functools import partial
 from typing import NamedTuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.balancer import PoolState, RequestBatch
 from repro.kernels import (completion as _cp, decode_attention as _da,
@@ -57,12 +58,16 @@ class AdmitCommitOut(NamedTuple):
 
 
 class CompleteOut(NamedTuple):
-    """Fused close path: freed pool + released counters + rx metrics."""
+    """Fused close path: freed pool + released counters + rx metrics +
+    updated health EWMAs (DESIGN.md §8)."""
 
     pool: PoolState          # (I, C) pool after completion (active as bool)
     done: jax.Array          # (I, C) bool finished this step
     ep_load: jax.Array       # (E,) i32 counters after release
     rx_bytes: jax.Array      # (S,) i32 per-service rx metric
+    done_cnt: jax.Array      # (E,) i32 completions this step
+    ep_inflight_ewma: jax.Array  # (E,) f32 in-flight EWMA after this step
+    ep_tput_ewma: jax.Array  # (E,) f32 completions-per-step EWMA
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
@@ -165,25 +170,71 @@ def admit_commit_sharded(reqs: RequestBatch, routing, pool: PoolState, rnd,
 
 
 @partial(jax.jit, static_argnames=("eos", "max_len", "block_i", "fold"))
-def _complete(pool: PoolState, nxt, ep_load, rx_bytes, *, eos: int,
-              max_len: int, block_i: int, fold: str) -> CompleteOut:
+def _complete(pool: PoolState, nxt, ep_load, rx_bytes, ep_inflight_ewma,
+              ep_tput_ewma, *, eos: int, max_len: int, block_i: int,
+              fold: str) -> CompleteOut:
     res = _cp.complete(pool.req_id, pool.endpoint, pool.svc, pool.length,
                        pool.token, pool.active, nxt, ep_load, rx_bytes,
+                       ep_inflight_ewma, ep_tput_ewma,
                        eos=eos, max_len=max_len, block_i=block_i, fold=fold)
     return CompleteOut(
         PoolState(res.req_id, res.endpoint, res.svc, res.length, res.token,
                   res.active > 0),
-        res.done > 0, res.ep_load, res.rx_bytes)
+        res.done > 0, res.ep_load, res.rx_bytes, res.done_cnt,
+        res.inflight_ewma, res.tput_ewma)
 
 
-def complete(pool: PoolState, nxt, ep_load, rx_bytes, *, eos: int,
-             max_len: int, block_i: int | None = None,
+def _ewma_defaults(ep_load, ep_inflight_ewma, ep_tput_ewma):
+    E = ep_load.shape[0]
+    if ep_inflight_ewma is None:
+        ep_inflight_ewma = jnp.zeros((E,), jnp.float32)
+    if ep_tput_ewma is None:
+        ep_tput_ewma = jnp.zeros((E,), jnp.float32)
+    return ep_inflight_ewma, ep_tput_ewma
+
+
+def complete(pool: PoolState, nxt, ep_load, rx_bytes, ep_inflight_ewma=None,
+             ep_tput_ewma=None, *, eos: int, max_len: int,
+             block_i: int | None = None,
              fold: str | None = None) -> CompleteOut:
-    """Fused completion: done detect → load release → rx metrics → free."""
+    """Fused completion: done detect → load release → rx metrics → free →
+    health EWMA update (None EWMAs → cold-start zeros)."""
     block_i, fold = tune.plan_complete(pool.req_id.shape, block_i=block_i,
                                        fold=fold)
-    return _complete(pool, nxt, ep_load, rx_bytes, eos=eos, max_len=max_len,
+    ep_inflight_ewma, ep_tput_ewma = _ewma_defaults(
+        ep_load, ep_inflight_ewma, ep_tput_ewma)
+    return _complete(pool, nxt, ep_load, rx_bytes, ep_inflight_ewma,
+                     ep_tput_ewma, eos=eos, max_len=max_len,
                      block_i=block_i, fold=fold)
+
+
+def complete_sharded(pool: PoolState, nxt, ep_load, rx_bytes,
+                     ep_inflight_ewma=None, ep_tput_ewma=None, *, mesh,
+                     axis: str = "shard", eos: int, max_len: int,
+                     block_i: int | None = None,
+                     fold: str | None = None) -> CompleteOut:
+    """``complete`` sharded over mesh axis ``axis``: the pool splits
+    ``(I/M,)``, the (E,)/(S,) tables replicate, and the per-shard integer
+    folds (load releases, rx bytes, completion counts) are psum-reconciled
+    before ONE shared ``health_update`` epilogue on the global counts — so
+    the EWMAs are bit-exact vs single-shard ``complete`` on the whole pool
+    (``kernels/shard_admit.py``)."""
+    M = mesh.shape[axis]
+    I, C = pool.req_id.shape
+    block_i, fold = tune.plan_complete((max(I // max(M, 1), 1), C),
+                                       block_i=block_i, fold=fold)
+    ep_inflight_ewma, ep_tput_ewma = _ewma_defaults(
+        ep_load, ep_inflight_ewma, ep_tput_ewma)
+    res = _sa.complete_sharded(
+        pool.req_id, pool.endpoint, pool.svc, pool.length, pool.token,
+        pool.active, nxt, ep_load, rx_bytes, ep_inflight_ewma, ep_tput_ewma,
+        mesh=mesh, axis=axis, eos=eos, max_len=max_len, block_i=block_i,
+        fold=fold)
+    return CompleteOut(
+        PoolState(res.req_id, res.endpoint, res.svc, res.length, res.token,
+                  res.active > 0),
+        res.done > 0, res.ep_load, res.rx_bytes, res.done_cnt,
+        res.inflight_ewma, res.tput_ewma)
 
 
 @partial(jax.jit, static_argnames=("n_dest", "block_n"))

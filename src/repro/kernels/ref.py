@@ -294,14 +294,18 @@ def admit_sharded_ref(req_id, svc, features, msg_bytes, token, state,
 
 
 def complete_ref(pool_req_id, pool_endpoint, pool_svc, pool_length,
-                 pool_token, pool_active, nxt, ep_load, rx_bytes, *,
+                 pool_token, pool_active, nxt, ep_load, rx_bytes,
+                 ep_inflight_ewma=None, ep_tput_ewma=None, *,
                  eos: int, max_len: int):
     """Sequential per-slot reference for the fused completion kernel
     (``kernels.completion.complete``): done detect (EOS / length budget) →
-    endpoint load release → per-service rx metrics → slot free."""
+    endpoint load release → per-service rx metrics → slot free → health
+    EWMA update (via the shared ``health_update`` epilogue on the integer
+    completion counts, so the oracle is bit-exact with the kernel)."""
     import numpy as np
 
-    from repro.kernels.completion import RX_BYTES_PER_TOKEN, CompleteResult
+    from repro.kernels.completion import (RX_BYTES_PER_TOKEN, CompleteResult,
+                                          health_update)
 
     preq = np.asarray(pool_req_id, np.int32).copy()
     pep = np.asarray(pool_endpoint, np.int32).copy()
@@ -311,10 +315,16 @@ def complete_ref(pool_req_id, pool_endpoint, pool_svc, pool_length,
     pact = np.asarray(pool_active).astype(bool).copy()
     nx = np.asarray(nxt, np.int32)
     loads = np.asarray(ep_load, np.int32).copy()
+    loads0 = loads.copy()                       # occupancy before releases
     rx = np.asarray(rx_bytes, np.int32).copy()
     I, C = preq.shape
     E, S = loads.shape[0], rx.shape[0]
+    ewl = (np.zeros((E,), np.float32) if ep_inflight_ewma is None
+           else np.asarray(ep_inflight_ewma, np.float32).copy())
+    ewt = (np.zeros((E,), np.float32) if ep_tput_ewma is None
+           else np.asarray(ep_tput_ewma, np.float32).copy())
     done = np.zeros((I, C), np.int32)
+    cnt = np.zeros((E,), np.int32)
     for i in range(I):
         for c in range(C):
             if not pact[i, c]:
@@ -328,9 +338,13 @@ def complete_ref(pool_req_id, pool_endpoint, pool_svc, pool_length,
                 done[i, c] = 1
                 if 0 <= pep[i, c] < E:
                     loads[pep[i, c]] -= 1
+                    cnt[pep[i, c]] += 1
                 preq[i, c] = -1
                 pep[i, c] = -1
                 plen[i, c] = 0
                 pact[i, c] = False
+    new_ewl, new_ewt = health_update(jnp.asarray(ewl), jnp.asarray(ewt),
+                                     jnp.asarray(loads0), jnp.asarray(cnt))
     return CompleteResult(preq, pep, psvc, plen, ptok,
-                          pact.astype(np.int32), done, loads, rx)
+                          pact.astype(np.int32), done, loads, rx, cnt,
+                          np.asarray(new_ewl), np.asarray(new_ewt))

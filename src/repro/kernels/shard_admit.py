@@ -56,8 +56,10 @@ from repro.compat import axis_size, shard_map
 from repro.core import relay, router
 from repro.core.routing_table import (MAX_EPS_PER_CLUSTER,
                                       POLICY_LEAST_REQUEST, RoutingState)
+from repro.kernels import completion as _cp
 from repro.kernels import route_match as _rm
 from repro.kernels.backend import resolve_fold, resolve_interpret
+from repro.kernels.completion import CompleteResult
 from repro.kernels.route_match import (BIG, AdmitCommitResult, AdmitResult)
 
 
@@ -311,3 +313,92 @@ def admit_commit_sharded(req_id, svc, features, msg_bytes, token,
            *pool, active_i32)
     return AdmitCommitResult(o[0][:R0], o[1][:R0], o[2][:R0], o[3][:R0],
                              o[4][:R0], *o[5:])
+
+
+# --------------------------------------------------------------------------- #
+# Sharded completion: the close path over an (I/M,)-sharded pool.
+# --------------------------------------------------------------------------- #
+
+
+def _complete_body(preq, pep, psvc, plen, ptok, pact, nxt, load0, rx0,
+                   ewl0, ewt0, *, axis: str, eos: int, max_len: int,
+                   block_i: int, fold: str, interpret: bool,
+                   alpha_inflight: float, alpha_tput: float):
+    """shard_map body: local fused completion with ZERO table bases so the
+    kernel's (E,)/(S,) outputs are pure per-shard integer deltas, then one
+    psum reconciles them against the replicated global bases.  The nonlinear
+    f32 EWMA epilogue runs AFTER the psum, on the global integer counts —
+    identical inputs to the single-shard kernel's in-kernel epilogue, so the
+    accumulators are bit-exact for any shard count."""
+    E, S = load0.shape[0], rx0.shape[0]
+    res = _cp.complete(preq, pep, psvc, plen, ptok, pact, nxt,
+                       jnp.zeros((E,), jnp.int32), jnp.zeros((S,), jnp.int32),
+                       jnp.zeros((E,), jnp.float32),
+                       jnp.zeros((E,), jnp.float32),
+                       eos=eos, max_len=max_len, block_i=block_i, fold=fold,
+                       interpret=interpret)
+    cnt = jax.lax.psum(res.done_cnt, axis)                  # global releases
+    ep_load = load0 - cnt
+    rx = rx0 + jax.lax.psum(res.rx_bytes, axis)
+    ewl, ewt = _cp.health_update(ewl0, ewt0, load0, cnt,
+                                 alpha_inflight=alpha_inflight,
+                                 alpha_tput=alpha_tput)
+    return (res.req_id, res.endpoint, res.svc, res.length, res.token,
+            res.active, res.done, ep_load, rx, cnt, ewl, ewt)
+
+
+@lru_cache(maxsize=None)
+def _build_complete(mesh, axis: str, eos: int, max_len: int, block_i: int,
+                    fold: str, interpret: bool, alpha_inflight: float,
+                    alpha_tput: float):
+    """One compiled shard_map program per (mesh, axis, plan)."""
+    from functools import partial
+
+    from jax.sharding import PartitionSpec as P
+
+    body = partial(_complete_body, axis=axis, eos=eos, max_len=max_len,
+                   block_i=block_i, fold=fold, interpret=interpret,
+                   alpha_inflight=alpha_inflight, alpha_tput=alpha_tput)
+    sh = P(axis)
+    rep = P()
+    f = shard_map(
+        body, mesh=mesh,
+        in_specs=(sh,) * 7 + (rep,) * 4,
+        out_specs=(sh,) * 7 + (rep,) * 5,
+        check_vma=False)
+    return jax.jit(f)
+
+
+def complete_sharded(pool_req_id, pool_endpoint, pool_svc, pool_length,
+                     pool_token, pool_active, nxt, ep_load, rx_bytes,
+                     ep_inflight_ewma, ep_tput_ewma, *, mesh,
+                     axis: str = "shard", eos: int, max_len: int,
+                     block_i: int = 8, fold: str | None = None,
+                     alpha_inflight: float = _cp.ALPHA_INFLIGHT,
+                     alpha_tput: float = _cp.ALPHA_TPUT,
+                     interpret: bool | None = None) -> CompleteResult:
+    """``completion.complete`` over an ``(I/M,)``-sharded pool.
+
+    Same flat-array contract; the (E,) load / EWMA tables and (S,) rx table
+    are replicated, each shard folds its own pool slice, and one psum pass
+    reconciles the integer counts before the shared ``health_update``
+    epilogue — bit-exact vs single-shard ``complete`` on the whole pool.
+    Requires ``I % M == 0``.
+    """
+    M = mesh.shape[axis]
+    I, C = pool_req_id.shape
+    if I % M:
+        raise ValueError(f"pool instances ({I}) must divide over the "
+                         f"{M}-way mesh axis {axis!r}")
+    block_i = min(block_i, max(I // M, 1))
+    fn = _build_complete(mesh, axis, eos, max_len, block_i,
+                         resolve_fold(fold), resolve_interpret(interpret),
+                         alpha_inflight, alpha_tput)
+    o = fn(pool_req_id.astype(jnp.int32), pool_endpoint.astype(jnp.int32),
+           pool_svc.astype(jnp.int32), pool_length.astype(jnp.int32),
+           pool_token.astype(jnp.int32), (pool_active != 0).astype(jnp.int32),
+           nxt.astype(jnp.int32), ep_load.astype(jnp.int32),
+           rx_bytes.astype(jnp.int32),
+           ep_inflight_ewma.astype(jnp.float32),
+           ep_tput_ewma.astype(jnp.float32))
+    return CompleteResult(*o)

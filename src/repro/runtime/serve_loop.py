@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import heapq
 import time
 from typing import NamedTuple
 
@@ -46,12 +47,92 @@ class DrainReport(NamedTuple):
 
     done: list            # completed Requests (all-time, == loop.done)
     dropped: list         # gave up after max retries (== loop.dropped)
-    queued: int           # still waiting at the ingress when draining ended
+    queued: int           # still waiting at the ingress (ready queue +
+    #                       backoff set) when draining ended
     inflight: int         # still holding a pool slot when draining ended
     held_first: int = 0   # DISTINCT requests ever re-queued (held or
     #                       unroutable) — each counts once, however many
     #                       attempts it took; the engine's metrics.overflow
     #                       counts per-ATTEMPT hold events (FlowMetrics)
+
+
+# --------------------------------------------------------------------------- #
+# Fault injection — the degraded-scenario harness (DESIGN.md §8)
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected endpoint fault, in engine ticks.
+
+    Faults act on *progress*, not on routing: on a held tick the instance's
+    active slots have their decode position rolled back by one, so the step
+    the engine just took (or is about to take) nets to zero — requests pile
+    up, occupancy rises, completions stop.  That is exactly what a slow or
+    wedged backend looks like from the datapath, and it is invisible to any
+    per-request length bookkeeping — only the occupancy/throughput EWMAs
+    (kernels/completion.py::health_update) can see it.
+
+      slow   — the instance makes net progress on 1 tick in ``factor``
+               (a ×factor slowdown)
+      stall  — no progress at all while the fault is active
+      flap   — alternates ``period`` stalled ticks / ``period`` healthy
+               ticks (the breaker-hysteresis stressor)
+    """
+
+    instance: int
+    kind: str = "slow"          # slow | stall | flap
+    factor: int = 10
+    start: int = 0
+    end: int | None = None      # None = never clears
+    period: int = 8             # flap half-cycle, in ticks
+
+    def holds(self, tick: int) -> bool:
+        """Does this fault hold the instance's progress at ``tick``?"""
+        if tick < self.start or (self.end is not None and tick >= self.end):
+            return False
+        if self.kind == "stall":
+            return True
+        if self.kind == "slow":
+            return (tick - self.start) % self.factor != 0
+        if self.kind == "flap":
+            return ((tick - self.start) // self.period) % 2 == 0
+        raise ValueError(f"unknown fault kind {self.kind!r}")
+
+
+class FaultInjector:
+    """Applies a set of :class:`Fault` schedules to a live pool.
+
+    ``apply`` runs on the host between engine ticks and rolls back
+    ``pool.length`` on the held instances' active slots (floored at 0).
+    Works on both pool representations: the XLB engine's jax arrays
+    (functional update) and the sidecar's numpy pool (in-place)."""
+
+    def __init__(self, faults):
+        self.faults = list(faults)
+
+    def active(self, tick: int) -> list[int]:
+        return [f.instance for f in self.faults if f.holds(tick)]
+
+    def clear_tick(self) -> int | None:
+        """Last tick at which any fault clears (None if one never does)."""
+        ends = [f.end for f in self.faults]
+        return None if any(e is None for e in ends) else max(ends, default=0)
+
+    def apply(self, pool, tick: int):
+        held = self.active(tick)
+        if not held:
+            return pool
+        if isinstance(pool.length, np.ndarray):
+            for i in held:
+                m = pool.active[i] & (pool.length[i] > 0)
+                pool.length[i, m] -= 1
+            return pool
+        length = pool.length
+        for i in held:
+            m = pool.active[i] & (length[i] > 0)
+            length = length.at[i].add(jnp.where(m, -1, 0))
+        return pool._replace(length=length)
 
 
 def parse_features(headers: dict[str, str]) -> np.ndarray:
@@ -70,13 +151,18 @@ class ServeLoop:
 
     def __init__(self, balancer: Balancer, params,
                  routing: RoutingState | control.ControlPlane,
-                 admit_batch: int = 8, dtype=jnp.float32):
+                 admit_batch: int = 8, dtype=jnp.float32,
+                 max_retries: int = 64, backoff_base: int = 1,
+                 backoff_cap: int = 16, backoff_seed: int = 0,
+                 fault: FaultInjector | None = None):
         self.balancer = balancer
         self.params = params
         self.admit_batch = admit_batch
+        self.cp = None
         if isinstance(routing, control.ControlPlane):
             cp, routing = routing, routing.snapshot()
             cp.attach(self)
+            self.cp = cp
         self.state = balancer.init_state(routing, dtype=dtype)
         self.serve_step = balancer.make_jitted(donate=False)
         self.queue: collections.deque[Request] = collections.deque()
@@ -87,6 +173,19 @@ class ServeLoop:
         #                                     (first attempt only — the
         #                                     engine's overflow metric counts
         #                                     every attempt, FlowMetrics doc)
+        # Held/unroutable requests back off with capped exponential delay +
+        # deterministic jitter instead of hammering the admit path every
+        # tick: delay_k = min(base·2^(k-1), cap) + U[0, delay_k), the jitter
+        # drawn from a PRNG seeded by (seed, req_id, attempt) so replays are
+        # bit-identical while concurrent requests still de-synchronize.
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
+        self.backoff_cap = backoff_cap
+        self.backoff_seed = backoff_seed
+        self._waiting: list[tuple[int, int, Request]] = []   # backoff heap:
+        self._wseq = 0                      # (eligible_tick, seq, Request)
+        self.ticks = 0                      # engine ticks driven so far
+        self.fault = fault                  # optional FaultInjector
 
     # ------------------------------------------------------------------ #
     # control-plane seam
@@ -102,9 +201,38 @@ class ServeLoop:
         self.state = self.balancer.apply_refresh(self.state, plan)
 
     # ------------------------------------------------------------------ #
+    @property
+    def n_queued(self) -> int:
+        """Everything still at the ingress: ready queue + backoff set.
+        ``submitted == done + dropped + n_queued + inflight`` at all times."""
+        return len(self.queue) + len(self._waiting)
+
     def submit(self, req: Request) -> None:
         req.t_submit = time.perf_counter()
         self.queue.append(req)
+
+    def _backoff(self, req: Request) -> None:
+        """Park a held request until its retry matures (or drop it)."""
+        if req.retries >= self.max_retries:
+            req.t_done = time.perf_counter()     # unroutable requests drop,
+            self.dropped.append(req)             # but stay accounted
+            return
+        delay = min(self.backoff_base << (req.retries - 1), self.backoff_cap)
+        rng = np.random.default_rng(
+            (self.backoff_seed, req.req_id, req.retries))
+        delay += int(rng.integers(0, delay))
+        heapq.heappush(self._waiting,
+                       (self.ticks + delay, self._wseq, req))
+        self._wseq += 1
+
+    def _release_matured(self) -> None:
+        """Move matured backoff entries to the FRONT of the ready queue
+        (oldest eligible first) — held work keeps priority over new
+        arrivals, as with the old immediate re-queue."""
+        batch = []
+        while self._waiting and self._waiting[0][0] <= self.ticks:
+            batch.append(heapq.heappop(self._waiting)[2])
+        self.queue.extendleft(reversed(batch))
 
     def _next_admission(self) -> tuple[RequestBatch, list]:
         R = self.admit_batch
@@ -131,6 +259,13 @@ class ServeLoop:
     # ------------------------------------------------------------------ #
     def tick(self) -> dict:
         """One engine step: admit waiting requests + decode every lane."""
+        if self.cp is not None:
+            self.cp.heartbeat(self)          # liveness lease (core/control)
+        if self.fault is not None:           # injected faults roll progress
+            pool = self.fault.apply(self.state.pool, self.ticks)
+            if pool is not self.state.pool:  # back BEFORE the step so a
+                self.state = self.state._replace(pool=pool)  # held slot
+        self._release_matured()              # can't complete this tick
         reqs, taken = self._next_admission()
         self.state, out = self.serve_step(self.params, self.state, reqs)
         emitted = np.asarray(out["emitted"])
@@ -156,12 +291,11 @@ class ServeLoop:
                 if r.retries == 0:          # first hold: count the REQUEST
                     self.held_first += 1    # (attempts land in overflow)
                 r.retries += 1
-                if r.retries < 64:
-                    self.queue.appendleft(r)
-                else:                            # unroutable requests drop,
-                    r.t_done = time.perf_counter()   # but stay accounted:
-                    self.dropped.append(r)       # submitted == done+dropped
-        return {"active": int(out["active"]), "queued": len(self.queue),
+                self._backoff(r)            # park (or drop at max_retries);
+                #                             submitted == done + dropped +
+                #                             n_queued + inflight throughout
+        self.ticks += 1
+        return {"active": int(out["active"]), "queued": self.n_queued,
                 "done": len(self.done), "dropped": len(self.dropped)}
 
     def drain(self, max_ticks: int = 10_000) -> DrainReport:
@@ -169,10 +303,11 @@ class ServeLoop:
         a drain that strands queued/inflight work says so instead of
         silently returning only the completions."""
         t = 0
-        while (self.queue or self.inflight) and t < max_ticks:
+        while (self.queue or self._waiting or self.inflight) \
+                and t < max_ticks:
             self.tick()
             t += 1
         return DrainReport(done=self.done, dropped=self.dropped,
-                           queued=len(self.queue),
+                           queued=self.n_queued,
                            inflight=len(self.inflight),
                            held_first=self.held_first)

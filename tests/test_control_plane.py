@@ -400,3 +400,70 @@ def test_abandoned_consumer_does_not_pin_drained_endpoint():
     cp.drain_endpoint("stable", 3)             # keep's load is zero
     assert cp.endpoint_slot("stable", 3) < 0   # reaped despite the ghost
     assert int(keep.routing.version) == 1
+
+
+def test_health_drain_reason_immune_to_set_weight_and_reaper():
+    """The distinct-drain-reason bugfix: a circuit-breaker ejection
+    (reason="health") must survive both an operator ``set_weight`` — the
+    weight is staged, the drained mask stays up — and the reaper (the
+    ejection is temporary, the row must not be removed); only
+    ``undrain_endpoint`` lifts it.  The journal carries the reason."""
+    cp = _cp()
+    c = Consumer(cp)
+    slot = cp.endpoint_slot("stable", 3)
+    cp.drain_endpoint("stable", 3, reason="health")
+    assert ("drain", cp.cluster_id("stable"), 3, "health") \
+        in cp.last_commit_log
+    assert cp.drain_reason("stable", 3) == "health"
+    assert int(c.routing.ep_drained[slot]) == 1
+    cp.reap()                                  # idle but health-drained:
+    assert cp.endpoint_slot("stable", 3) == slot   # never reaped
+    cp.set_weight("stable", 3, 2.0)            # operator stages a weight...
+    assert int(c.routing.ep_drained[slot]) == 1    # ...but no silent un-eject
+    assert cp.drain_reason("stable", 3) == "health"
+    assert float(c.routing.ep_weight[slot]) == 2.0
+    cp.undrain_endpoint("stable", 3, weight=1.5)   # the breaker's path
+    assert ("undrain", cp.cluster_id("stable"), 3) in cp.last_commit_log
+    assert cp.drain_reason("stable", 3) is None
+    assert int(c.routing.ep_drained[slot]) == 0
+    assert float(c.routing.ep_weight[slot]) == 1.5
+    # an OPERATOR drain still journals its reason and still cancels on
+    # set_weight (the pre-existing contract, unchanged)
+    cp.drain_endpoint("stable", 4)
+    assert cp.drain_reason("stable", 4) is None    # idle → reaped same commit
+
+
+def test_expired_lease_does_not_pin_drained_endpoint():
+    """Liveness lease: a consumer that stops heartbeating for more than
+    ``lease_epochs`` control epochs loses its drain-reaper vote — its
+    frozen load can't pin a draining endpoint forever — while a consumer
+    that keeps heartbeating retains it."""
+    cp = ControlPlane(SERVICES, CLUSTERS, lease_epochs=2)
+    keep = Consumer(cp)
+    ghost = Consumer(cp)
+    slot = cp.endpoint_slot("stable", 3)
+    ghost.set_load(slot, 7)                    # abandoned loop, stale load
+    keep.set_load(slot, 1)
+    cp.drain_endpoint("stable", 3)
+    for _ in range(3):                         # both leases now stale...
+        cp.advance_epoch()
+        cp.heartbeat(keep)                     # ...but keep renews
+    cp.reap()
+    assert cp.endpoint_slot("stable", 3) == slot   # keep's vote held
+    keep.set_load(slot, 0)
+    cp.reap()                                  # ghost alone can't pin it
+    assert cp.endpoint_slot("stable", 3) < 0
+
+
+def test_lease_disabled_by_default():
+    """lease_epochs=0 (the default): a silent consumer's load still pins a
+    draining endpoint — exactly the pre-lease behavior."""
+    cp = _cp()
+    ghost = Consumer(cp)
+    slot = cp.endpoint_slot("stable", 3)
+    ghost.set_load(slot, 7)
+    cp.drain_endpoint("stable", 3)
+    for _ in range(10):
+        cp.advance_epoch()                     # no heartbeats at all
+    cp.reap()
+    assert cp.endpoint_slot("stable", 3) == slot   # still pinned

@@ -1,0 +1,287 @@
+"""Closed-loop health tests (core/health.py + the fault injector).
+
+Pins the circuit-breaker state machine against a real ControlPlane with
+synthesized EWMA observations — ejection with the health drain reason,
+hysteresis, the max-ejection-fraction guard, the uniformly-sick fleet
+(least-bad endpoints keep serving, never NO_ROUTE), the half-open probe in
+both directions — and the fault injector's hold semantics, ending with a
+small end-to-end closed loop through a live Engine/ServeLoop."""
+
+import dataclasses
+import types
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_config
+from repro.core import interpose
+from repro.core.control import ControlPlane
+from repro.core.health import (CLOSED, HALF_OPEN, OPEN, HealthConfig,
+                               HealthPolicy, latency_estimate)
+from repro.core.routing_table import (MAX_ENDPOINTS, Cluster,
+                                      POLICY_LEAST_REQUEST, POLICY_RR, Rule,
+                                      ServiceConfig)
+from repro.models import model as M
+from repro.runtime.serve_loop import (Fault, FaultInjector, Request,
+                                      ServeLoop)
+
+
+def _cp(n=4, lease_epochs=0):
+    return ControlPlane(
+        [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
+        [Cluster("pool", endpoints=list(range(n)), policy=POLICY_RR)],
+        lease_epochs=lease_epochs)
+
+
+def _obs(cp, lat, tput=None):
+    """Synthesize a routing-state stub whose EWMAs encode latency ``lat[i]``
+    (ticks) for instance i of "pool": inflight = lat·tput under Little's
+    law."""
+    infl = np.zeros((MAX_ENDPOINTS,), np.float32)
+    tp = np.zeros((MAX_ENDPOINTS,), np.float32)
+    for inst, l in lat.items():
+        slot = cp.endpoint_slot("pool", inst)
+        t = 1.0 if tput is None else tput.get(inst, 1.0)
+        tp[slot] = t
+        infl[slot] = l * max(t, 1.0 / 64.0)
+    return types.SimpleNamespace(ep_inflight_ewma=infl, ep_tput_ewma=tp)
+
+
+CFG = HealthConfig(k_eject=3.0, k_recover=2.0, trip_after=2, cooldown=3,
+                   recover_after=2, probe_patience=4, max_eject_frac=0.5,
+                   probe_weight=0.1)
+
+
+def test_latency_estimate_littles_law_and_stall():
+    lat = latency_estimate(np.array([4.0, 8.0, 0.0, 0.01]),
+                           np.array([1.0, 0.0, 0.0, 0.0]))
+    assert lat[0] == pytest.approx(4.0)
+    assert lat[1] == pytest.approx(8.0 * 64)       # stall: tput floor kicks in
+    assert lat[2] == 0.0 == lat[3]                 # no data: not judged
+
+
+def test_outlier_ejected_with_health_reason_one_txn_per_epoch():
+    """A 10×-median outlier trips after ``trip_after`` consecutive sick
+    epochs: ONE transaction commits the ejection (drain reason="health"),
+    and a no-action epoch commits nothing (no spurious version bump)."""
+    cp = _cp()
+    pol = HealthPolicy(cp, CFG)
+    sick = _obs(cp, {0: 4, 1: 4, 2: 4, 3: 40})
+    assert pol.epoch(sick) == []                   # sick streak = 1: hold
+    assert cp.version == 0
+    acts = pol.epoch(sick)                         # streak = trip_after
+    assert acts == [("eject", "pool", 3)]
+    assert cp.version == 1                         # exactly one commit
+    assert cp.drain_reason("pool", 3) == "health"
+    assert pol.state_of("pool", 3) == OPEN
+    assert pol.ejected() == [("pool", 3)]
+    slot = cp.endpoint_slot("pool", 3)
+    assert int(cp.snapshot().ep_drained[slot]) == 1
+    assert pol.commits == 1 and pol.epochs == 2
+
+
+def test_hysteresis_no_flap_between_thresholds():
+    """Latency between k_recover·med and k_eject·med is neither sick nor
+    healthy: the breaker never trips, and one healthy epoch resets a
+    partial sick streak (no slow ratchet to ejection)."""
+    cp = _cp()
+    pol = HealthPolicy(cp, CFG)
+    wobbly = _obs(cp, {0: 4, 1: 4, 2: 4, 3: 10})   # 2.5× med: inside band
+    for _ in range(6):
+        assert pol.epoch(wobbly) == []
+    # one sick epoch, then back inside the band: streak resets
+    pol.epoch(_obs(cp, {0: 4, 1: 4, 2: 4, 3: 40}))
+    for _ in range(4):
+        assert pol.epoch(wobbly) == []
+    assert pol.state_of("pool", 3) == CLOSED
+    assert cp.version == 0                         # not one transaction
+
+
+def test_max_ejection_fraction_guard():
+    """n=4, frac=0.25 → budget 1: with two sick endpoints only the WORST is
+    ejected; the runner-up keeps serving (sick streak intact)."""
+    cp = _cp()
+    pol = HealthPolicy(cp, dataclasses.replace(CFG, max_eject_frac=0.25))
+    sick2 = _obs(cp, {0: 4, 1: 4, 2: 30, 3: 40})
+    pol.epoch(sick2)
+    acts = pol.epoch(sick2)
+    assert acts == [("eject", "pool", 3)]          # worst-first, budget 1
+    assert pol.state_of("pool", 2) == CLOSED
+    # and the budget counts already-open breakers: still nothing next epoch
+    assert pol.epoch(sick2) == []
+    assert pol.state_of("pool", 2) == CLOSED
+
+
+def test_uniformly_sick_fleet_never_drained():
+    """Every endpoint equally terrible: the leave-one-out median scales
+    with the fleet, nobody is an outlier, nothing ejects — the cluster
+    keeps serving its least-bad (here: all) endpoints instead of draining
+    itself into NO_ROUTE."""
+    cp = _cp()
+    pol = HealthPolicy(cp, CFG)
+    awful = _obs(cp, {i: 400 for i in range(4)})
+    for _ in range(8):
+        assert pol.epoch(awful) == []
+    snap = cp.snapshot()
+    slots = [cp.endpoint_slot("pool", i) for i in range(4)]
+    assert all(int(snap.ep_drained[s]) == 0 for s in slots)
+    assert cp.version == 0
+
+
+def test_half_open_probe_then_recovery_restores_weight():
+    """OPEN → (cooldown) → HALF_OPEN at probe weight → recover_after
+    healthy epochs → CLOSED with the pre-ejection weight restored."""
+    cp = _cp()
+    cp.set_weight("pool", 3, 2.5)                  # non-default: must return
+    pol = HealthPolicy(cp, CFG)
+    sick = _obs(cp, {0: 4, 1: 4, 2: 4, 3: 40})
+    well = _obs(cp, {0: 4, 1: 4, 2: 4, 3: 4})
+    pol.epoch(sick)
+    pol.epoch(sick)                                # ejected (weight 0)
+    assert float(cp.endpoint_weight("pool", 3)) == 0.0
+    for _ in range(CFG.cooldown - 1):
+        assert pol.epoch(sick) == []               # cooling down
+    acts = pol.epoch(sick)                         # cooldown expires
+    assert acts == [("probe", "pool", 3, CFG.probe_weight)]
+    assert pol.state_of("pool", 3) == HALF_OPEN
+    assert float(cp.endpoint_weight("pool", 3)) == \
+        pytest.approx(CFG.probe_weight)
+    assert cp.drain_reason("pool", 3) is None      # undrained (trickle)
+    pol.epoch(well)                                # healthy probe 1
+    acts = pol.epoch(well)                         # healthy probe 2: close
+    assert acts == [("close", "pool", 3, 2.5)]
+    assert pol.state_of("pool", 3) == CLOSED
+    assert float(cp.endpoint_weight("pool", 3)) == 2.5
+
+
+def test_half_open_still_sick_reejects_and_cooldown_restarts():
+    cp = _cp()
+    pol = HealthPolicy(cp, CFG)
+    sick = _obs(cp, {0: 4, 1: 4, 2: 4, 3: 40})
+    for _ in range(2 + CFG.cooldown):
+        pol.epoch(sick)                            # eject, cooldown, probe
+    assert pol.state_of("pool", 3) == HALF_OPEN
+    acts = pol.epoch(sick)                         # probe fails immediately
+    assert acts == [("eject", "pool", 3)]
+    assert pol.state_of("pool", 3) == OPEN
+    assert cp.drain_reason("pool", 3) == "health"
+    # the full cooldown runs again before the next probe
+    for _ in range(CFG.cooldown - 1):
+        assert pol.epoch(sick) == []
+    assert pol.epoch(sick)[0][0] == "probe"
+
+
+def test_half_open_probe_patience_exhausted_reejects():
+    """A probe that neither recovers nor clearly sickens (latency inside
+    the hysteresis band) re-ejects after ``probe_patience`` epochs instead
+    of trickling forever."""
+    cp = _cp()
+    pol = HealthPolicy(cp, CFG)
+    sick = _obs(cp, {0: 4, 1: 4, 2: 4, 3: 40})
+    limbo = _obs(cp, {0: 4, 1: 4, 2: 4, 3: 10})    # 2.5× med: in the band
+    for _ in range(2 + CFG.cooldown):
+        pol.epoch(sick)
+    assert pol.state_of("pool", 3) == HALF_OPEN
+    for _ in range(CFG.probe_patience - 1):
+        assert pol.epoch(limbo) == []
+    assert pol.epoch(limbo) == [("eject", "pool", 3)]
+
+
+# --------------------------------------------------------------------------- #
+# fault injector semantics
+# --------------------------------------------------------------------------- #
+
+
+class _Pool(NamedTuple):
+    length: object
+    active: object
+
+
+def test_fault_schedules():
+    slow = Fault(0, "slow", factor=4, start=10, end=30)
+    assert not slow.holds(9) and not slow.holds(30)
+    held = [t for t in range(10, 30) if slow.holds(t)]
+    assert len(held) == 15                         # 3 of every 4 ticks held
+    assert all(not slow.holds(t) for t in (10, 14, 18, 22, 26))
+    stall = Fault(1, "stall", start=5, end=None)
+    assert all(stall.holds(t) for t in range(5, 100))
+    flap = Fault(2, "flap", start=0, period=3)
+    assert [flap.holds(t) for t in range(8)] == \
+        [True] * 3 + [False] * 3 + [True] * 2
+    inj = FaultInjector([slow, stall])
+    assert inj.active(11) == [0, 1] and inj.active(10) == [1]
+    assert inj.clear_tick() is None                # the stall never clears
+    assert FaultInjector([slow]).clear_tick() == 30
+
+
+def test_fault_apply_rolls_back_length_on_both_pool_kinds():
+    """Held instances' active slots lose one tick of progress (floored at
+    0); other instances and inactive slots are untouched — for the numpy
+    pool in place, for the jax pool functionally."""
+    inj = FaultInjector([Fault(1, "stall")])
+    ln = np.array([[3, 5], [2, 0]], np.int32)
+    act = np.array([[True, True], [True, True]])
+    pool = _Pool(ln, act)
+    out = inj.apply(pool, tick=0)
+    assert out is pool                             # numpy: mutated in place
+    np.testing.assert_array_equal(pool.length, [[3, 5], [1, 0]])
+    jpool = _Pool(jnp.array([[3, 5], [2, 0]], jnp.int32),
+                  jnp.array([[True, True], [True, False]]))
+    jout = inj.apply(jpool, tick=0)
+    np.testing.assert_array_equal(np.asarray(jout.length), [[3, 5], [1, 0]])
+    np.testing.assert_array_equal(
+        np.asarray(FaultInjector([Fault(0, "slow", factor=2)])
+                   .apply(jpool, 1).length), [[2, 4], [2, 0]])
+
+
+# --------------------------------------------------------------------------- #
+# end-to-end: live engine + fault + daemon
+# --------------------------------------------------------------------------- #
+
+
+def test_closed_loop_ejects_and_recovers_through_live_engine():
+    """The whole loop on a real datapath: a stalled instance's EWMAs (built
+    by the completion kernel, nothing host-side) trip its breaker; after the
+    fault clears, the half-open probe re-admits it — zero operator
+    transactions, every commit authored by the daemon."""
+    cfg = smoke_config(get_config("xlb-service-model"))
+    params = M.init_params(cfg, jax.random.PRNGKey(7), dtype=jnp.float32)
+    I, C, max_len = 2, 4, 3
+    cp = ControlPlane(
+        [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
+        [Cluster("pool", endpoints=list(range(I)),
+                 policy=POLICY_LEAST_REQUEST)])
+    eng = interpose.Engine(cfg, I, C, max_len, eos=-1)  # length-driven done
+    inj = FaultInjector([Fault(1, "stall", start=10, end=60)])
+    loop = ServeLoop(eng, params, cp, admit_batch=2, fault=inj,
+                     max_retries=16, backoff_cap=4)
+    pol = HealthPolicy(cp, HealthConfig(
+        trip_after=2, cooldown=4, recover_after=2, probe_patience=6,
+        probe_weight=0.25), clusters=["pool"])
+    rid = 0
+    ejected_at = unejected_at = None
+    for t in range(110):
+        loop.submit(Request(req_id=rid, service=0, headers={},
+                            prompt_token=3 + rid % 5))
+        rid += 1
+        loop.tick()
+        if t % 4 == 3:
+            pol.epoch(loop.routing)
+            st = pol.state_of("pool", 1)
+            if st == OPEN and ejected_at is None:
+                ejected_at = t
+            if ejected_at is not None and unejected_at is None \
+                    and st == CLOSED:
+                unejected_at = t
+    assert ejected_at is not None and 10 < ejected_at < 60
+    assert unejected_at is not None and unejected_at > 60
+    assert pol.state_of("pool", 1) == CLOSED       # auto un-drain complete
+    assert cp.drain_reason("pool", 1) is None
+    slot = cp.endpoint_slot("pool", 1)
+    assert int(cp.snapshot().ep_drained[slot]) == 0
+    assert float(cp.endpoint_weight("pool", 1)) == 1.0   # weight restored
+    # zero operator transactions: every version bump came from the daemon
+    assert cp.version == pol.commits > 0

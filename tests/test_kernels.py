@@ -630,6 +630,43 @@ def test_complete_large_pool_oracle(fold):
     assert int(np.asarray(got.done).sum()) > 100
 
 
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
+@pytest.mark.parametrize("I,C,block_i,seed", [(2, 8, 2, 0), (8, 16, 2, 1),
+                                              (8, 64, 8, 2)])
+def test_complete_health_ewmas_match_oracle(I, C, block_i, seed, fold):
+    """The closed-loop health accumulators (DESIGN.md §8): the in-kernel
+    epilogue's completion count and occupancy/throughput EWMAs — updated
+    from random nonzero carried bases — must be BIT-exact against the
+    sequential oracle under both folds and multi-tile grids, or the
+    circuit-breaker sees different fleets on different backends."""
+    from repro.core.routing_table import MAX_ENDPOINTS
+    pool, nxt, load, rx = _complete_case(I, C, seed)
+    ks = jax.random.split(jax.random.PRNGKey(100 + seed), 2)
+    ewl = jax.random.uniform(ks[0], (MAX_ENDPOINTS,), jnp.float32, 0.0, 6.0)
+    ewt = jax.random.uniform(ks[1], (MAX_ENDPOINTS,), jnp.float32, 0.0, 2.0)
+    got = ops.complete(PoolState(*pool), nxt, load, rx, ewl, ewt, eos=1,
+                       max_len=8, block_i=block_i, fold=fold)
+    want = ref.complete_ref(*pool, nxt, load, rx, ewl, ewt, eos=1, max_len=8)
+    np.testing.assert_array_equal(np.asarray(got.done_cnt),
+                                  np.asarray(want.done_cnt))
+    np.testing.assert_array_equal(np.asarray(got.ep_inflight_ewma),
+                                  np.asarray(want.inflight_ewma))
+    np.testing.assert_array_equal(np.asarray(got.ep_tput_ewma),
+                                  np.asarray(want.tput_ewma))
+    # the count is the released mass: load0 - load == done_cnt summed
+    assert int(np.asarray(got.done_cnt).sum()) == \
+        int((np.asarray(load) - np.asarray(got.ep_load)).sum())
+    assert int(np.asarray(got.done_cnt).sum()) > 0
+    # default bases (None) are zeros — the cold-start path stays exact too
+    cold = ops.complete(PoolState(*pool), nxt, load, rx, eos=1,
+                        max_len=8, block_i=block_i, fold=fold)
+    cold_want = ref.complete_ref(*pool, nxt, load, rx, eos=1, max_len=8)
+    np.testing.assert_array_equal(np.asarray(cold.ep_inflight_ewma),
+                                  np.asarray(cold_want.inflight_ewma))
+    np.testing.assert_array_equal(np.asarray(cold.ep_tput_ewma),
+                                  np.asarray(cold_want.tput_ewma))
+
+
 # --------------------------------------------------------------------------- #
 # datapath-visible drain mask (every selection path consults ep_drained)
 # --------------------------------------------------------------------------- #

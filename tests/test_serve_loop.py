@@ -38,10 +38,11 @@ def _routing(require_match: bool):
     return routing
 
 
-def _loop(cfg, params, *, require_match=False, admit_batch=8, max_len=5):
+def _loop(cfg, params, *, require_match=False, admit_batch=8, max_len=5,
+          **kw):
     eng = interpose.Engine(cfg, I, C, max_len)
     return ServeLoop(eng, params, _routing(require_match),
-                     admit_batch=admit_batch)
+                     admit_batch=admit_batch, **kw)
 
 
 def _req(rid, headers=None):
@@ -50,21 +51,23 @@ def _req(rid, headers=None):
 
 
 def test_drain_accounts_for_dropped_requests(setup):
-    """Requests that exhaust their 64 retries land on ``dropped`` — after a
-    drain, submitted == done + dropped + queued + inflight."""
+    """Requests that exhaust ``max_retries`` land on ``dropped`` — after a
+    drain, submitted == done + dropped + queued + inflight, where queued
+    includes the backoff waiting set."""
     cfg, params = setup
-    loop = _loop(cfg, params, require_match=True)
+    loop = _loop(cfg, params, require_match=True,
+                 max_retries=6, backoff_cap=4)
     routable = [_req(r, {"path": "v2"}) for r in range(3)]
     unroutable = [_req(100 + r) for r in range(2)]     # no matching header
     for r in routable + unroutable:
         loop.submit(r)
     loop.drain(max_ticks=200)
     n_sub = len(routable) + len(unroutable)
-    assert n_sub == (len(loop.done) + len(loop.dropped) + len(loop.queue)
+    assert n_sub == (len(loop.done) + len(loop.dropped) + loop.n_queued
                      + len(loop.inflight))
     assert {r.req_id for r in loop.done} == {0, 1, 2}
     assert {r.req_id for r in loop.dropped} == {100, 101}
-    assert all(r.retries == 64 for r in loop.dropped)
+    assert all(r.retries == loop.max_retries for r in loop.dropped)
     assert all(r.t_done > 0 for r in loop.dropped)     # latency accounting
     assert int(np.asarray(loop.state.metrics.no_route_match)) > 0
 
@@ -143,10 +146,10 @@ def test_drain_reports_stranded_work(setup):
     for r in range(2):
         loop.submit(_req(r, {"path": "v2"}))
     loop.submit(_req(50))                      # unroutable: no v2 header
-    rep = loop.drain(max_ticks=30)             # < 64 retries: still queued
+    rep = loop.drain(max_ticks=30)    # far from max_retries: still queued
     assert {r.req_id for r in rep.done} == {0, 1}
     assert rep.queued == 1 and rep.inflight == 0
-    assert rep.queued == len(loop.queue)
+    assert rep.queued == loop.n_queued           # ready queue + backoff set
     assert not rep.dropped
 
 
@@ -250,4 +253,59 @@ def test_held_request_overflow_is_bounded_and_documented(setup):
     # admitted request contributes exactly its retry count (< 64), not 64x
     assert overflow == held.retries
     assert loop.held_first == 1 == rep.held_first
-    assert rep.held_first < 64
+    assert rep.held_first < loop.max_retries
+
+
+def test_retry_backoff_is_capped_exponential_and_deterministic(setup):
+    """Satellite regression: held requests back off exponentially (capped)
+    with deterministic seeded jitter instead of hammering the admit path
+    every tick — and the accounting identity holds at every tick, with the
+    backoff waiting set counted as queued."""
+    cfg, params = setup
+
+    def run(seed):
+        loop = _loop(cfg, params, require_match=True,
+                     max_retries=5, backoff_cap=4, backoff_seed=seed)
+        loop.submit(_req(0, {"path": "v2"}))
+        loop.submit(_req(9))                   # unroutable: retries forever
+        drop_tick, attempts = None, []
+        for t in range(64):
+            loop.tick()
+            # the identity holds mid-flight, not just after a drain
+            assert 2 == (len(loop.done) + len(loop.dropped)
+                         + loop.n_queued + len(loop.inflight)), t
+            if loop.dropped and drop_tick is None:
+                drop_tick = t
+            attempts.append(loop.dropped[0].retries if loop.dropped
+                            else None)
+        return loop, drop_tick, attempts
+
+    loop_a, drop_a, sched_a = run(seed=3)
+    loop_b, drop_b, sched_b = run(seed=3)
+    assert drop_a is not None                  # it did give up eventually
+    assert (drop_a, sched_a) == (drop_b, sched_b)   # bit-identical replay
+    # exponential spacing really happened: 5 attempts with delays
+    # ≥ 1,1,2,4 (cap 4) + jitter can't finish in the first 7 ticks
+    assert drop_a > 7
+    assert loop_a.dropped[0].retries == loop_a.max_retries
+    # the routable request was never starved by the backoff machinery
+    assert {r.req_id for r in loop_a.done} == {0}
+
+
+def test_heartbeat_sent_each_tick_when_attached(setup):
+    """A ServeLoop driven from a ControlPlane heartbeats its liveness lease
+    every tick, so the drain reaper keeps honoring its load votes."""
+    cfg, params = setup
+    cp_lease = ControlPlane(
+        [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
+        [Cluster("pool", endpoints=list(range(I)), policy=POLICY_RR)],
+        lease_epochs=1)
+    eng = interpose.Engine(cfg, I, C, 5)
+    loop = ServeLoop(eng, params, cp_lease, admit_batch=4)
+    for _ in range(3):
+        cp_lease.advance_epoch()
+        loop.tick()
+    assert cp_lease._lease_live(loop)          # fresh at every epoch
+    for _ in range(3):                         # stop ticking: lease expires
+        cp_lease.advance_epoch()
+    assert not cp_lease._lease_live(loop)

@@ -27,11 +27,11 @@ import pytest
 from repro.compat import make_mesh
 from repro.core import control
 from repro.core.balancer import PoolState, RequestBatch
-from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, N_FEATURES,
-                                      Cluster, POLICY_LEAST_REQUEST,
-                                      POLICY_RANDOM, POLICY_RR,
-                                      POLICY_WEIGHTED, Rule, ServiceConfig,
-                                      build_state, fnv1a)
+from repro.core.routing_table import (MAX_ENDPOINTS, MAX_EPS_PER_CLUSTER,
+                                      MAX_SERVICES, N_FEATURES, Cluster,
+                                      POLICY_LEAST_REQUEST, POLICY_RANDOM,
+                                      POLICY_RR, POLICY_WEIGHTED, Rule,
+                                      ServiceConfig, build_state, fnv1a)
 from repro.kernels import ops, ref
 from repro.kernels.shard_admit import waterfill_lr
 
@@ -84,6 +84,30 @@ def _pool(I, C, seed, p_active=0.5):
                      jnp.zeros((I, C), jnp.int32), act)
 
 
+def _complete_case(I, C, seed, max_len=8):
+    """A completion step with work on every front: mixed EOS/length done,
+    inactive lanes, endpoints spread over 4 slots, 2 services, and random
+    nonzero health-EWMA bases (the carried accumulators)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    act = jax.random.bernoulli(ks[0], 0.7, (I, C))
+    pool = PoolState(
+        jnp.where(act, jnp.arange(I * C, dtype=jnp.int32).reshape(I, C),
+                  -1).astype(jnp.int32),
+        jnp.where(act, jax.random.randint(ks[1], (I, C), 0, 4), -1)
+        .astype(jnp.int32),
+        jax.random.randint(ks[2], (I, C), 0, 2, dtype=jnp.int32),
+        jax.random.randint(ks[3], (I, C), 1, max_len, dtype=jnp.int32),
+        jnp.zeros((I, C), jnp.int32), act)
+    nxt = jnp.where(jax.random.bernoulli(ks[4], 0.3, (I, C)), 1,
+                    jax.random.randint(ks[5], (I, C), 2, 90)
+                    ).astype(jnp.int32)
+    load = jnp.zeros((MAX_ENDPOINTS,), jnp.int32).at[:4].set(I * C)
+    rx = jnp.zeros((MAX_SERVICES,), jnp.int32).at[:2].set(7)
+    ewl = jax.random.uniform(ks[6], (MAX_ENDPOINTS,), jnp.float32, 0.0, 5.0)
+    ewt = jax.random.uniform(ks[7], (MAX_ENDPOINTS,), jnp.float32, 0.0, 2.0)
+    return pool, nxt, load, rx, ewl, ewt
+
+
 def _assert_same(want, got, ctx=""):
     for name in want._fields:
         w, g = getattr(want, name), getattr(got, name)
@@ -114,6 +138,22 @@ def test_sharded_m1_bit_exact(R, seed):
                                    mesh=make_mesh((1,), ("shard",)))
     _assert_same(want, got, f"M=1 R={R}")
     assert int(want.held) > 0          # the scenario really exercises holds
+
+
+def test_sharded_complete_m1_bit_exact():
+    """Completion on the degenerate 1-way mesh reproduces the single-shard
+    fused kernel exactly — pool writeback, load release, rx, AND the health
+    EWMAs (zero-base per-shard deltas + psum + shared f32 epilogue must
+    collapse to the in-kernel epilogue at M=1)."""
+    max_len = 8
+    pool, nxt, load, rx, ewl, ewt = _complete_case(4, 6, seed=23)
+    want = ops.complete(pool, nxt, load, rx, ewl, ewt, eos=1,
+                        max_len=max_len)
+    got = ops.complete_sharded(pool, nxt, load, rx, ewl, ewt,
+                               mesh=make_mesh((1,), ("shard",)),
+                               eos=1, max_len=max_len)
+    _assert_same(want, got, "complete M=1")
+    assert int(np.asarray(want.done_cnt).sum()) > 0
 
 
 def test_sharded_empty_batch_passthrough():
@@ -283,6 +323,18 @@ got = ops.admit_commit_sharded(reqs, st, pool, rnd, gum,
 T._assert_same(want, got, "fully-drained cluster")
 print("sweep OK: fully-drained cluster unroutable on every shard")
 
+# --- 1b) completion sharding: M in {2,4}, health EWMAs bit-exact ---------- #
+for I, C, seed in ((8, 6, 23), (4, 16, 29)):
+    pool, nxt, load, rx, ewl, ewt = T._complete_case(I, C, seed)
+    want = ops.complete(pool, nxt, load, rx, ewl, ewt, eos=1, max_len=8)
+    for M in (2, 4):
+        got = ops.complete_sharded(pool, nxt, load, rx, ewl, ewt,
+                                   mesh=make_mesh((M,), ("shard",)),
+                                   eos=1, max_len=8)
+        T._assert_same(want, got, f"complete M={M} I={I}")
+    assert int(np.asarray(want.done_cnt).sum()) > 0
+print("complete OK: sharded health EWMAs bit-exact at M in {2,4}")
+
 # the shard-major oracle pins the sharded op directly
 M, R = 4, 64
 st = T._rich_state(); reqs, rnd, gum = T._batch(R, 31)
@@ -403,6 +455,7 @@ def test_sharded_admission_subprocess():
                    "sweep OK: uneven queues",
                    "sweep OK: ragged R=52",
                    "sweep OK: fully-drained cluster",
+                   "complete OK: sharded health EWMAs",
                    "oracle OK: admit_sharded_ref",
                    "relay OK: sharded round-trip",
                    "control OK: one bump"):
