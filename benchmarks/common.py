@@ -34,15 +34,16 @@ KEY = jax.random.PRNGKey(42)
 PARAMS = M.init_params(CFG, KEY, dtype=jnp.float32)
 
 
-def build_cp(n_instances: int) -> ControlPlane:
+def build_cp(n_instances: int,
+             policy: int = POLICY_LEAST_REQUEST) -> ControlPlane:
     return ControlPlane(
         [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
         [Cluster("pool", endpoints=list(range(n_instances)),
-                 policy=POLICY_LEAST_REQUEST)])
+                 policy=policy)])
 
 
-def build_routing(n_instances: int):
-    return build_cp(n_instances).snapshot()
+def build_routing(n_instances: int, policy: int = POLICY_LEAST_REQUEST):
+    return build_cp(n_instances, policy).snapshot()
 
 
 def request_batch(req_ids, pad_to: int) -> RequestBatch:

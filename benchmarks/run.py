@@ -24,6 +24,10 @@ import numpy as np
 
 MODES = ("istio", "cilium", "xlb")
 ROWS: list[tuple] = []
+# --policy NAME reruns the admit sweep under that LB policy (the registry in
+# core/policy_defs.py); None = the default least_request measurement that
+# BENCH_admit.json and the regression gates track.
+_POLICY: str | None = None
 
 
 def emit(bench, mode, metric, value):
@@ -250,7 +254,7 @@ def _measure_lb_fraction() -> dict:
     @jax.jit
     def lb_staged(st, svc, feats, key):
         cl = router.match_cluster(st, svc, feats)
-        sel, st = policies.select(st, cl, key)
+        sel, st = policies.select(st, cl, key, feats)
         return sel.endpoint, st
 
     key = jax.random.PRNGKey(0)
@@ -291,25 +295,34 @@ def bench_table2():
 def bench_admit():
     """Admission microbenchmark: fused Pallas kernel vs the staged jnp chain
     (match → select → allocate, three full-batch argsorts), sweeping the
-    admission batch.  Always writes BENCH_admit.json (perf trajectory)."""
+    admission batch.  Always writes BENCH_admit.json (perf trajectory) —
+    unless ``--policy`` reruns the sweep under another registry policy, in
+    which case only the labelled BENCH_TREND.jsonl row is appended (the
+    regression gates keep tracking the default least_request file)."""
     import jax
     import jax.numpy as jnp
     from benchmarks import common
     from repro.core import policies, request_map, router
     from repro.core.balancer import RequestBatch
-    from repro.core.routing_table import MAX_EPS_PER_CLUSTER
+    from repro.core.routing_table import MAX_EPS_PER_CLUSTER, POLICY_NAMES
     from repro.kernels import ops
 
     from repro.kernels import tune
 
     n_instances, slots = 8, 64
-    st = common.build_routing(n_instances)
+    pol_name = _POLICY or "least_request"
+    st = common.build_routing(n_instances, POLICY_NAMES[pol_name])
     free = jnp.ones((n_instances, slots), bool)
-    record = {"batch": [], "staged_us": [], "fused_us": [], "speedup": [],
-              "block_r": [], "fold": []}
+    record = {"policy": pol_name, "batch": [], "staged_us": [],
+              "fused_us": [], "speedup": [], "block_r": [], "fold": []}
     for R in (64, 256, 1024, 4096):
         svc = jnp.zeros((R,), jnp.int32)
-        feats = jnp.zeros((R, 8), jnp.int32)
+        # hash-keyed policies (maglev/affinity) select on the flow id, so
+        # their sweep needs key diversity; the default sweep keeps the
+        # all-zero features BENCH_admit.json has always recorded
+        feats = (jnp.zeros((R, 8), jnp.int32) if _POLICY is None else
+                 jax.random.randint(jax.random.PRNGKey(R), (R, 8), 0, 997,
+                                    dtype=jnp.int32))
         reqs = RequestBatch(req_id=jnp.arange(R, dtype=jnp.int32), svc=svc,
                             features=feats, token=jnp.zeros((R,), jnp.int32),
                             msg_bytes=jnp.full((R,), 128, jnp.int32))
@@ -317,7 +330,7 @@ def bench_admit():
         @jax.jit
         def staged(st, key):
             cl = router.match_cluster(st, svc, feats)
-            sel, st = policies.select(st, cl, key)
+            sel, st = policies.select(st, cl, key, feats)
             a = request_map.allocate_slots(sel.instance, free)
             return a.slot, st
 
@@ -345,10 +358,11 @@ def bench_admit():
         block_r, fold = tune.plan_admit(R, free.shape)   # the cached plan
         record["block_r"].append(block_r)
         record["fold"].append(fold)
-    with open("BENCH_admit.json", "w") as f:
-        json.dump(record, f, indent=2)
-        f.write("\n")
-    print("# wrote BENCH_admit.json", flush=True)
+    if _POLICY is None:
+        with open("BENCH_admit.json", "w") as f:
+            json.dump(record, f, indent=2)
+            f.write("\n")
+        print("# wrote BENCH_admit.json", flush=True)
     _append_trend("admit", record)
 
 
@@ -583,6 +597,7 @@ def check_gates(remeasured: bool = False) -> None:
           flush=True)
     smoke_engines()
     smoke_shards()
+    smoke_policies()
     check_degraded()
 
 
@@ -620,6 +635,31 @@ def smoke_shards(shards: int = 2) -> None:
           f"{n_req}/{n_req}", flush=True)
 
 
+def smoke_policies(shards: int = 2) -> None:
+    """--check gate for the policy-registry seam: serve to completion under
+    the hash-keyed policies — maglev in-process on one host, affinity on a
+    2-way sharded mesh (exercising the affinity-cache reconciliation
+    collective end-to-end)."""
+    from repro.launch import serve
+    n_req = 4
+    done = serve.main(["--engine", "xlb", "--policy", "maglev",
+                       "--instances", "2", "--slots", "2",
+                       "--requests", str(n_req), "--max-len", "6"])
+    if done != n_req:
+        sys.exit(f"check: policy smoke FAILED — maglev completed "
+                 f"{done}/{n_req} requests")
+    print(f"# check: policy smoke OK — maglev {done}/{n_req}", flush=True)
+    code = ("import sys; from repro.launch.serve import main; "
+            f"sys.exit(0 if main(['--policy', 'affinity', '--shards', "
+            f"'{shards}', '--instances', '2', '--slots', '2', "
+            f"'--requests', '{n_req}', '--max-len', '6']) == {n_req} "
+            "else 1)")
+    _run_on_host_mesh(["-c", code], shards, what="check: affinity sharded "
+                      "serve smoke", timeout=1200)
+    print(f"# check: policy smoke OK — affinity --shards {shards} "
+          f"{n_req}/{n_req}", flush=True)
+
+
 BENCHES = {
     "admit": bench_admit, "step": bench_step, "shard": bench_shard,
     "degraded": bench_degraded,
@@ -631,7 +671,19 @@ BENCHES = {
 
 
 def main() -> None:
+    global _POLICY
     args = sys.argv[1:]
+    if "--policy" in args:
+        i = args.index("--policy")
+        if i + 1 >= len(args):
+            sys.exit("usage: --policy NAME (a name from "
+                     "core/policy_defs.py::POLICY_NAMES)")
+        from repro.core.routing_table import POLICY_NAMES
+        if args[i + 1] not in POLICY_NAMES:
+            sys.exit(f"unknown policy {args[i + 1]!r}; choose from: "
+                     + ", ".join(sorted(POLICY_NAMES)))
+        _POLICY = args[i + 1]
+        args = args[:i] + args[i + 2:]
     json_out = None
     if "--json" in args:
         i = args.index("--json")

@@ -56,20 +56,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.routing_table import (MAX_CLUSTERS, MAX_ENDPOINTS,
-                                      MAX_EPS_PER_CLUSTER, MAX_RULES,
-                                      MAX_RULES_PER_SVC, MAX_SERVICES,
-                                      POLICY_LEAST_REQUEST, WILDCARD, Cluster,
-                                      RoutingState, Rule, ServiceConfig,
-                                      build_state, fnv1a)
+from repro.core import policy_defs
+from repro.core.routing_table import (AFFINITY_SLOTS, MAX_CLUSTERS,
+                                      MAX_ENDPOINTS, MAX_EPS_PER_CLUSTER,
+                                      MAX_RULES, MAX_RULES_PER_SVC,
+                                      MAX_SERVICES, POLICY_LEAST_REQUEST,
+                                      WILDCARD, Cluster, RoutingState, Rule,
+                                      ServiceConfig, build_state, fnv1a)
 
 # The tables the control plane owns.  Everything else in RoutingState
-# (ep_load, ep_inflight_ewma, ep_tput_ewma, rr_cursor, version) is
-# datapath-owned and only ever *migrated* by a commit, never authored.
+# (ep_load, ep_inflight_ewma, ep_tput_ewma, rr_cursor, aff_key, aff_ep,
+# version) is datapath-owned and only ever *migrated* by a commit, never
+# authored.  ``maglev_table`` is config: derived from cluster membership and
+# rebuilt (incrementally, per dirty row) inside ``_commit``.
 CONFIG_FIELDS = ("svc_rule_start", "svc_rule_count", "rule_field",
                  "rule_value", "rule_cluster", "cluster_ep_start",
                  "cluster_ep_count", "cluster_policy", "ep_instance",
-                 "ep_weight", "ep_drained")
+                 "ep_weight", "ep_drained", "maglev_table")
 
 
 class RefreshPlan(NamedTuple):
@@ -119,9 +122,20 @@ def apply_plan(live: RoutingState, plan: RefreshPlan) -> RoutingState:
     load = jnp.where(src >= 0, live.ep_load[gather], 0)
     ewl = jnp.where(src >= 0, live.ep_inflight_ewma[gather], 0.0)
     ewt = jnp.where(src >= 0, live.ep_tput_ewma[gather], 0.0)
+    # sticky sessions follow their endpoint through the slot permutation;
+    # entries whose endpoint was removed or is drained in the new config
+    # invalidate here — the affinity cache can never outlive a drain.
+    dst = jnp.asarray(plan.ep_dst)
+    E = dst.shape[0]
+    ae = live.aff_ep
+    ae2 = jnp.where(ae >= 0, dst[jnp.clip(ae, 0, E - 1)], -1)
+    alive = (ae2 >= 0) & (cfg["ep_drained"][jnp.clip(ae2, 0, E - 1)] == 0)
     return live._replace(ep_load=load.astype(jnp.int32),
                          ep_inflight_ewma=ewl.astype(jnp.float32),
                          ep_tput_ewma=ewt.astype(jnp.float32),
+                         aff_ep=jnp.where(alive, ae2, -1).astype(jnp.int32),
+                         aff_key=jnp.where(alive, live.aff_key,
+                                           -1).astype(jnp.int32),
                          version=live.version + 1, **cfg)
 
 
@@ -284,6 +298,8 @@ class ControlPlane:
             ep_inflight_ewma=jnp.zeros((MAX_ENDPOINTS,), jnp.float32),
             ep_tput_ewma=jnp.zeros((MAX_ENDPOINTS,), jnp.float32),
             rr_cursor=jnp.zeros((MAX_CLUSTERS,), jnp.int32),
+            aff_key=jnp.full((AFFINITY_SLOTS,), -1, jnp.int32),
+            aff_ep=jnp.full((AFFINITY_SLOTS,), -1, jnp.int32),
             version=jnp.asarray(self.version, jnp.int32),
             **{k: jnp.asarray(cfg[k]) for k in CONFIG_FIELDS})
 
@@ -409,6 +425,19 @@ class ControlPlane:
                 txn.log.append(("reap", cl, inst))
         if not txn.log:                    # nothing happened: no bump
             return
+        # Maglev rows rebuild incrementally: only clusters whose
+        # (membership, drain) inputs changed this transaction.  One
+        # add/drain remaps ~1/E of a row's slots; untouched clusters'
+        # rows never churn, so keys hashed there keep their endpoints.
+        T = txn.store.cfg["maglev_table"].shape[1]
+        for c in range(MAX_CLUSTERS):
+            new_in = policy_defs.maglev_row_inputs(txn.store.cfg, c)
+            if new_in == policy_defs.maglev_row_inputs(self._store.cfg, c):
+                continue
+            n, insts, drs = new_in
+            offs = [j for j in range(n) if drs[j] == 0]
+            txn.store.cfg["maglev_table"][c] = policy_defs._maglev_row(
+                offs, [int(insts[j]) for j in offs], T)
         dst = np.full((MAX_ENDPOINTS,), -1, np.int32)
         occupied = txn.src >= 0
         dst[txn.src[occupied]] = np.nonzero(occupied)[0]

@@ -124,9 +124,10 @@ class Engine:
         else:
             res = ops.admit_commit(reqs, rstate, state.pool, rnd, gumbel,
                                    block_r=self.block_r, fold=self.fold)
-        # the committed pool, load counters, rr cursors, held release and
-        # flow metrics all come fused out of the kernel
-        rstate = rstate._replace(ep_load=res.ep_load, rr_cursor=res.rr_cursor)
+        # the committed pool, load counters, rr cursors, affinity cache,
+        # held release and flow metrics all come fused out of the kernel
+        rstate = rstate._replace(ep_load=res.ep_load, rr_cursor=res.rr_cursor,
+                                 aff_key=res.aff_key, aff_ep=res.aff_ep)
         metrics = metrics._replace(
             requests=metrics.requests + res.svc_requests,
             tx_bytes=metrics.tx_bytes + res.svc_tx_bytes,

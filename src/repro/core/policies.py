@@ -1,14 +1,17 @@
 """Load-balancing policies over cluster endpoints (paper §4.1/§4.2).
 
 All policies are vectorised over the request batch and run in-graph.  The
-mutable LB state (ep_load counters, rr cursors) lives in RoutingState and is
-functionally updated — "the eBPF map handles synchronization internally"
-becomes XLA's single-program-order scatter semantics.
+mutable LB state (ep_load counters, rr cursors, affinity cache) lives in
+RoutingState and is functionally updated — "the eBPF map handles
+synchronization internally" becomes XLA's single-program-order scatter
+semantics.
 
-Policies: round-robin, random, least-request (paper) + weighted (Envoy).
-``least_request`` uses Envoy's power-of-two-choices variant: O(1) per request
-instead of a full scan, then falls back to a full argmin for small clusters.
-"""
+This module is the registry's *staged* lowering (DESIGN.md §9): the policy
+definitions — round-robin, random, least-request, weighted, Maglev
+consistent hash, session affinity — live once in ``core/policy_defs.py``;
+``select`` builds the batch context and dispatches over the registry's
+``staged_offset`` hooks, so a new policy lands here without touching this
+file."""
 
 from __future__ import annotations
 
@@ -17,10 +20,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import relay
-from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, POLICY_LEAST_REQUEST,
-                                      POLICY_RANDOM, POLICY_RR, POLICY_WEIGHTED,
-                                      RoutingState)
+from repro.core import policy_defs, relay
+from repro.core.routing_table import MAX_EPS_PER_CLUSTER, RoutingState
 
 
 class Selection(NamedTuple):
@@ -39,12 +40,16 @@ def _window(state: RoutingState, cluster):
     return idx, ok, count
 
 
-def select(state: RoutingState, cluster: jax.Array, key: jax.Array
+def select(state: RoutingState, cluster: jax.Array, key: jax.Array,
+           features: jax.Array | None = None
            ) -> tuple[Selection, RoutingState]:
     """Pick one endpoint per request according to each cluster's policy and
-    update the LB state (load counters + rr cursors).
+    update the LB state (load counters, rr cursors, affinity cache).
 
     cluster: (B,) int32, may contain NO_ROUTE (-1) → endpoint -1.
+    features: (B, F) int32 request features, hashed into the flow id the
+    hash-keyed policies (maglev/affinity) select on; None → flow id 0
+    (callers that never route to a hashed cluster may omit it).
     """
     B = cluster.shape[0]
     cl = jnp.maximum(cluster, 0)
@@ -60,7 +65,7 @@ def select(state: RoutingState, cluster: jax.Array, key: jax.Array
     cnt1 = jnp.maximum(count2, 1)
     routable = (cluster >= 0) & (count2 > 0)
     policy = state.cluster_policy[cl]                       # (B,)
-    kr, kw, kp = jax.random.split(key, 3)
+    kr, kw, _ = jax.random.split(key, 3)
 
     # offset of the k-th *eligible* endpoint in the window (== k itself when
     # nothing is draining, so the pre-mask behavior is unchanged)
@@ -70,54 +75,48 @@ def select(state: RoutingState, cluster: jax.Array, key: jax.Array
         return jnp.argmax(ok & (cum == (k + 1)[:, None]),
                           axis=1).astype(jnp.int32)
 
-    # --- round robin: cursor + stable rank of this request within its
-    # cluster this batch (the relay's counting sort gives the rank).
-    # Unroutable (NO_ROUTE) requests are steered to a sentinel bucket the
-    # way request_map.allocate_slots steers them to instance I — ranking
-    # them at max(cluster, 0) would inflate the arrival ranks of genuine
-    # cluster-0 traffic and skew rr/least-request offsets away from the
-    # fused kernel and the admit_ref oracle ------------------------------- #
+    # stable rank of this request within its cluster this batch (the relay's
+    # counting sort).  Unroutable (NO_ROUTE) requests are steered to a
+    # sentinel bucket the way request_map.allocate_slots steers them to
+    # instance I — ranking them at max(cluster, 0) would inflate the arrival
+    # ranks of genuine cluster-0 traffic and skew rr/least-request offsets
+    # away from the fused kernel and the admit_ref oracle.
     n_cl = state.cluster_ep_start.shape[0]
     rank, _ = relay.positions_sort(jnp.where(routable, cl, n_cl), n_cl + 1)
-    rr_off = _kth((state.rr_cursor[cl] + rank) % cnt1)
+    fkey = (jnp.zeros((B,), jnp.int32) if features is None
+            else policy_defs.flow_hash(features).astype(jnp.int32))
 
-    # --- random ----------------------------------------------------------- #
-    rnd_off = _kth(jax.random.randint(kr, (B,), 0, 1 << 30) % cnt1)
-
-    # --- least request -------------------------------------------------- #
-    # vectorised batch semantics: the r-th request (arrival order) of a
-    # cluster takes the r-th LEAST-loaded endpoint, emulating the paper's
-    # sequential per-request counters (a naive batch argmin would send the
-    # whole batch to one endpoint before any counter updates); ineligible
-    # endpoints sort to the back behind the INT_MAX sentinel
-    load = jnp.where(ok, state.ep_load[idx], jnp.iinfo(jnp.int32).max)
-    by_load = jnp.argsort(load, axis=1).astype(jnp.int32)     # (B,W)
-    lr_off = jnp.take_along_axis(
-        by_load, (rank % cnt1)[:, None], 1)[:, 0]
-
-    # --- weighted: Gumbel-max over log-weights ----------------------------- #
-    w = jnp.where(ok, state.ep_weight[idx], 0.0)
-    g = jax.random.gumbel(kw, w.shape)
-    wt_off = jnp.argmax(jnp.where(ok, jnp.log(w + 1e-9) + g, -jnp.inf),
-                        axis=1).astype(jnp.int32)
-
-    off = jnp.select(
-        [policy == POLICY_RR, policy == POLICY_RANDOM,
-         policy == POLICY_LEAST_REQUEST, policy == POLICY_WEIGHTED],
-        [rr_off, rnd_off, lr_off, wt_off], rr_off).astype(jnp.int32)
+    sctx = policy_defs.StagedCtx(
+        state=state, cl=cl, start=state.cluster_ep_start[cl], count=count,
+        cnt1=cnt1, ok=ok, idx=idx, rank=rank,
+        rnd=jax.random.randint(kr, (B,), 0, 1 << 30), fkey=fkey,
+        gum=jax.random.gumbel(kw, ok.shape), kth=_kth)
+    default_off = None
+    conds, offs = [], []
+    for p in policy_defs.REGISTRY:
+        o_p = p.staged_offset(sctx).astype(jnp.int32)
+        if p.enum == 0:
+            default_off = o_p
+        else:
+            conds.append(policy == p.enum)
+            offs.append(o_p)
+    off = jnp.select(conds, offs, default_off).astype(jnp.int32)
 
     ep = jnp.take_along_axis(idx, off[:, None], 1)[:, 0]
     ep = jnp.where(routable, ep, -1)
     inst = jnp.where(routable, state.ep_instance[jnp.maximum(ep, 0)], -1)
 
-    # --- state update: load++ on chosen endpoints, cursors advance -------- #
+    # --- state update: load++ on chosen endpoints, cursors advance, the
+    # affinity cache learns first admits (first writer per slot wins) ----- #
     new_load = state.ep_load.at[jnp.maximum(ep, 0)].add(
         routable.astype(jnp.int32), mode="drop")
     per_cluster = jax.ops.segment_sum(routable.astype(jnp.int32), cl,
                                       num_segments=state.rr_cursor.shape[0])
     new_cursor = (state.rr_cursor + per_cluster) % jnp.maximum(
         state.cluster_ep_count, 1)
-    state = state._replace(ep_load=new_load, rr_cursor=new_cursor)
+    nk, ne = policy_defs.affinity_staged_update(sctx, ep, routable, policy)
+    state = state._replace(ep_load=new_load, rr_cursor=new_cursor,
+                           aff_key=nk, aff_ep=ne)
     return Selection(ep, inst), state
 
 

@@ -29,11 +29,16 @@ MAX_ENDPOINTS = 512        # backend instances, globally
 MAX_EPS_PER_CLUSTER = 64   # bounded LB scan per cluster
 N_FEATURES = 8             # hashed L7 header fields per request
 
-# LB policies (paper §4.1: round-robin, random, least request; + weighted)
-POLICY_RR = 0
-POLICY_RANDOM = 1
-POLICY_LEAST_REQUEST = 2
-POLICY_WEIGHTED = 3
+# LB policies (paper §4.1: round-robin, random, least request; + weighted,
+# Maglev consistent-hash and session affinity).  The enum lives in ONE
+# place — core/policy_defs.py, the policy-dispatch registry (DESIGN.md §9) —
+# and is re-exported here so the kernels, the oracle and the staged chain
+# all resolve the same constants.
+from repro.core.policy_defs import (AFFINITY_SLOTS, MAGLEV_TABLE_SIZE,  # noqa: E402,F401
+                                    POLICY_AFFINITY, POLICY_LEAST_REQUEST,
+                                    POLICY_MAGLEV, POLICY_NAMES,
+                                    POLICY_RANDOM, POLICY_RR,
+                                    POLICY_WEIGHTED, build_maglev_table)
 
 NO_ROUTE = jnp.int32(-1)
 WILDCARD = -1
@@ -59,6 +64,11 @@ class RoutingState(NamedTuple):
     ep_drained: jax.Array        # (MAX_ENDPOINTS,) i32 1 = draining: no new
     #                              traffic under ANY policy (control-authored;
     #                              the datapath only reads it)
+    maglev_table: jax.Array      # (MAX_CLUSTERS, MAGLEV_TABLE_SIZE) i32
+    #                              per-cluster Maglev permutation rows of
+    #                              WINDOW OFFSETS (-1 = empty); built and
+    #                              incrementally rebuilt by the control
+    #                              plane (core/policy_defs.py)
     # --- mutable datapath state (load-balancing states, paper §4.2) ----- #
     ep_load: jax.Array           # (MAX_ENDPOINTS,) i32 outstanding requests
     ep_inflight_ewma: jax.Array  # (MAX_ENDPOINTS,) f32 EWMA of requests in
@@ -67,6 +77,13 @@ class RoutingState(NamedTuple):
     ep_tput_ewma: jax.Array      # (MAX_ENDPOINTS,) f32 EWMA of completions
     #                              per step (the latency denominator)
     rr_cursor: jax.Array         # (MAX_CLUSTERS,) i32 round-robin cursor
+    aff_key: jax.Array           # (AFFINITY_SLOTS,) i32 session-affinity
+    #                              cache: flow id per direct-mapped slot
+    #                              (-1 = empty); written by the admit
+    #                              kernel, invalidated by drain/remove
+    #                              through the control plane's remap path
+    aff_ep: jax.Array            # (AFFINITY_SLOTS,) i32 cached absolute
+    #                              endpoint per slot (-1 = empty)
     version: jax.Array           # () i32, bumped by every delta refresh
 
 
@@ -107,10 +124,14 @@ def empty_state() -> RoutingState:
         ep_instance=jnp.full((MAX_ENDPOINTS,), -1, jnp.int32),
         ep_weight=jnp.ones((MAX_ENDPOINTS,), jnp.float32),
         ep_drained=i(MAX_ENDPOINTS),
+        maglev_table=jnp.full((MAX_CLUSTERS, MAGLEV_TABLE_SIZE), -1,
+                              jnp.int32),
         ep_load=i(MAX_ENDPOINTS),
         ep_inflight_ewma=jnp.zeros((MAX_ENDPOINTS,), jnp.float32),
         ep_tput_ewma=jnp.zeros((MAX_ENDPOINTS,), jnp.float32),
         rr_cursor=i(MAX_CLUSTERS),
+        aff_key=jnp.full((AFFINITY_SLOTS,), -1, jnp.int32),
+        aff_ep=jnp.full((AFFINITY_SLOTS,), -1, jnp.int32),
         version=jnp.zeros((), jnp.int32),
     )
 
@@ -173,6 +194,12 @@ def build_state(services: list[ServiceConfig], clusters: list[Cluster],
         if c.weights is not None:
             st.ep_weight[ep_cursor:ep_cursor + n] = c.weights
         ep_cursor += n
+
+    # per-cluster Maglev permutation rows (policy_defs owns the builder;
+    # the control plane rebuilds only dirty rows on later transactions)
+    st.maglev_table[...] = build_maglev_table(
+        st.cluster_ep_start, st.cluster_ep_count, st.ep_instance,
+        st.ep_drained)
 
     rule_cursor = 0
     for si, s in enumerate(services):

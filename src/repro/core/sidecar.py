@@ -35,11 +35,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core import control
+from repro.core import control, policy_defs
 from repro.core.balancer import PoolState, RequestBatch
-from repro.core.routing_table import (MAX_SERVICES, POLICY_LEAST_REQUEST,
-                                      POLICY_RANDOM, POLICY_RR,
-                                      POLICY_WEIGHTED, FlowMetrics,
+from repro.core.routing_table import (MAX_SERVICES, FlowMetrics,
                                       RoutingState)
 from repro.kernels.completion import RX_BYTES_PER_TOKEN, health_update
 from repro.models import model as M
@@ -69,7 +67,8 @@ class HostRouter:
                 return int(t.rule_cluster[r])
         return -1
 
-    def select(self, cluster: int) -> tuple[int, int]:
+    def select(self, cluster: int,
+               features: np.ndarray | None = None) -> tuple[int, int]:
         t = self.t
         start, count = (int(t.cluster_ep_start[cluster]),
                         int(t.cluster_ep_count[cluster]))
@@ -87,22 +86,15 @@ class HostRouter:
             if not elig:
                 return -1, -1
         else:
-            elig = range(start, start + count)
+            elig = list(range(start, start + count))
+        # registry dispatch (DESIGN.md §9): the host lowering of whichever
+        # policy the cluster runs; hash-keyed policies (maglev/affinity)
+        # select on the request features' flow id
         pol = int(t.cluster_policy[cluster])
-        if pol == POLICY_RR:
-            off = int(t.rr_cursor[cluster]) % len(elig)
-            t.rr_cursor[cluster] += 1
-        elif pol == POLICY_RANDOM:
-            off = int(self.rng.randint(len(elig)))
-        elif pol == POLICY_WEIGHTED:
-            w = t.ep_weight[elig]
-            s = float(w.sum())
-            # all-zero weights fall back to uniform (mirrors the kernel's
-            # log(w + 1e-9) guard) instead of NaN-crashing np.random.choice
-            off = int(self.rng.choice(len(elig), p=w / s if s > 0 else None))
-        else:                                   # least request
-            off = int(np.argmin(t.ep_load[elig]))
-        ep = elig[off]
+        pdef = policy_defs.BY_ENUM.get(pol, policy_defs.BY_ENUM[0])
+        feats = (np.zeros((1,), np.int32) if features is None
+                 else np.asarray(features, np.int32))
+        ep = int(pdef.host_pick(self, cluster, elig, feats))
         t.ep_load[ep] += 1
         return ep, int(t.ep_instance[ep])
 
@@ -195,7 +187,7 @@ class SidecarEngine:
             if cluster < 0:
                 m.no_route_match[...] += 1
                 continue
-            ep, inst = router.select(cluster)
+            ep, inst = router.select(cluster, feats[r])
             if inst < 0:
                 continue
             free = np.where(~pool.active[inst])[0]

@@ -54,6 +54,8 @@ class AdmitCommitOut(NamedTuple):
     svc_tx_bytes: jax.Array  # (S,) i32 admitted payload bytes per service
     no_route: jax.Array      # () i32 valid requests with no rule match
     held: jax.Array          # () i32 routable requests without a free slot
+    aff_key: jax.Array       # (AFFINITY_SLOTS,) i32 updated affinity cache
+    aff_ep: jax.Array        # (AFFINITY_SLOTS,) i32
     pool: PoolState          # (I, C) committed pool (active as bool)
 
 
@@ -125,7 +127,7 @@ def _admit_commit(reqs: RequestBatch, routing, pool: PoolState, rnd, gumbel,
     return AdmitCommitOut(
         res.cluster, res.endpoint, res.instance, res.slot, res.ok,
         res.ep_load, res.rr_cursor, res.svc_requests, res.svc_tx_bytes,
-        res.no_route, res.held,
+        res.no_route, res.held, res.aff_key, res.aff_ep,
         PoolState(res.pool_req_id, res.pool_endpoint, res.pool_svc,
                   res.pool_length, res.pool_token, res.pool_active > 0))
 
@@ -164,7 +166,7 @@ def admit_commit_sharded(reqs: RequestBatch, routing, pool: PoolState, rnd,
     return AdmitCommitOut(
         res.cluster, res.endpoint, res.instance, res.slot, res.ok,
         res.ep_load, res.rr_cursor, res.svc_requests, res.svc_tx_bytes,
-        res.no_route, res.held,
+        res.no_route, res.held, res.aff_key, res.aff_ep,
         PoolState(res.pool_req_id, res.pool_endpoint, res.pool_svc,
                   res.pool_length, res.pool_token, res.pool_active > 0))
 

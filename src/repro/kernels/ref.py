@@ -100,12 +100,10 @@ def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
     """
     import numpy as np
 
+    from repro.core import policy_defs
     from repro.core.routing_table import (MAX_EPS_PER_CLUSTER,
-                                          MAX_RULES_PER_SVC,
-                                          POLICY_LEAST_REQUEST,
-                                          POLICY_RANDOM, POLICY_WEIGHTED,
-                                          WILDCARD)
-    from repro.kernels.route_match import BIG, AdmitResult
+                                          MAX_RULES_PER_SVC, WILDCARD)
+    from repro.kernels.route_match import AdmitResult
 
     rid = np.asarray(req_id, np.int64)
     feats = np.asarray(features, np.int64)
@@ -156,6 +154,22 @@ def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
 
     loads = np.asarray(state.ep_load, np.int64).copy()
     cur = np.asarray(state.rr_cursor, np.int64).copy()
+    # the oracle ctx handed to every policy's sequential hook (the same
+    # registry entry the kernel lowers — core/policy_defs.py); affinity
+    # hooks mutate affk/affe in place, request by request
+    octx = policy_defs.OracleCtx(
+        loads=loads, cur=cur, cs=cs, cc=cc, E=E,
+        drained=drained,
+        rnd=rndv,
+        fkey=np.asarray(policy_defs.flow_hash(jnp.asarray(features)),
+                        np.int64),
+        wt_off=None,                    # filled below (needs the window)
+        mg=np.asarray(state.maglev_table, np.int64),
+        T=state.maglev_table.shape[1],
+        affk=np.asarray(state.aff_key, np.int64).copy(),
+        affe=np.asarray(state.aff_ep, np.int64).copy(),
+        A=state.aff_key.shape[0])
+    octx.wt_off = wt_off
     icnt = np.zeros((I,), np.int64)
     cluster = np.full((R,), -1, np.int64)
     ep_out = np.full((R,), -1, np.int64)
@@ -181,15 +195,10 @@ def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
         elig = [e for e in elig if drained[e] == 0]
         if not elig:
             continue
-        pol = cp[c]
-        if pol == POLICY_RANDOM:
-            ep = elig[rndv[r] % len(elig)]
-        elif pol == POLICY_LEAST_REQUEST:
-            ep = elig[int(np.argmin([loads[e] for e in elig]))]
-        elif pol == POLICY_WEIGHTED:
-            ep = min(max(cs[c] + wt_off[r], 0), E - 1)
-        else:                               # POLICY_RR and unknown → rr
-            ep = elig[cur[c] % len(elig)]
+        pol = int(cp[c])
+        pdef = policy_defs.BY_ENUM.get(pol,
+                                       policy_defs.BY_ENUM[0])  # unknown→rr
+        ep = pdef.oracle_pick(octx, r, c, elig)
         cur[c] += 1          # raw count; reduced modulo at batch end
         loads[ep] += 1
         ep_out[r] = ep
@@ -216,7 +225,7 @@ def admit_ref(req_id, svc, features, msg_bytes, state, free_mask, rnd,
     return AdmitResult(i32(cluster), i32(ep_out), i32(inst_out),
                        i32(slot_out), i32(ok_out), i32(loads), i32(cur),
                        i32(sreq), i32(stx), np.int32(no_route),
-                       np.int32(held_n))
+                       np.int32(held_n), i32(octx.affk), i32(octx.affe))
 
 
 def admit_commit_ref(req_id, svc, features, msg_bytes, token, state,

@@ -62,13 +62,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.backend import resolve_fold, resolve_interpret
+from repro.core import policy_defs
+from repro.core.policy_defs import BIG  # noqa: F401  (re-export: the
+# sentinel and the policy enum live in core/policy_defs.py — ONE
+# definition site for kernel, oracle and staged chain, DESIGN.md §9)
 from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, MAX_RULES_PER_SVC,
-                                      POLICY_LEAST_REQUEST, POLICY_RANDOM,
-                                      POLICY_RR, POLICY_WEIGHTED, WILDCARD)
-
-BIG = 2**30        # python literal — a jnp scalar here would be captured as
-                   # a constant by the Pallas kernel (verifier-rejected)
+                                      POLICY_AFFINITY, WILDCARD)
+from repro.kernels.backend import resolve_fold, resolve_interpret
 
 
 def _table_spec(shape: tuple) -> pl.BlockSpec:
@@ -235,27 +235,34 @@ class AdmitResult(NamedTuple):
     svc_tx_bytes: jax.Array  # (S,) i32 admitted payload bytes per service
     no_route: jax.Array      # () i32 valid requests with no rule match
     held: jax.Array          # () i32 routable requests without a free slot
+    aff_key: jax.Array       # (AFFINITY_SLOTS,) i32 updated affinity cache
+    aff_ep: jax.Array        # (AFFINITY_SLOTS,) i32
 
 
 def _admit_kernel(*refs, block_r: int, commit: bool, fold: str):
     if commit:
-        (rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref, tok_ref,
+        (rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref, fkey_ref,
+         tok_ref,
          rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref,
          cs_ref, cc_ref, cp_ref, einst_ref, ew_ref, ed_ref,
-         load0_ref, cur0_ref, free_ref,
+         load0_ref, cur0_ref, mg_ref, affk0_ref, affe0_ref, free_ref,
          preq0_ref, pep0_ref, psvc0_ref, plen0_ref, ptok0_ref,
          cluster_ref, ep_ref, inst_ref, slot_ref, ok_ref,
          loadout_ref, curout_ref, sreq_ref, stx_ref, cnt_ref,
+         affk_ref, affe_ref,
          preq_ref, pep_ref, psvc_ref, plen_ref, ptok_ref, pact_ref,
-         load_s, held_s, cur_s, icnt_s, sreq_s, stx_s, cnt_s) = refs
+         load_s, held_s, cur_s, icnt_s, sreq_s, stx_s, cnt_s,
+         affk_s, affe_s) = refs
     else:
-        (rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref,
+        (rid_ref, svc_ref, feat_ref, bytes_ref, rnd_ref, gum_ref, fkey_ref,
          rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref,
          cs_ref, cc_ref, cp_ref, einst_ref, ew_ref, ed_ref,
-         load0_ref, cur0_ref, free_ref,
+         load0_ref, cur0_ref, mg_ref, affk0_ref, affe0_ref, free_ref,
          cluster_ref, ep_ref, inst_ref, slot_ref, ok_ref,
          loadout_ref, curout_ref, sreq_ref, stx_ref, cnt_ref,
-         load_s, held_s, cur_s, icnt_s, sreq_s, stx_s, cnt_s) = refs
+         affk_ref, affe_ref,
+         load_s, held_s, cur_s, icnt_s, sreq_s, stx_s, cnt_s,
+         affk_s, affe_s) = refs
     i = pl.program_id(0)
 
     @pl.when(i == 0)
@@ -267,6 +274,11 @@ def _admit_kernel(*refs, block_r: int, commit: bool, fold: str):
         sreq_s[...] = jnp.zeros_like(sreq_s)
         stx_s[...] = jnp.zeros_like(stx_s)
         cnt_s[...] = jnp.zeros_like(cnt_s)
+        # session-affinity cache rides in VMEM scratch across the grid —
+        # the same carried-map trick as the load counters, so a flow
+        # pinned in tile i sticks for every request of tile i+1
+        affk_s[...] = affk0_ref[...]
+        affe_s[...] = affe0_ref[...]
         if commit:
             # the pool rides in whole-array output blocks revisited by every
             # grid step: seed from the incoming pool, fold writes per tile
@@ -334,91 +346,47 @@ def _admit_kernel(*refs, block_r: int, commit: bool, fold: str):
         return jnp.argmax(eok & (cum_e == (k + 1)[:, None]),
                           axis=1).astype(jnp.int32)
 
-    # ---- stage 2: policy dispatch ------------------------------------- #
-    # round-robin (carried cursor + arrival rank ≡ cursor++ per request)
-    # and random (host-precomputed draw, keeps the host PRNG stream) both
-    # cycle a modular index over the eligible set — one shared kth() remap
-    k_cyc = jnp.where(policy == POLICY_RANDOM, rnd_ref[...],
-                      cur_s[...][cl] + rank_c) % cnt1
-
-    # weighted: Gumbel-max over log-weights (noise precomputed on host)
-    def wt():
-        w = jnp.where(eok, ew_ref[eidx], 0.0)
-        return jnp.argmax(jnp.where(eok, jnp.log(w + 1e-9) + gum_ref[...],
-                                    -jnp.inf), axis=1).astype(jnp.int32)
-
-    # least-request, sequentially consistent: request with cluster rank ρ
-    # owns the ρ-th smallest ticket of {load_j + t : t ≥ 0} ordered by
-    # (value, j) — find the ticket value v, then take the m-th endpoint
-    # among those with load_j <= v.  Loads are assumed non-negative (they
-    # count outstanding requests).
-    def lr_segment():
-        # per-CLUSTER water-fill tables: every request of a cluster shares
-        # the same tile-start load multiset, so the ticket geometry —
-        # sorted eligible loads ``cls_``, inclusive prefix ``cpin``,
-        # segment starts ``cS`` (tickets below level ls[k]) — is computed
-        # once per cluster on (CL, WE) arrays (tiny) and each request only
-        # gathers scalars from it: k* engaged endpoints where
-        # cS[k*] ≤ ρ < cS[k*+1], then v = ⌈(ρ+1+Σ_{i<k*} l_i)/k*⌉ − 1.
-        # BIG lanes clamp to lo+BR so they never engage (and the prefix
-        # sums stay far from int32 range for sane load counters ≥ 0).
-        load = jnp.where(eok, load_s[...][eidx], BIG)  # (BR, WE)
-        cwin = jax.lax.broadcasted_iota(jnp.int32, (CL, WE), 1)
-        ceidx = jnp.clip(cs_ref[...][:, None] + cwin, 0, E - 1)
-        ceok = (cwin < cc_ref[...][:, None]) & (ed_ref[ceidx] == 0)
-        cload = jnp.where(ceok, load_s[...][ceidx], BIG)
-        clo = jnp.min(cload, axis=1)
-        cls_ = jnp.sort(jnp.minimum(cload, clo[:, None] + block_r), axis=1)
-        cpin = jnp.cumsum(cls_, axis=1)                # inclusive prefix
-        cS = (cwin + 1) * cls_ - cpin                  # nondecreasing
-        kstar = jnp.sum((cS[cl] <= rank_c[:, None]).astype(jnp.int32),
-                        axis=1)                        # ≥ 1 (cS[0] == 0)
-        pk = cpin.reshape(-1)[cl * WE + kstar - 1]     # Σ engaged loads
-        v = (rank_c + pk + kstar) // kstar - 1
-        n_prev = kstar * v - pk                        # tickets below v
-        return lr_pick(load, v, n_prev)
-
-    def lr_onehot():
-        # static-depth binary search (the Mosaic-lowerable form: a fixed
-        # loop of masked window reductions, no sort)
-        load = jnp.where(eok, load_s[...][eidx], BIG)  # (BR, WE)
-        lo = jnp.min(load, axis=1)
-        hi = lo + rank_c
-        tgt = rank_c + 1
-        for _ in range(max(block_r, 2).bit_length()):
-            mid = (lo + hi) // 2
-            n_mid = jnp.sum(jnp.maximum(mid[:, None] - load + 1, 0), axis=1)
-            ge = n_mid >= tgt
-            hi = jnp.where(ge, mid, hi)
-            lo = jnp.where(ge, lo, mid + 1)
-        v = lo
-        n_prev = jnp.sum(jnp.maximum(v[:, None] - load, 0), axis=1)
-        return lr_pick(load, v, n_prev)
-
-    def lr_pick(load, v, n_prev):
-        m = rank_c - n_prev                # rank among value-v ties
-        elig = (load <= v[:, None])
-        ec = jnp.cumsum(elig.astype(jnp.int32), axis=1)
-        return jnp.argmax(elig & (ec == (m + 1)[:, None]),
-                          axis=1).astype(jnp.int32)
-
     if fold == "segment":
-        # policy-gated dispatch: work for a policy no cluster in the table
-        # uses is skipped at runtime (the taken lax.cond branch only), and
-        # the k-th-eligible remap is skipped while nothing drains
-        cyc_off = jax.lax.cond(any_dr, lambda: kth(k_cyc), lambda: k_cyc)
-        wt_off = jax.lax.cond(jnp.any(cp_ref[...] == POLICY_WEIGHTED),
-                              wt, zoff)
-        lr_off = jax.lax.cond(jnp.any(cp_ref[...] == POLICY_LEAST_REQUEST),
-                              lr_segment, zoff)
+        # the k-th-eligible remap is skipped while nothing drains (kth is
+        # the identity on modular indices then — branches are bit-equal)
+        def cyc(k):
+            return jax.lax.cond(any_dr, lambda: kth(k), lambda: k)
     else:
-        cyc_off = kth(k_cyc)
-        wt_off = wt()
-        lr_off = lr_onehot()
+        cyc = kth
 
-    off = jnp.select(
-        [policy == POLICY_LEAST_REQUEST, policy == POLICY_WEIGHTED],
-        [lr_off, wt_off], cyc_off).astype(jnp.int32)
+    # ---- stage 2: policy dispatch (the registry seam, DESIGN.md §9) --- #
+    # every policy's selection math lives in core/policy_defs.py as ONE
+    # ``kernel_offset`` hook serving both folds; this kernel only builds
+    # the ctx (eligibility windows, fold helpers, carried counters) and
+    # folds the per-policy window offsets through one jnp.select.  Under
+    # the segment fold, gated policies no cluster uses are skipped at
+    # runtime (the taken lax.cond branch only).
+    ctx = policy_defs.KernelCtx(
+        fold=fold, block_r=block_r, policy=policy, cl=cl,
+        routable=routable, rank_c=rank_c, estart=estart, count=count,
+        cnt1=cnt1, cnt2=cnt2, eidx=eidx, eok=eok,
+        rnd=rnd_ref[...], fkey=fkey_ref[...], gum=gum_ref[...],
+        loads=load_s[...], ew=ew_ref[...], ed=ed_ref[...],
+        cs_vec=cs_ref[...], cc_vec=cc_ref[...], cur_cl=cur_s[...][cl],
+        mg_tab=mg_ref[...], aff_key=affk_s[...], aff_ep=affe_s[...],
+        kth=kth, cyc=cyc,
+        seg_rank=functools.partial(_seg_rank, fold=fold, block_r=block_r))
+
+    default_off = None
+    conds, offs = [], []
+    for p in policy_defs.REGISTRY:
+        fn = (lambda p=p: p.kernel_offset(ctx).astype(jnp.int32))
+        if fold == "segment" and p.gate:
+            o_p = jax.lax.cond(jnp.any(cp_ref[...] == p.enum), fn, zoff)
+        else:
+            o_p = fn()
+        if p.enum == 0:                 # rr doubles as the unknown-policy
+            default_off = o_p           # fallback (oracle parity)
+        else:
+            conds.append(policy == p.enum)
+            offs.append(o_p)
+
+    off = jnp.select(conds, offs, default_off).astype(jnp.int32)
     ep = jnp.take_along_axis(eidx, off[:, None], axis=1)[:, 0]
     ep = jnp.where(routable, ep, -1)
     epc = jnp.maximum(ep, 0)
@@ -481,6 +449,19 @@ def _admit_kernel(*refs, block_r: int, commit: bool, fold: str):
         commit_fold(plen_ref, jnp.zeros_like(slot))
         commit_fold(ptok_ref, tok_ref[...])
 
+    # ---- session-affinity cache fold (policy_defs owns the write rule:
+    # first writer per slot, never evicting a live flow) — gated like the
+    # other policies under the segment fold ---------------------------- #
+    if fold == "segment":
+        affk_new, affe_new = jax.lax.cond(
+            jnp.any(cp_ref[...] == POLICY_AFFINITY),
+            lambda: policy_defs.affinity_kernel_update(ctx, ep),
+            lambda: (affk_s[...], affe_s[...]))
+    else:
+        affk_new, affe_new = policy_defs.affinity_kernel_update(ctx, ep)
+    affk_s[...] = affk_new
+    affe_s[...] = affe_new
+
     # ---- carried LB state + fused metrics (tiled segment folds) ------- #
     one = jnp.ones((block_r,), jnp.int32)
     ep_ids = jnp.where(routable, epc, E)               # masked rows drop
@@ -512,6 +493,8 @@ def _admit_kernel(*refs, block_r: int, commit: bool, fold: str):
         sreq_ref[...] = sreq_s[...]
         stx_ref[...] = stx_s[...]
         cnt_ref[...] = cnt_s[...]
+        affk_ref[...] = affk_s[...]
+        affe_ref[...] = affe_s[...]
 
 
 class AdmitCommitResult(NamedTuple):
@@ -528,6 +511,8 @@ class AdmitCommitResult(NamedTuple):
     svc_tx_bytes: jax.Array
     no_route: jax.Array
     held: jax.Array
+    aff_key: jax.Array       # (AFFINITY_SLOTS,) i32
+    aff_ep: jax.Array        # (AFFINITY_SLOTS,) i32
     pool_req_id: jax.Array   # (I, C) i32
     pool_endpoint: jax.Array
     pool_svc: jax.Array
@@ -568,24 +553,30 @@ def _launch_admit(req_id, svc, features, msg_bytes, state, free_i32, rnd,
     R, req_id, svc, features, msg_bytes, rnd, gumbel, token = _pad_rows(
         block_r, req_id, svc, features, msg_bytes, rnd, gumbel, token)
     grid = (R // block_r,)
+    # flow ids are derived OUTSIDE the kernel (plain jnp, padded rows
+    # included) so the kernel, the staged chain, the oracle and the host
+    # router all hash through the one policy_defs.flow_hash
+    fkey = policy_defs.flow_hash(features).astype(jnp.int32)
     tables = [state.svc_rule_start, state.svc_rule_count, state.rule_field,
               state.rule_value, state.rule_cluster, state.cluster_ep_start,
               state.cluster_ep_count, state.cluster_policy,
               state.ep_instance, state.ep_weight, state.ep_drained,
-              state.ep_load, state.rr_cursor, free_i32]
+              state.ep_load, state.rr_cursor, state.maglev_table,
+              state.aff_key, state.aff_ep, free_i32]
     S = state.svc_rule_start.shape[0]
     CL = state.cluster_ep_count.shape[0]
     E = state.ep_load.shape[0]
+    A = state.aff_key.shape[0]
     I, C = free_i32.shape
     req = pl.BlockSpec((block_r,), lambda r: (r,))
     in_arrays = [req_id.astype(jnp.int32), svc.astype(jnp.int32), features,
                  msg_bytes.astype(jnp.int32), rnd.astype(jnp.int32),
-                 gumbel.astype(jnp.float32)]
+                 gumbel.astype(jnp.float32), fkey]
     in_specs = [req, req,
                 pl.BlockSpec((block_r, F), lambda r: (r, 0)),
                 req, req,
                 pl.BlockSpec((block_r, MAX_EPS_PER_CLUSTER),
-                             lambda r: (r, 0))]
+                             lambda r: (r, 0)), req]
     if commit:
         in_arrays.append(token.astype(jnp.int32))
         in_specs.append(req)
@@ -596,13 +587,16 @@ def _launch_admit(req_id, svc, features, msg_bytes, state, free_i32, rnd,
         in_specs += [_table_spec((I, C))] * 5
     out_specs = [req] * 5 + [_table_spec((E,)), _table_spec((CL,)),
                              _table_spec((S,)), _table_spec((S,)),
-                             _table_spec((2,))]
+                             _table_spec((2,)),
+                             _table_spec((A,)), _table_spec((A,))]
     out_shape = [jax.ShapeDtypeStruct((R,), jnp.int32)] * 5 \
         + [jax.ShapeDtypeStruct((E,), jnp.int32),
            jax.ShapeDtypeStruct((CL,), jnp.int32),
            jax.ShapeDtypeStruct((S,), jnp.int32),
            jax.ShapeDtypeStruct((S,), jnp.int32),
-           jax.ShapeDtypeStruct((2,), jnp.int32)]
+           jax.ShapeDtypeStruct((2,), jnp.int32),
+           jax.ShapeDtypeStruct((A,), jnp.int32),
+           jax.ShapeDtypeStruct((A,), jnp.int32)]
     if commit:
         out_specs += [_table_spec((I, C))] * 6
         out_shape += [jax.ShapeDtypeStruct((I, C), jnp.int32)] * 6
@@ -619,7 +613,9 @@ def _launch_admit(req_id, svc, features, msg_bytes, state, free_i32, rnd,
                         pltpu.VMEM((I,), jnp.int32),
                         pltpu.VMEM((S,), jnp.int32),
                         pltpu.VMEM((S,), jnp.int32),
-                        pltpu.VMEM((2,), jnp.int32)],
+                        pltpu.VMEM((2,), jnp.int32),
+                        pltpu.VMEM((A,), jnp.int32),
+                        pltpu.VMEM((A,), jnp.int32)],
         interpret=resolve_interpret(interpret),
     )(*in_arrays)
     head = (o[0][:R0], o[1][:R0], o[2][:R0], o[3][:R0], o[4][:R0],
@@ -650,7 +646,8 @@ def admit(req_id, svc, features, msg_bytes, state, free_mask, rnd, gumbel, *,
         return AdmitResult(
             z, z, z, z, z, state.ep_load,
             state.rr_cursor % jnp.maximum(state.cluster_ep_count, 1),
-            zs, zs, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+            zs, zs, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            state.aff_key, state.aff_ep)
     block_r = min(block_r, R0)
     # booleanize: the kernel cumsums the mask as per-slot counts, so an
     # integer mask cell > 1 would double-count free slots
@@ -686,7 +683,7 @@ def admit_commit(req_id, svc, features, msg_bytes, token, state,
             z, z, z, z, z, state.ep_load,
             state.rr_cursor % jnp.maximum(state.cluster_ep_count, 1),
             zs, zs, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
-            *pool, active_i32)
+            state.aff_key, state.aff_ep, *pool, active_i32)
     block_r = min(block_r, R0)
     o = _launch_admit(req_id, svc, features, msg_bytes, state,
                       1 - active_i32, rnd, gumbel, token, pool,

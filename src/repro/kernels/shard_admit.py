@@ -53,9 +53,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.compat import axis_size, shard_map
-from repro.core import relay, router
-from repro.core.routing_table import (MAX_EPS_PER_CLUSTER,
-                                      POLICY_LEAST_REQUEST, RoutingState)
+from repro.core import policy_defs, relay, router
+from repro.core.routing_table import MAX_EPS_PER_CLUSTER, RoutingState
 from repro.kernels import completion as _cp
 from repro.kernels import route_match as _rm
 from repro.kernels.backend import resolve_fold, resolve_interpret
@@ -111,8 +110,12 @@ def waterfill_lr(state: RoutingState, k_cl: jax.Array) -> jax.Array:
     extra = (engaged & (cum <= m_rem[:, None])).astype(jnp.int32)
     real = jnp.where(ceok, state.ep_load[ceidx], 0)
     newl = jnp.maximum(real, v[:, None]) + extra
-    apply = ceok & (state.cluster_policy == POLICY_LEAST_REQUEST)[:, None] \
-        & (k > 0)[:, None]
+    # registry merge rule: every policy whose shard_merge is "waterfill"
+    # carries its load counters through this closed form (policy_defs)
+    is_wf = jnp.zeros_like(state.cluster_policy, dtype=bool)
+    for _e in policy_defs.WATERFILL_ENUMS:
+        is_wf = is_wf | (state.cluster_policy == _e)
+    apply = ceok & is_wf[:, None] & (k > 0)[:, None]
     # windows are disjoint, so every applied lane owns a unique slot
     tgt = jnp.where(apply, ceidx, E).reshape(-1)
     return state.ep_load.at[tgt].set(newl.reshape(-1), mode="drop")
@@ -181,7 +184,8 @@ def _shard_body(rid, sv, feats, mb, tok, rnd, gum, state: RoutingState,
         return AdmitResult(
             neg, neg, neg, neg, z, adj_load,
             adj_cur % jnp.maximum(state.cluster_ep_count, 1), zs, zs,
-            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+            jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            state.aff_key, state.aff_ep)
 
     res = jax.lax.cond(jnp.any(valid), run, skip, 0)
 
@@ -218,6 +222,25 @@ def _shard_body(rid, sv, feats, mb, tok, rnd, gum, state: RoutingState,
     rr_cursor = (state.rr_cursor + total_cl) \
         % jnp.maximum(state.cluster_ep_count, 1)
 
+    # affinity-cache reconciliation: each shard's local kernel wrote its
+    # cache against the same replicated snapshot, and the miss fallback is a
+    # pure function of the flow key (policy_defs: snapshot-pure semantics),
+    # so concurrent proposals for one slot agree on the value whenever the
+    # sequential reference would have produced a hit.  Shard-major merge:
+    # the lowest shard proposing a change to a slot wins — exactly the
+    # first-writer rule of the concatenated sequential batch.
+    gk = jax.lax.all_gather(res.aff_key, axis)              # (M, A)
+    ge = jax.lax.all_gather(res.aff_ep, axis)
+    prop = (gk != state.aff_key[None, :]) | (ge != state.aff_ep[None, :])
+    has = jnp.any(prop, axis=0)
+    m1 = jnp.argmax(prop, axis=0)              # first shard with a proposal
+    aff_key = jnp.where(has,
+                        jnp.take_along_axis(gk, m1[None, :], axis=0)[0],
+                        state.aff_key)
+    aff_ep = jnp.where(has,
+                       jnp.take_along_axis(ge, m1[None, :], axis=0)[0],
+                       state.aff_ep)
+
     # ---- phase 5: relay pool commits to their owner shards -------------- #
     # payload rows (req_id, endpoint, svc, token, slot, ok) counting-sorted
     # into per-instance pools, one all_to_all hop moves each pool to the
@@ -242,6 +265,7 @@ def _shard_body(rid, sv, feats, mb, tok, rnd, gum, state: RoutingState,
 
     return (cluster, res.endpoint, res.instance, slot, ok.astype(jnp.int32),
             ep_load, rr_cursor, sreq, stx, no_route, held_n,
+            aff_key, aff_ep,
             preq, pep, psvc, plen, ptok, pact)
 
 
@@ -260,7 +284,7 @@ def _build(mesh, axis: str, R_loc: int, block_r: int, fold: str,
     f = shard_map(
         body, mesh=mesh,
         in_specs=(sh, sh, sh, sh, sh, sh, sh, rep) + (sh,) * 6,
-        out_specs=(sh,) * 5 + (rep,) * 6 + (sh,) * 6,
+        out_specs=(sh,) * 5 + (rep,) * 8 + (sh,) * 6,
         check_vma=False)
     return jax.jit(f)
 
@@ -299,6 +323,7 @@ def admit_commit_sharded(req_id, svc, features, msg_bytes, token,
             z, z, z, z, z, state.ep_load,
             state.rr_cursor % jnp.maximum(state.cluster_ep_count, 1),
             zs, zs, jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32),
+            state.aff_key, state.aff_ep,
             *pool, active_i32)
     R = -(-R0 // M) * M
     token = jnp.zeros((R0,), jnp.int32) if token is None else token

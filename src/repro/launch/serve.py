@@ -19,7 +19,7 @@ import numpy as np
 from repro.configs import ASSIGNED_ARCHS, get_config, smoke_config
 from repro.core.balancer import ENGINE_KINDS, make_balancer
 from repro.core.control import ControlPlane
-from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST, Rule,
+from repro.core.routing_table import (POLICY_NAMES, Cluster, Rule,
                                       ServiceConfig)
 from repro.models import model as M
 from repro.runtime.serve_loop import Request, ServeLoop
@@ -34,6 +34,10 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=24)
+    ap.add_argument("--policy", default="least_request",
+                    choices=sorted(POLICY_NAMES),
+                    help="load-balancing policy for the serving cluster "
+                    "(the registry in core/policy_defs.py)")
     ap.add_argument("--shards", type=int, default=1,
                     help="shard the admission batch + pool over an M-way "
                     "mesh axis (xlb engine only; needs M devices — off-TPU "
@@ -48,7 +52,7 @@ def main(argv=None) -> int:
     cp = ControlPlane(
         [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
         [Cluster("pool", endpoints=list(range(args.instances)),
-                 policy=POLICY_LEAST_REQUEST)])
+                 policy=POLICY_NAMES[args.policy])])
     kw = {}
     if args.shards > 1:
         if args.engine != "xlb":

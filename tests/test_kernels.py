@@ -8,7 +8,8 @@ import pytest
 from repro.core.balancer import PoolState, RequestBatch
 from repro.kernels import ops, ref
 from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, Cluster,
-                                      POLICY_LEAST_REQUEST, POLICY_RANDOM,
+                                      POLICY_AFFINITY, POLICY_LEAST_REQUEST,
+                                      POLICY_MAGLEV, POLICY_RANDOM,
                                       POLICY_RR, POLICY_WEIGHTED, Rule,
                                       ServiceConfig, build_state)
 
@@ -684,24 +685,32 @@ def _drain_state(policy):
 
 @pytest.mark.parametrize("fold", ["onehot", "segment"])
 @pytest.mark.parametrize("policy", [POLICY_RR, POLICY_RANDOM,
-                                    POLICY_LEAST_REQUEST, POLICY_WEIGHTED])
+                                    POLICY_LEAST_REQUEST, POLICY_WEIGHTED,
+                                    POLICY_MAGLEV, POLICY_AFFINITY])
 def test_admit_drained_endpoint_gets_no_traffic(policy, fold):
     """The ControlPlane drain mask stops NEW traffic under EVERY policy in
     the fused kernel (the pre-mask gap: only WEIGHTED honored weight→0) —
     and stays bit-exact vs the oracle, including across tile boundaries
-    (the raw-cursor carry)."""
+    (the raw-cursor carry).  For maglev/affinity the drain bit was raised
+    WITHOUT rebuilding the Maglev table (``_drain_state`` flips the mask
+    post-build), so the table still claims the drained offset — this pins
+    the defensive drained-check-before-table-trust in every lowering."""
     st = _drain_state(policy)
     R = 32
     rid = jnp.arange(R, dtype=jnp.int32)
     z = jnp.zeros((R,), jnp.int32)
+    # varied features → varied flow keys, so the hash policies spray the
+    # whole table instead of collapsing onto one entry
+    feats = jax.random.randint(jax.random.PRNGKey(9), (R, 8), 0, 997,
+                               dtype=jnp.int32)
     rnd = jax.random.randint(jax.random.PRNGKey(7), (R,), 0, 1 << 30,
                              dtype=jnp.int32)
     gum = jax.random.gumbel(jax.random.PRNGKey(8),
                             (R, MAX_EPS_PER_CLUSTER), jnp.float32)
     free = jnp.ones((3, 16), bool)
-    got = ops.admit(_rb(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1), st,
+    got = ops.admit(_rb(rid, z, feats, z + 1), st,
                     free, rnd, gum, block_r=8, fold=fold)
-    want = ref.admit_ref(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1, st,
+    want = ref.admit_ref(rid, z, feats, z + 1, st,
                          free, rnd, gum)
     _assert_admit_matches(got, want)
     eps = np.asarray(got.endpoint)
@@ -711,21 +720,28 @@ def test_admit_drained_endpoint_gets_no_traffic(policy, fold):
 
 
 @pytest.mark.parametrize("fold", ["onehot", "segment"])
-def test_admit_fully_drained_cluster_unroutable(fold):
+@pytest.mark.parametrize("policy", [POLICY_RR, POLICY_MAGLEV,
+                                    POLICY_AFFINITY])
+def test_admit_fully_drained_cluster_unroutable(policy, fold):
     """Every endpoint draining ≡ empty cluster: unroutable, no counters
-    touched, no held/no_route miscounts — bit-exact vs the oracle."""
+    touched, no held/no_route miscounts — bit-exact vs the oracle.  Under
+    the hash policies the un-rebuilt Maglev table still claims both
+    offsets, so this pins the drain mask beating the table lookup (a
+    drained entry must yield NO_ROUTE, never a drained endpoint)."""
     services = [ServiceConfig("s", rules=[Rule(0, None, "pool")])]
-    clusters = [Cluster("pool", endpoints=[0, 1], policy=POLICY_RR)]
+    clusters = [Cluster("pool", endpoints=[0, 1], policy=policy)]
     st, _ = build_state(services, clusters)
     st = st._replace(ep_drained=st.ep_drained.at[:2].set(1))
     R = 8
     rid = jnp.arange(R, dtype=jnp.int32)
     z = jnp.zeros((R,), jnp.int32)
+    feats = jax.random.randint(jax.random.PRNGKey(5), (R, 8), 0, 997,
+                               dtype=jnp.int32)
     gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
     free = jnp.ones((2, 4), bool)
-    got = ops.admit(_rb(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1), st,
+    got = ops.admit(_rb(rid, z, feats, z + 1), st,
                     free, z, gum, fold=fold)
-    want = ref.admit_ref(rid, z, jnp.zeros((R, 8), jnp.int32), z + 1, st,
+    want = ref.admit_ref(rid, z, feats, z + 1, st,
                          free, z, gum)
     _assert_admit_matches(got, want)
     assert (np.asarray(got.endpoint) == -1).all()
@@ -733,6 +749,86 @@ def test_admit_fully_drained_cluster_unroutable(fold):
     assert int(np.asarray(got.no_route)) == 0
     np.testing.assert_array_equal(np.asarray(got.ep_load),
                                   np.asarray(st.ep_load))
+
+
+def _hash_state(seed: int = 11):
+    """Two wildcard services: svc0 → 4-endpoint MAGLEV cluster, svc1 →
+    3-endpoint AFFINITY cluster; one maglev endpoint drained post-build
+    (table un-rebuilt → the in-kernel fallback path fires for its keys)."""
+    services = [ServiceConfig("s0", rules=[Rule(1, None, "mg")]),
+                ServiceConfig("s1", rules=[Rule(1, None, "af")])]
+    clusters = [Cluster("mg", endpoints=[0, 1, 2, 3], policy=POLICY_MAGLEV),
+                Cluster("af", endpoints=[4, 5, 6], policy=POLICY_AFFINITY)]
+    st, ids = build_state(services, clusters)
+    load = jax.random.randint(jax.random.PRNGKey(seed), st.ep_load.shape,
+                              0, 7)
+    st = st._replace(ep_load=load.astype(jnp.int32),
+                     ep_drained=st.ep_drained.at[2].set(1))
+    return st, ids
+
+
+def _hash_batch(R: int, seed: int):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    svc = jax.random.randint(ks[0], (R,), 0, 2)
+    feats = jax.random.randint(ks[1], (R, 8), 0, 61, dtype=jnp.int32)
+    rid = jnp.where(jax.random.bernoulli(ks[2], 0.9, (R,)),
+                    jnp.arange(R), -1).astype(jnp.int32)
+    rnd = jax.random.randint(ks[3], (R,), 0, 1 << 30, dtype=jnp.int32)
+    gum = jax.random.gumbel(ks[4], (R, MAX_EPS_PER_CLUSTER), jnp.float32)
+    return rid, svc, feats, rnd, gum
+
+
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
+@pytest.mark.parametrize("R,block_r", [(64, 64), (128, 32)])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_admit_hash_policies_match_oracle(R, block_r, seed, fold):
+    """Maglev + affinity vs the sequential oracle under both folds and
+    multi-tile scratch carry: table hits, drained-entry fallbacks, affinity
+    cache writes with intra-batch slot contention (first writer wins) —
+    every output field including the aff_key/aff_ep cache arrays."""
+    st, _ = _hash_state(seed=seed + 30)
+    rid, svc, feats, rnd, gum = _hash_batch(R, seed)
+    free = jax.random.bernoulli(jax.random.PRNGKey(seed + 40), 0.7, (7, 8))
+    got = ops.admit(_rb(rid, svc, feats, jnp.abs(rid) + 1), st, free, rnd,
+                    gum, block_r=block_r, fold=fold)
+    want = ref.admit_ref(rid, svc, feats, jnp.abs(rid) + 1, st, free, rnd,
+                         gum)
+    _assert_admit_matches(got, want)
+    assert int(np.asarray(got.ok).sum()) > 0
+    # the batch populated the affinity cache
+    assert int((np.asarray(got.aff_ep) >= 0).sum()) > 0
+
+
+@pytest.mark.parametrize("fold", ["onehot", "segment"])
+def test_admit_affinity_sticks_across_batches(fold):
+    """Sticky sessions: a key cached by batch 1 routes to the SAME endpoint
+    in batch 2 even after the Maglev table is torn out from under it (the
+    hit path never consults the table) — the cache, not hash luck, owns
+    the repeat-flow routing decision."""
+    from repro.core.policy_defs import AFFINITY_SLOTS, flow_hash
+    services = [ServiceConfig("s", rules=[Rule(1, None, "af")])]
+    clusters = [Cluster("af", endpoints=[0, 1, 2, 3],
+                        policy=POLICY_AFFINITY)]
+    st, _ = build_state(services, clusters)
+    R = 48
+    rid = jnp.arange(R, dtype=jnp.int32)
+    z = jnp.zeros((R,), jnp.int32)
+    feats = jax.random.randint(jax.random.PRNGKey(3), (R, 8), 0, 997,
+                               dtype=jnp.int32)
+    gum = jnp.zeros((R, MAX_EPS_PER_CLUSTER), jnp.float32)
+    free = jnp.ones((4, 16), bool)
+    one = ops.admit(_rb(rid, z, feats, z + 1), st, free, z, gum, fold=fold)
+    st2 = st._replace(ep_load=one.ep_load, rr_cursor=one.rr_cursor,
+                      aff_key=one.aff_key, aff_ep=one.aff_ep,
+                      maglev_table=jnp.full_like(st.maglev_table, -1))
+    two = ops.admit(_rb(rid, z, feats, z + 1), st2, free, z, gum, fold=fold)
+    keys = np.asarray(flow_hash(np.asarray(feats)))
+    ak = np.asarray(one.aff_key)
+    cached = ak[keys % AFFINITY_SLOTS] == keys   # rows batch 1 cached
+    assert cached.sum() > 0
+    e1, e2 = np.asarray(one.endpoint), np.asarray(two.endpoint)
+    np.testing.assert_array_equal(e1[cached], e2[cached])
+    assert (e2[cached] >= 0).all()
 
 
 # --------------------------------------------------------------------------- #

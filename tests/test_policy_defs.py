@@ -1,0 +1,244 @@
+"""The policy-dispatch seam (core/policy_defs.py, DESIGN.md §9).
+
+Pins the registry's single-source-of-truth contract (kernel / oracle /
+staged / host enums can never diverge), the flow-hash parity between the
+numpy and jnp lowerings, and the consistent-hash properties of the Maglev
+table under live ControlPlane transactions: bounded key remap on add /
+drain / remove, slot-ownership uniformity, affinity-cache invalidation on
+drain, and sticky-session survival across a window relocation."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import policy_defs
+from repro.core.control import ControlPlane, apply_plan
+from repro.core.routing_table import (AFFINITY_SLOTS, MAGLEV_TABLE_SIZE,
+                                      Cluster, Rule, ServiceConfig)
+
+
+def _cp(n_eps: int = 8, policy: int = policy_defs.POLICY_MAGLEV):
+    return ControlPlane(
+        [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
+        [Cluster("pool", endpoints=list(range(n_eps)), policy=policy)])
+
+
+class Consumer:
+    def __init__(self, cp: ControlPlane):
+        self.routing = cp.snapshot()
+        cp.attach(self)
+
+    def apply_refresh(self, plan):
+        self.routing = apply_plan(self.routing, plan)
+
+
+# --------------------------------------------------------------------------- #
+# registry single-source-of-truth
+# --------------------------------------------------------------------------- #
+
+
+def test_enum_single_source_across_datapaths():
+    """Every datapath's policy constants ARE the registry's — importing
+    route_match / ref / policies / routing_table can never yield a
+    diverged enum (the import-time asserts in policy_defs back this up)."""
+    from repro.core import routing_table
+    from repro.kernels import route_match  # noqa: F401 (kernel imports live)
+
+    for name, enum in policy_defs.POLICY_NAMES.items():
+        const = getattr(policy_defs, f"POLICY_{name.upper()}")
+        assert const == enum
+        assert getattr(routing_table, f"POLICY_{name.upper()}") == enum
+        assert policy_defs.BY_ENUM[enum].name == name
+    # dense, ordered, and every entry carries all four lowering hooks and a
+    # shard merge rule
+    enums = [p.enum for p in policy_defs.REGISTRY]
+    assert enums == list(range(len(policy_defs.REGISTRY)))
+    for p in policy_defs.REGISTRY:
+        assert callable(p.kernel_offset) and callable(p.oracle_pick)
+        assert callable(p.staged_offset) and callable(p.host_pick)
+        assert p.shard_merge in ("cursor", "waterfill", "none")
+    assert policy_defs.WATERFILL_ENUMS == tuple(
+        p.enum for p in policy_defs.REGISTRY if p.shard_merge == "waterfill")
+
+
+def test_flow_hash_numpy_jnp_parity():
+    feats = (np.arange(64, dtype=np.int64).reshape(8, 8)
+             * 2654435761 % 997).astype(np.int32)
+    h_np = policy_defs.flow_hash(feats)
+    h_jnp = np.asarray(policy_defs.flow_hash(jnp.asarray(feats)))
+    np.testing.assert_array_equal(np.asarray(h_np), h_jnp)
+    assert (h_np >= 0).all()                   # masked to non-negative i32
+    # 1-D (single request, the sidecar host path) agrees with the batch
+    one = policy_defs.flow_hash(feats[3])
+    assert int(one) == int(h_np[3])
+
+
+# --------------------------------------------------------------------------- #
+# Maglev consistent-hash properties (live ControlPlane transactions)
+# --------------------------------------------------------------------------- #
+
+
+def _row(cp, cid=0):
+    return np.asarray(cp.snapshot().maglev_table[cid]).copy()
+
+
+def test_maglev_slot_ownership_uniform():
+    """Canonical Maglev balance: every eligible endpoint owns T/E slots
+    within 5% of ideal (the paper-grade uniformity bound)."""
+    cp = _cp(n_eps=8)
+    row = _row(cp)
+    assert (row >= 0).all() and (row < 8).all()
+    counts = np.bincount(row, minlength=8)
+    ideal = MAGLEV_TABLE_SIZE / 8
+    assert counts.max() <= ideal * 1.05 and counts.min() >= ideal * 0.95
+
+
+def test_maglev_empty_and_fully_drained_rows_stay_empty():
+    cp = _cp(n_eps=3)
+    assert (_row(cp, cid=1) == -1).all()       # no such cluster
+    for i in range(3):                         # health drain: never reaped,
+        cp.drain_endpoint("pool", i, reason="health")   # rows stay present
+    assert (_row(cp) == -1).all()              # fully drained: NO_ROUTE row
+
+
+def test_maglev_bounded_remap_across_txn_sequence():
+    """The consistent-hash acceptance bound: across a sequence of
+    add / drain / undrain / remove transactions, each step remaps at most
+    ~2/E of the keys (slots) that stay assigned — endpoints untouched by
+    the delta keep their claims."""
+    cp = _cp(n_eps=8)
+    prev = _row(cp)
+
+    def step(fn, e_after):
+        nonlocal prev
+        fn()
+        cur = _row(cp)
+        both = (prev >= 0) & (cur >= 0)
+        moved = (prev != cur) & both
+        frac = moved.sum() / max(both.sum(), 1)
+        assert frac <= 2.0 / e_after, (
+            f"remapped {frac:.3f} of keys, bound {2.0 / e_after:.3f}")
+        prev = cur
+
+    step(lambda: cp.add_endpoint("pool", instance=100), 9)
+    step(lambda: cp.drain_endpoint("pool", 3, reason="health"), 8)
+    step(lambda: cp.undrain_endpoint("pool", 3), 9)
+    step(lambda: cp.remove_endpoint("pool", 5), 8)
+    step(lambda: cp.add_endpoint("pool", instance=101), 9)
+
+
+def test_maglev_unrelated_cluster_rows_never_churn():
+    """A transaction against one cluster must not rebuild (or even touch)
+    another cluster's row — the incremental per-row diff in _commit."""
+    cp = ControlPlane(
+        [ServiceConfig("svc", rules=[Rule(0, None, "a")])],
+        [Cluster("a", endpoints=[0, 1, 2],
+                 policy=policy_defs.POLICY_MAGLEV),
+         Cluster("b", endpoints=[3, 4, 5],
+                 policy=policy_defs.POLICY_MAGLEV)])
+    b0 = _row(cp, cid=cp.cluster_id("b"))
+    cp.add_endpoint("a", instance=9)
+    cp.drain_endpoint("a", 1)
+    np.testing.assert_array_equal(_row(cp, cid=cp.cluster_id("b")), b0)
+
+
+def test_maglev_survives_window_relocation():
+    """Window relocation (grow past capacity) moves every endpoint's slot
+    but not its window offset or identity — the row's claims survive except
+    the ~1/E the new endpoint takes."""
+    cp = ControlPlane(
+        [ServiceConfig("svc", rules=[Rule(0, None, "a")])],
+        [Cluster("a", endpoints=[0, 1], policy=policy_defs.POLICY_MAGLEV),
+         Cluster("b", endpoints=[2, 3], policy=policy_defs.POLICY_MAGLEV)])
+    prev = _row(cp)
+    start0 = int(cp.snapshot().cluster_ep_start[0])
+    with cp.transaction():                     # full (cap 2): relocates
+        cp.add_endpoint("a", instance=9)
+    assert int(cp.snapshot().cluster_ep_start[0]) != start0
+    cur = _row(cp)
+    moved = (prev != cur) & (prev >= 0) & (cur >= 0)
+    assert moved.sum() / MAGLEV_TABLE_SIZE <= 2.0 / 3.0 + 0.05
+    # surviving endpoints keep ≥ their fair share minus the newcomer's cut
+    assert (cur == 0).sum() > 0 and (cur == 1).sum() > 0
+
+
+# --------------------------------------------------------------------------- #
+# affinity cache across control-plane transactions
+# --------------------------------------------------------------------------- #
+
+
+def _seed_affinity(c: Consumer, entries):
+    ak = np.full((AFFINITY_SLOTS,), -1, np.int32)
+    ae = np.full((AFFINITY_SLOTS,), -1, np.int32)
+    for key, ep in entries:
+        ak[key % AFFINITY_SLOTS] = key
+        ae[key % AFFINITY_SLOTS] = ep
+    c.routing = c.routing._replace(aff_key=jnp.asarray(ak),
+                                   aff_ep=jnp.asarray(ae))
+
+
+def test_affinity_cache_invalidated_on_drain():
+    cp = _cp(n_eps=4, policy=policy_defs.POLICY_AFFINITY)
+    c = Consumer(cp)
+    _seed_affinity(c, [(7, 1), (8, 2)])        # two sticky sessions
+    cp.drain_endpoint("pool", 1)               # ep slot 1 drains
+    ak = np.asarray(c.routing.aff_key)
+    ae = np.asarray(c.routing.aff_ep)
+    assert ak[7] == -1 and ae[7] == -1         # drained session evicted
+    assert ak[8] == 8 and ae[8] == 2           # unrelated session survives
+
+
+def test_affinity_cache_invalidated_on_remove():
+    cp = _cp(n_eps=4, policy=policy_defs.POLICY_AFFINITY)
+    c = Consumer(cp)
+    _seed_affinity(c, [(5, 3)])
+    cp.remove_endpoint("pool", 3)
+    assert int(c.routing.aff_key[5]) == -1
+    assert int(c.routing.aff_ep[5]) == -1
+
+
+def test_affinity_cache_survives_window_relocation():
+    """A relocation/compaction that MOVES the endpoint must carry the
+    sticky session to the new slot, not evict it (remap via ep_dst)."""
+    cp = ControlPlane(
+        [ServiceConfig("svc", rules=[Rule(0, None, "a")])],
+        [Cluster("a", endpoints=[0, 1],
+                 policy=policy_defs.POLICY_AFFINITY),
+         Cluster("b", endpoints=[2, 3],
+                 policy=policy_defs.POLICY_AFFINITY)])
+    c = Consumer(cp)
+    slot0 = cp.endpoint_slot("a", 1)
+    _seed_affinity(c, [(9, slot0)])
+    with cp.transaction():                     # full: window relocates
+        cp.add_endpoint("a", instance=7)
+    new_slot = cp.endpoint_slot("a", 1)
+    assert new_slot != slot0
+    assert int(c.routing.aff_key[9]) == 9      # session survived ...
+    assert int(c.routing.aff_ep[9]) == new_slot   # ... at the new slot
+
+
+def test_maglev_oracle_selection_tracks_table():
+    """End-to-end key→endpoint selection through the oracle hook: every key
+    lands on a live endpoint, and re-selection after a drain never lands on
+    the drained one while remapping only the drained endpoint's keys."""
+    cp = _cp(n_eps=4)
+    st = cp.snapshot()
+
+    def pick_all(st):
+        o = policy_defs.OracleCtx(
+            cs=np.asarray(st.cluster_ep_start, np.int64),
+            cc=np.asarray(st.cluster_ep_count, np.int64),
+            E=int(st.ep_load.shape[0]),
+            drained=np.asarray(st.ep_drained, np.int64),
+            mg=np.asarray(st.maglev_table, np.int64),
+            T=int(st.maglev_table.shape[1]),
+            fkey=np.arange(500, dtype=np.int64) * 2654435761 % (1 << 31))
+        elig = [j for j in range(4) if o.drained[j] == 0]
+        return np.array([policy_defs._maglev_oracle(o, r, 0, elig)
+                         for r in range(500)])
+    before = pick_all(st)
+    assert set(np.unique(before)) <= {0, 1, 2, 3}
+    cp.drain_endpoint("pool", 2, reason="health")   # drained, not reaped
+    after = pick_all(cp.snapshot())
+    assert 2 not in set(np.unique(after))      # drained: zero traffic
+    stay = before != 2
+    assert (before[stay] == after[stay]).mean() >= 1.0 - 2.0 / 4.0

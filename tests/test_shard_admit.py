@@ -29,7 +29,8 @@ from repro.core import control
 from repro.core.balancer import PoolState, RequestBatch
 from repro.core.routing_table import (MAX_ENDPOINTS, MAX_EPS_PER_CLUSTER,
                                       MAX_SERVICES, N_FEATURES, Cluster,
-                                      POLICY_LEAST_REQUEST, POLICY_RANDOM,
+                                      POLICY_AFFINITY, POLICY_LEAST_REQUEST,
+                                      POLICY_MAGLEV, POLICY_RANDOM,
                                       POLICY_RR, POLICY_WEIGHTED, Rule,
                                       ServiceConfig, build_state, fnv1a)
 from repro.kernels import ops, ref
@@ -37,22 +38,27 @@ from repro.kernels.shard_admit import waterfill_lr
 
 
 def _rich_state():
-    """All four policies + a no-rule service + preloaded counters + a drain
-    on an endpoint shared by three clusters."""
+    """All six policies + a no-rule service + preloaded counters + a drain
+    on an endpoint shared by three clusters + a drained maglev window slot
+    whose table row was NOT rebuilt (the defensive fallback path)."""
     svcs = [ServiceConfig("a", rules=[Rule(0, "x", "rr"), Rule(1, "y", "lr"),
                                       Rule(0, None, "wt")]),
-            ServiceConfig("b", rules=[Rule(2, "z", "rnd")])]
+            ServiceConfig("b", rules=[Rule(2, "z", "rnd"),
+                                      Rule(3, "m", "mg"),
+                                      Rule(1, None, "af")])]
     cls = [Cluster("rr", endpoints=[0, 1, 2], policy=POLICY_RR),
            Cluster("lr", endpoints=[1, 2, 3], policy=POLICY_LEAST_REQUEST),
            Cluster("wt", endpoints=[0, 3], policy=POLICY_WEIGHTED,
                    weights=[0.2, 5.0]),
-           Cluster("rnd", endpoints=[2, 0], policy=POLICY_RANDOM)]
+           Cluster("rnd", endpoints=[2, 0], policy=POLICY_RANDOM),
+           Cluster("mg", endpoints=[0, 1, 2, 3], policy=POLICY_MAGLEV),
+           Cluster("af", endpoints=[3, 1, 2], policy=POLICY_AFFINITY)]
     st, _ = build_state(svcs, cls)
     return st._replace(
         ep_load=st.ep_load.at[:8].set(
             jnp.asarray([3, 0, 2, 1, 0, 0, 0, 0], jnp.int32)),
         rr_cursor=st.rr_cursor.at[0].set(2),
-        ep_drained=st.ep_drained.at[1].set(1))
+        ep_drained=st.ep_drained.at[1].set(1).at[11].set(1))
 
 
 def _batch(R, seed, pad_slice=None):
@@ -67,7 +73,19 @@ def _batch(R, seed, pad_slice=None):
         jax.random.bernoulli(ks[2], .5, (R,)), fnv1a("x"), 0))
     feats = feats.at[:, 1].set(jnp.where(
         jax.random.bernoulli(ks[3], .5, (R,)), fnv1a("y"), 0))
-    feats = feats.at[:, 2].set(fnv1a("z"))
+    feats = feats.at[:, 2].set(jnp.where(
+        jax.random.bernoulli(jax.random.fold_in(ks[2], 1), .5, (R,)),
+        fnv1a("z"), 0))
+    feats = feats.at[:, 3].set(jnp.where(
+        jax.random.bernoulli(jax.random.fold_in(ks[3], 1), .5, (R,)),
+        fnv1a("m"), 0))
+    # flow-key diversity for the hash policies + repeated flows that land
+    # on DIFFERENT shards (same key, same pick — reconciliation agreement)
+    feats = feats.at[:, 4].set(
+        jax.random.randint(jax.random.fold_in(ks[2], 2), (R,), 0, 997))
+    if R >= 8:
+        feats = feats.at[1::7].set(feats[0])
+        svc = svc.at[1::7].set(svc[0])
     mb = jax.random.randint(ks[4], (R,), 1, 500, dtype=jnp.int32)
     tok = jax.random.randint(ks[5], (R,), 2, 90, dtype=jnp.int32)
     rnd = jax.random.randint(ks[6], (R,), 0, 1 << 30, dtype=jnp.int32)
@@ -312,6 +330,21 @@ for R, seed, pad, pseed, pact, label in scenarios:
     print(f"sweep OK: {label} (held={int(want.held)}, "
           f"no_route={int(want.no_route)})")
 
+# hash policies at volume: the affinity cache fills (intra-batch writes,
+# repeated flows split across shards), maglev fallback fires for the
+# drained un-rebuilt table slot — and the lowest-shard-wins cache
+# reconciliation reproduces the single-shard result bit-exactly
+st = T._rich_state()
+reqs, rnd, gum = T._batch(128, 41)
+pool = T._pool(4, 5, 23, p_active=0.3)
+want = ops.admit_commit(reqs, st, pool, rnd, gum)
+assert int((np.asarray(want.aff_ep) >= 0).sum()) > 0   # cache populated
+for M in (2, 4):
+    got = ops.admit_commit_sharded(reqs, st, pool, rnd, gum,
+                                   mesh=make_mesh((M,), ("shard",)))
+    T._assert_same(want, got, f"hash policies M={M}")
+print("sweep OK: maglev+affinity reconcile bit-exact at M in {2,4}")
+
 # fully-drained cluster is unroutable on every shard
 st = T._rich_state()
 st = st._replace(ep_drained=st.ep_drained.at[6:8].set(1))  # drain 'rnd'
@@ -454,6 +487,7 @@ def test_sharded_admission_subprocess():
     for marker in ("sweep OK: all-padding shard",
                    "sweep OK: uneven queues",
                    "sweep OK: ragged R=52",
+                   "sweep OK: maglev+affinity reconcile",
                    "sweep OK: fully-drained cluster",
                    "complete OK: sharded health EWMAs",
                    "oracle OK: admit_sharded_ref",
