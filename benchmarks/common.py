@@ -72,26 +72,48 @@ class Service:
     purely length-driven — the deterministic setting the degraded scenario
     measures latency in).  ``fault`` is an optional
     ``runtime.serve_loop.FaultInjector`` applied to the pool before every
-    step (progress rollback: the fault-injection harness)."""
+    step (progress rollback: the fault-injection harness); ``shaper`` is
+    the per-request analogue (``workload.generators.ServiceTimeShaper`` —
+    heavy-tailed service times through the same rollback model).
+    ``batch_fn(req_ids, pad_to)`` builds the admission batch (default: the
+    uniform ``request_batch``; a ``Workload.request_batch`` gives per-flow
+    feature entropy).  ``shards > 1`` runs the xlb engine's mesh-sharded
+    admission datapath (needs that many devices).  Per-request engine-tick
+    samples land in ``submit_tick`` / ``admit_tick`` / ``done_tick``."""
 
     def __init__(self, mode: str, n_instances: int, slots: int,
                  tokens_per_req: int, admit_batch: int = 16, eos: int = 1,
-                 fault=None):
+                 fault=None, shaper=None, policy: int = POLICY_LEAST_REQUEST,
+                 shards: int = 1, batch_fn=None):
+        kw = {}
+        if shards > 1:
+            if mode != "xlb":
+                raise ValueError("shards > 1 needs the in-graph engine "
+                                 "(the sidecars route on the host)")
+            from repro.launch.mesh import make_shard_mesh
+            kw = dict(shards=shards, shard_mesh=make_shard_mesh(shards))
         self.eng = make_balancer(mode, CFG, n_instances, slots,
-                                 max_len=tokens_per_req + 1, eos=eos)
-        self.cp = build_cp(n_instances)
+                                 max_len=tokens_per_req + 1, eos=eos, **kw)
+        self.cp = build_cp(n_instances, policy)
         self.state = self.eng.init_state(self.cp.snapshot(),
                                          dtype=jnp.float32)
         self.cp.attach(self)
         self.serve = self.eng.make_jitted(donate=False)
         self.admit_batch = admit_batch
+        self.batch_fn = batch_fn or request_batch
         self.queue: list[int] = []
         self.dropped: list[int] = []        # gave up after max retries
         self._retries: dict[int, int] = {}
         self.stats = HopStats()
         self.fault = fault
+        self.shaper = shaper
         self.tick_no = 0                    # absolute ticks (never reset —
         #                                     fault schedules key off it)
+        # per-request tick samples (workload/slo.py): submit / first slot /
+        # completion, all in this service's absolute engine ticks
+        self.submit_tick: dict[int, int] = {}
+        self.admit_tick: dict[int, int] = {}
+        self.done_tick: dict[int, int] = {}
 
     # control-plane consumer hooks (cp.attach) ------------------------- #
     @property
@@ -103,7 +125,10 @@ class Service:
 
     # ------------------------------------------------------------------ #
     def submit(self, req_ids):
-        self.queue.extend(int(r) for r in req_ids)
+        for r in req_ids:
+            r = int(r)
+            self.queue.append(r)
+            self.submit_tick.setdefault(r, self.tick_no)
 
     def tick(self) -> list[int]:
         """One engine step. Returns req_ids completed this tick."""
@@ -112,10 +137,14 @@ class Service:
             pool = self.fault.apply(self.state.pool, self.tick_no)
             if pool is not self.state.pool:  # back BEFORE the step, so a
                 self.state = self.state._replace(pool=pool)  # held slot
+        if self.shaper is not None:         # heavy-tailed service times:
+            pool = self.shaper.apply(self.state.pool, self.tick_no)
+            if pool is not self.state.pool:  # same rollback model, keyed
+                self.state = self.state._replace(pool=pool)  # per req_id
         self.tick_no += 1                   # can't complete this tick
         take = self.queue[: self.admit_batch]
         self.queue = self.queue[self.admit_batch:]
-        reqs = request_batch(take, self.admit_batch)
+        reqs = self.batch_fn(take, self.admit_batch)
         t0 = time.perf_counter()
         self.state, out = self.serve(PARAMS, self.state, reqs)
         jax.block_until_ready(out["emitted"])
@@ -125,11 +154,16 @@ class Service:
         ids = np.asarray(out["req_id"])          # ids serviced this tick
         finished = [int(x) for x in ids[done & (ids >= 0)]]
         self.stats.completed += len(finished)
+        now = self.tick_no - 1                   # tick this step ran at
+        for r in finished:
+            self.done_tick[r] = now
         # held / unroutable arrivals re-queue (uniform across engines) up
         # to the same 64-retry budget ServeLoop uses; past it they land on
         # ``dropped`` so a misconfigured bench fails visibly instead of
         # spinning to max_ticks
         serviced = set(int(x) for x in ids[ids >= 0])
+        for r in serviced:
+            self.admit_tick.setdefault(r, now)
         retry = []
         for r in take:
             if r in serviced:
@@ -240,18 +274,15 @@ def run_degraded(mode: str = "xlb", *, n_instances: int = 4, slots: int = 4,
         trip_after=2, cooldown=cooldown, recover_after=2,
         probe_patience=10), clusters=["pool"])
     v0 = svc.cp.version
-    submit_t: dict[int, int] = {}
-    done_t: dict[int, int] = {}
+    submit_t = svc.submit_tick              # per-request engine-tick samples
+    done_t = svc.done_tick                  # recorded by the Service itself
     rid = 0
     eject_tick = uneject_tick = None
     for t in range(total_ticks):
         wave = list(range(rid, rid + arrivals_per_tick))
         rid += len(wave)
         svc.submit(wave)
-        for r in wave:
-            submit_t[r] = t
-        for r in svc.tick():
-            done_t[r] = t
+        svc.tick()
         if (t + 1) % epoch_interval == 0:
             pol.epoch(svc.routing)
             st = pol.state_of("pool", sick)
@@ -261,11 +292,12 @@ def run_degraded(mode: str = "xlb", *, n_instances: int = 4, slots: int = 4,
                     and st == CLOSED:
                 uneject_tick = t
 
+    from repro.workload.slo import percentiles
     lat = {r: done_t[r] - submit_t[r] for r in done_t}
 
     def p99(lo, hi):
         xs = [lat[r] for r, d in done_t.items() if lo <= d < hi]
-        return float(np.percentile(xs, 99)) if xs else float("nan")
+        return percentiles(np.asarray(xs, np.int64))["p99"]
 
     # stragglers stuck on the slow instance at ejection time finish within
     # ~tokens·factor ticks; the recovered window starts after they clear
@@ -324,6 +356,62 @@ def run_chain(mode: str, *, chain_len: int, n_requests: int = 16,
             "req_per_s": len(done_t) / wall if wall else 0.0,
             "avg_ms": 1e3 * float(np.mean(lat)) if lat else float("nan"),
             "wall_s": wall}
+
+
+def run_chain_scenario(mode: str, *, depth: int = 3, workload=None,
+                       ops=None, label: str = "chain",
+                       n_instances: int = 2, slots: int = 8,
+                       tokens_per_req: int = 2, admit_batch: int = 8,
+                       policy: int = POLICY_LEAST_REQUEST, shards: int = 1,
+                       faults: dict | None = None,
+                       max_ticks: int = 4000) -> dict:
+    """The workload-subsystem chain driver (DESIGN.md §10): a generated
+    request stream through a depth-D service chain, each hop behind its own
+    balancer, with an optional live-ops scenario replayed mid-load.
+
+    Latency is deterministic engine ticks (``eos=-1``): end-to-end =
+    submit at hop 0 → completion at hop D-1, per-hop admit→done recorded
+    too.  Returns ``{"result": ChainResult, "row": <scenario row>}`` — the
+    row is schema-validated and ready for ``append_scenario_row``.
+    ``faults`` maps hop → FaultInjector (composable with the scenario)."""
+    from repro.workload import (ChainRunner, PoissonArrivals,
+                                ScenarioDriver, Workload, percentiles,
+                                scenario_row)
+    if workload is None:
+        workload = Workload(PoissonArrivals(rate=2.0, seed=11),
+                            n_requests=24, vocab=CFG.vocab)
+    faults = faults or {}
+    hops = [Service(mode, n_instances, slots, tokens_per_req,
+                    admit_batch=admit_batch, eos=-1, policy=policy,
+                    shards=shards, fault=faults.get(k),
+                    shaper=workload.shaper(tokens_per_req, hop=k),
+                    batch_fn=workload.request_batch)
+            for k in range(depth)]
+    warm(*hops)
+    scenario = None
+    if ops:
+        scenario = ScenarioDriver([h.cp for h in hops], ops,
+                                  max_instances=n_instances)
+    res = ChainRunner(hops, workload, scenario=scenario,
+                      max_ticks=max_ticks).run()
+    arr = type(workload.arrivals).__name__.removesuffix("Arrivals").lower()
+    extra = {"ops": len(ops or []),
+             "txns": scenario.txns if scenario else 0,
+             "rate": float(workload.arrivals.rate),
+             "scale": float(workload.arrivals.scale),
+             "per_hop_p99_ticks": [percentiles(res.hop_samples(k))["p99"]
+                                   for k in range(depth)]}
+    if shards > 1:
+        extra["shards"] = shards
+    if workload.service is not None:
+        extra["service"] = type(workload.service).__name__ \
+            .removesuffix("ServiceTimes").lower()
+    row = scenario_row(label, mode, depth=depth,
+                       seed=workload.arrivals.seed, arrivals=arr,
+                       n_requests=res.n_submitted, completed=res.completed,
+                       dropped=res.dropped, ticks=res.ticks,
+                       samples=res.samples(), **extra)
+    return {"result": res, "row": row}
 
 
 def run_graph(mode: str, graph: ServiceGraph, *, n_requests: int = 12,

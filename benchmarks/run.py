@@ -476,6 +476,128 @@ def bench_degraded():
     _gate_degraded(r)
 
 
+def _chain_workload(n_requests: int = 24, seed: int = 11,
+                    rate: float = 2.0):
+    """The canonical chain workload: fixed-seed Poisson arrivals — every
+    chain bench / gate / replay test draws this exact request stream."""
+    from benchmarks import common
+    from repro.workload import PoissonArrivals, Workload
+    return Workload(PoissonArrivals(rate=rate, seed=seed),
+                    n_requests=n_requests, vocab=common.CFG.vocab)
+
+
+def bench_chain():
+    """The workload-subsystem chain scenario (DESIGN.md §10): a seeded
+    Poisson stream through a depth-3 service chain on all three engines,
+    end-to-end latency in deterministic engine ticks (submit at hop 0 →
+    completion at hop 2), plus an xlb live-ops leg replaying a mid-run
+    canary shift and an elastic scale-down/up.  Writes BENCH_chain.json,
+    appends schema-validated scenario rows to BENCH_TREND.jsonl (the rows
+    experiments/make_report.py renders as SLO tables), and gates xlb's
+    chain p99 against both sidecars."""
+    from benchmarks import common
+    from repro.core.routing_table import POLICY_WEIGHTED
+    from repro.workload import Op, append_scenario_row
+    depth = 3
+    rows = []
+    for mode in MODES:
+        r = common.run_chain_scenario(mode, depth=depth,
+                                      workload=_chain_workload())["row"]
+        for k in ("p50_ticks", "p99_ticks", "p999_ticks"):
+            emit("chain", mode, k, r[k])
+        emit("chain", mode, "completed", r["completed"])
+        emit("chain", mode, "ticks", r["ticks"])
+        rows.append(r)
+    ops = [Op(6, "canary", hop=1, args={"instance": 1, "pct": 75.0}),
+           Op(10, "scale", hop=2, args={"target": 1}),
+           Op(16, "scale", hop=2, args={"target": 2})]
+    live = common.run_chain_scenario("xlb", depth=depth,
+                                     workload=_chain_workload(), ops=ops,
+                                     policy=POLICY_WEIGHTED,
+                                     label="chain_liveops")["row"]
+    emit("chain", "xlb", "liveops_p99_ticks", live["p99_ticks"])
+    emit("chain", "xlb", "liveops_txns", live["txns"])
+    rows.append(live)
+    _gate_chain([r for r in rows if r["scenario"] == "chain"])
+    with open("BENCH_chain.json", "w") as f:
+        json.dump({"depth": depth, "rows": rows}, f, indent=2)
+        f.write("\n")
+    print("# wrote BENCH_chain.json", flush=True)
+    for r in rows:
+        append_scenario_row(r)
+    print(f"# appended {len(rows)} scenario rows to BENCH_TREND.jsonl",
+          flush=True)
+
+
+def _gate_chain(rows: list) -> None:
+    """The chain SLO gate (ROADMAP): at depth >= 3 the in-graph datapath's
+    end-to-end p99 must not exceed either sidecar's — per-hop interposition
+    compounds with chain length, and holding even there is the paper's
+    central claim.  Tick latencies are deterministic, so this is an exact
+    comparison, not a noisy-timer heuristic."""
+    by = {r["mode"]: r for r in rows}
+    fails = []
+    missing = [m for m in MODES if m not in by]
+    if missing:
+        sys.exit(f"check: chain gate FAILED — no rows for {missing}")
+    xlb = by["xlb"]
+    if xlb["completed"] < xlb["n_requests"]:
+        fails.append(f"xlb completed {xlb['completed']}/"
+                     f"{xlb['n_requests']} (stalled or dropped)")
+    for side in ("istio", "cilium"):
+        if not xlb["p99_ticks"] <= by[side]["p99_ticks"]:   # NaN fails too
+            fails.append(f"xlb chain p99 {xlb['p99_ticks']:.1f} ticks > "
+                         f"{side} {by[side]['p99_ticks']:.1f} at depth "
+                         f"{xlb['depth']}")
+    if fails:
+        sys.exit("check: chain gate FAILED — " + "; ".join(fails))
+    print(f"# check: chain gate OK — depth {xlb['depth']} p99 ticks "
+          + " ".join(f"{m}={by[m]['p99_ticks']:.1f}" for m in MODES),
+          flush=True)
+
+
+def check_chain(shards: int = 2) -> None:
+    """--check leg for the workload/chain subsystem: the depth-3 seeded
+    chain must run to completion on all three engines, replay bit-identical
+    under the fixed seed, pass the xlb p99 gate, and drive every hop
+    through the mesh-sharded admission datapath (--shards 2 on a virtual
+    host mesh, in a subprocess)."""
+    from benchmarks import common
+    depth, n_req = 3, 8
+    rows = {}
+    for mode in MODES:
+        r = common.run_chain_scenario(
+            mode, depth=depth,
+            workload=_chain_workload(n_requests=n_req))["row"]
+        if r["completed"] != r["n_requests"]:
+            sys.exit(f"check: chain smoke FAILED — {mode} completed "
+                     f"{r['completed']}/{r['n_requests']}")
+        print(f"# check: chain smoke OK — {mode} {r['completed']}/"
+              f"{r['n_requests']} in {r['ticks']} ticks", flush=True)
+        rows[mode] = r
+    replay = common.run_chain_scenario(
+        "xlb", depth=depth,
+        workload=_chain_workload(n_requests=n_req))["row"]
+    if replay != rows["xlb"]:
+        drift = sorted(k for k in replay
+                       if replay[k] != rows["xlb"].get(k))
+        sys.exit(f"check: chain replay FAILED — scenario row drifted "
+                 f"under the same seed on {drift}")
+    print("# check: chain replay OK — bit-identical scenario row under "
+          "seed 11", flush=True)
+    _gate_chain(list(rows.values()))
+    code = ("import sys; from benchmarks.common import run_chain_scenario; "
+            "from benchmarks.run import _chain_workload; "
+            f"out = run_chain_scenario('xlb', depth={depth}, "
+            f"shards={shards}, workload=_chain_workload("
+            f"n_requests={n_req})); "
+            f"sys.exit(0 if out['row']['completed'] == {n_req} else 1)")
+    _run_on_host_mesh(["-c", code], shards,
+                      what="check: sharded chain smoke")
+    print(f"# check: sharded chain smoke OK — xlb --shards {shards} "
+          f"{n_req}/{n_req}", flush=True)
+
+
 def _gate_degraded(r: dict) -> None:
     """The closed-loop health gate (ROADMAP): after the fault clears the
     loop must have recovered on its own — tail latency back near baseline,
@@ -599,6 +721,7 @@ def check_gates(remeasured: bool = False) -> None:
     smoke_shards()
     smoke_policies()
     check_degraded()
+    check_chain()
 
 
 def smoke_engines() -> None:
@@ -662,7 +785,7 @@ def smoke_policies(shards: int = 2) -> None:
 
 BENCHES = {
     "admit": bench_admit, "step": bench_step, "shard": bench_shard,
-    "degraded": bench_degraded,
+    "degraded": bench_degraded, "chain": bench_chain,
     "table1": bench_table1, "table2": bench_table2, "fig5": bench_fig5,
     "fig6": bench_fig6, "fig7": bench_fig7, "fig8": bench_fig8,
     "fig9": bench_fig9, "fig10": bench_fig10, "fig11": bench_fig11,

@@ -209,6 +209,49 @@ def paper_claims_section():
     return "\n".join(lines)
 
 
+def scenario_slo_section():
+    """SLO tail tables from the workload subsystem's scenario rows in
+    BENCH_TREND.jsonl (bench == "scenario"; benchmarks/run.py chain).
+    Latencies are deterministic engine ticks — identical seed, identical
+    table.  Only the latest row per (scenario, mode, depth, seed) is
+    shown; the JSONL keeps the full history."""
+    path = os.path.join(ROOT, "BENCH_TREND.jsonl")
+    if not os.path.exists(path):
+        return ("## §Scenario SLOs\n\n(run `PYTHONPATH=src python -m "
+                "benchmarks.run chain` first)")
+    rows = {}
+    for line in open(path):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            r = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if r.get("bench") == "scenario":
+            rows[(r["scenario"], r["mode"], r["depth"], r["seed"])] = r
+    if not rows:
+        return ("## §Scenario SLOs\n\n(no scenario rows yet — run "
+                "`PYTHONPATH=src python -m benchmarks.run chain`)")
+    import sys
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    from repro.workload.slo import format_slo_table
+    ordered = [rows[k] for k in sorted(rows)]
+    lines = ["## §Scenario SLOs — workload subsystem (DESIGN.md §10)",
+             "",
+             "Per-request end-to-end latency through a depth-D service "
+             "chain, in deterministic engine ticks (admit at hop 0 → "
+             "completion at hop D-1; `eos=-1` makes completion purely "
+             "length-driven). `chain` is the plain seeded Poisson stream "
+             "the chain gate compares engines on; `chain_liveops` replays "
+             "a mid-run canary shift + elastic scale-down/up against the "
+             "xlb chain. Rows come from BENCH_TREND.jsonl "
+             "(schema-validated at append time).",
+             "",
+             format_slo_table(ordered)]
+    return "\n".join(lines)
+
+
 def main():
     single, multi = load("16x16"), load("2x16x16")
     ok_s = sum(1 for r in single.values() if "roofline" in r)
@@ -224,7 +267,8 @@ def main():
         "",
     ]
     body = [dryrun_section(single, multi), "", roofline_section(single), "",
-            perf_section(), "", paper_claims_section()]
+            perf_section(), "", paper_claims_section(), "",
+            scenario_slo_section()]
     with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
         f.write("\n".join(head + body) + "\n")
     print("wrote EXPERIMENTS.md")

@@ -316,6 +316,11 @@ class ControlPlane:
                  int(store.cfg["ep_instance"][d.win.start + j]))
                 for j in range(n)]
 
+    def cluster_policy(self, name: str) -> int:
+        """The cluster's LB policy id (core/routing_table POLICY_*)."""
+        store = self._txn.store if self._txn is not None else self._store
+        return int(store.cfg["cluster_policy"][store.clusters[name].id])
+
     def endpoint_weight(self, cluster: str, instance: int) -> float:
         store = self._txn.store if self._txn is not None else self._store
         slot = self._find_slot(store, cluster, instance)

@@ -73,6 +73,16 @@ class HealthConfig:
     probe_weight: float = 0.1   # trickle weight during the half-open probe
     min_probe_tput: float = 0.05  # a probe must actually complete requests
     #                               at this EWMA rate to count as healthy
+    # Graded-weight mode (WEIGHTED clusters only): continuously scale each
+    # serving endpoint's weight by peer-median/latency instead of waiting
+    # for the breaker's binary verdict — the paper's weighted-LB analogue
+    # of gradual backend demotion.
+    graded_weights: bool = False
+    graded_floor: float = 0.25  # weight floor: demoted, never starved
+    #                             (full removal stays the breaker's job)
+    graded_alpha: float = 0.5   # EWMA smoothing toward the target weight
+    graded_deadband: float = 0.05  # skip commits within this of the live
+    #                                weight — the no-flap band
 
 
 @dataclasses.dataclass
@@ -109,6 +119,7 @@ class HealthPolicy:
         self.cfg = cfg or HealthConfig()
         self.clusters = clusters            # None = every cluster
         self.breakers: dict[tuple[str, int], _Breaker] = {}
+        self._gw: dict[tuple[str, int], float] = {}  # graded smoothed weights
         self.epochs = 0
         self.commits = 0
         self.events: list[tuple] = []       # (epoch, action...) audit trail
@@ -203,6 +214,41 @@ class HealthPolicy:
             budget -= 1
         return acts
 
+    def _graded_cluster(self, name: str, lat: np.ndarray) -> list[tuple]:
+        """Graded-weight mode: nudge each serving endpoint's weight toward
+        ``clip(peer_median / latency, graded_floor, 1.0)`` — a
+        slow-but-not-sick endpoint sheds load *continuously* instead of
+        waiting for the breaker's binary verdict.  WEIGHTED clusters only
+        (the other policies never read ``ep_weight``).  The smoothed weight
+        is EWMA'd (``graded_alpha``) and only committed when it moved past
+        ``graded_deadband`` from the live weight, so a steady fleet
+        converges and then stops producing transactions (no-flap).
+        Endpoints that are not CLOSED, are draining, or have no data keep
+        their weight — graded mode never fights the breaker."""
+        from repro.core.routing_table import POLICY_WEIGHTED
+        if self.cp.cluster_policy(name) != POLICY_WEIGHTED:
+            return []
+        cfg = self.cfg
+        members = self.cp.cluster_members(name)
+        acts: list[tuple] = []
+        for slot, inst in members:
+            if self.state_of(name, inst) != CLOSED \
+                    or self.cp.drain_reason(name, inst) is not None:
+                continue
+            l = float(lat[slot])
+            med = self._peer_median(name, members, lat, inst)
+            if l <= 0.0 or med <= 0.0:
+                continue                    # no data: leave the weight alone
+            target = float(np.clip(med / l, cfg.graded_floor, 1.0))
+            prev = self._gw.get(
+                (name, inst), float(self.cp.endpoint_weight(name, inst)))
+            w = (1.0 - cfg.graded_alpha) * prev + cfg.graded_alpha * target
+            self._gw[(name, inst)] = w
+            if abs(w - float(self.cp.endpoint_weight(name, inst))) \
+                    > cfg.graded_deadband:
+                acts.append(("weight", name, inst, w))
+        return acts
+
     # ------------------------------------------------------------------ #
     def epoch(self, routing) -> list[tuple]:
         """One daemon tick: read EWMAs → run breakers → one transaction."""
@@ -216,6 +262,8 @@ class HealthPolicy:
         actions: list[tuple] = []
         for name in names:
             actions += self._epoch_cluster(name, lat)
+            if self.cfg.graded_weights:
+                actions += self._graded_cluster(name, lat)
         if actions:
             with self.cp.transaction():
                 for act in actions:
@@ -224,6 +272,8 @@ class HealthPolicy:
                         self.cp.drain_endpoint(name, inst, reason="health")
                     elif kind == "probe":
                         self.cp.undrain_endpoint(name, inst, weight=act[3])
+                    elif kind == "weight":
+                        self.cp.set_weight(name, inst, act[3])
                     elif kind == "close":
                         # an operator may have staged a weight while the
                         # breaker was open (set_weight doesn't un-eject);

@@ -1,11 +1,17 @@
-"""Elastic scaling: reshard a live state pytree onto a different mesh.
+"""Elastic scaling: reshard a live state pytree onto a different mesh, and
+scale a serving fleet's endpoint set through the ControlPlane.
 
 Because (a) checkpoints are mesh-agnostic (host npz + key paths) and (b) the
 data pipeline is step-indexed, scaling from e.g. (data=16, model=16) to
 (data=8, model=16) is: build the new MeshSpec → recompute shardings →
 device_put every leaf.  No collective resharding program is required on CPU;
 on a real fleet this is the jax.device_put cross-mesh path.
-"""
+
+``scale_fleet`` is the serving-side elastic event (workload scenarios,
+DESIGN.md §10): grow or shrink one cluster to a target endpoint count in a
+single ControlPlane transaction — scale-up revives draining endpoints
+before allocating fresh instance lanes, scale-down drains gracefully (the
+reaper removes the rows once their in-flight load clears)."""
 
 from __future__ import annotations
 
@@ -23,6 +29,47 @@ def reshard_params(params: Any, new_ms: MeshSpec) -> Any:
 
 def reshard_tree(tree: Any, shardings: Any) -> Any:
     return jax.tree.map(jax.device_put, tree, shardings)
+
+
+def scale_fleet(cp, cluster: str, target: int, *, max_instances: int,
+                weight: float = 1.0) -> list[tuple]:
+    """Scale ``cluster`` to ``target`` serving endpoints in ONE transaction.
+
+    Scale-up first lifts pending drains (a just-scaled-down instance comes
+    back without a table splice), then adds endpoints on unused instance
+    lanes — never past ``max_instances``, the engine pool's lane capacity.
+    Scale-down drains the highest-numbered serving instances (graceful:
+    weight 0 + drained bit now, row reaped when its load clears).  Returns
+    the action list [("undrain"|"add"|"drain", instance), ...]."""
+    if not 1 <= target <= max_instances:
+        raise ValueError(f"target {target} outside [1, {max_instances}] "
+                         f"(pool instance-lane capacity)")
+    acts: list[tuple] = []
+    with cp.transaction():
+        members = cp.cluster_members(cluster)
+        draining = sorted(i for _, i in members
+                          if cp.drain_reason(cluster, i) is not None)
+        serving = sorted(i for _, i in members if i not in draining)
+        if target > len(serving):
+            need = target - len(serving)
+            for i in draining[:need]:
+                cp.undrain_endpoint(cluster, i, weight=weight)
+                acts.append(("undrain", i))
+            need -= len(acts)
+            used = {i for _, i in members}
+            fresh = [i for i in range(max_instances) if i not in used]
+            if need > len(fresh):
+                raise ValueError(
+                    f"cannot scale {cluster!r} to {target}: only "
+                    f"{len(fresh)} free instance lanes of {max_instances}")
+            for i in fresh[:need]:
+                cp.add_endpoint(cluster, i, weight=weight)
+                acts.append(("add", i))
+        elif target < len(serving):
+            for i in serving[target - len(serving):]:
+                cp.drain_endpoint(cluster, i)
+                acts.append(("drain", i))
+    return acts
 
 
 def validate_divisibility(cfg, ms: MeshSpec, global_batch: int) -> list[str]:

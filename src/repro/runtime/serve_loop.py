@@ -39,7 +39,14 @@ class Request:
     t_submit: float = 0.0
     t_done: float = 0.0
     retries: int = 0
+    hop: int = 0                # chain position (workload/chain.py): which
+    #                             service of a call chain this admission is
     tokens: list = dataclasses.field(default_factory=list)
+    # per-request tick samples (workload/slo.py): wall clocks above are
+    # advisory; these are the deterministic engine-tick measurements
+    submit_tick: int = -1       # loop tick the request entered the ingress
+    admit_tick: int = -1        # first tick it actually held a pool slot
+    done_tick: int = -1         # tick its final token completed
 
 
 class DrainReport(NamedTuple):
@@ -120,7 +127,13 @@ class FaultInjector:
         return None if any(e is None for e in ends) else max(ends, default=0)
 
     def apply(self, pool, tick: int):
-        held = self.active(tick)
+        # clamp against the live instance window: a fault schedule written
+        # for a larger fleet (or racing an elastic scale event on the same
+        # tick) may name an instance lane the pool no longer has — numpy
+        # pools would IndexError, jax pools would silently clip to the last
+        # lane and hold the wrong instance.  Out-of-window faults are inert.
+        I = pool.length.shape[0]
+        held = [i for i in self.active(tick) if 0 <= i < I]
         if not held:
             return pool
         if isinstance(pool.length, np.ndarray):
@@ -209,7 +222,24 @@ class ServeLoop:
 
     def submit(self, req: Request) -> None:
         req.t_submit = time.perf_counter()
+        if req.submit_tick < 0:
+            req.submit_tick = self.ticks
         self.queue.append(req)
+
+    def latency_samples(self) -> dict:
+        """Per-request tick samples over the completed set (workload/slo.py
+        consumes these): ``admit_to_done`` is the engine-tick service
+        latency, ``submit_to_done`` includes ingress queueing + backoff,
+        ``retries`` is the per-request hold count.  Arrays align by row."""
+        done = [r for r in self.done if r.done_tick >= 0]
+        return {
+            "req_id": np.array([r.req_id for r in done], np.int64),
+            "admit_to_done": np.array(
+                [r.done_tick - r.admit_tick for r in done], np.int64),
+            "submit_to_done": np.array(
+                [r.done_tick - r.submit_tick for r in done], np.int64),
+            "retries": np.array([r.retries for r in done], np.int64),
+        }
 
     def _backoff(self, req: Request) -> None:
         """Park a held request until its retry matures (or drop it)."""
@@ -278,10 +308,14 @@ class ServeLoop:
                 rid = int(ids[i, s])
                 if rid >= 0 and rid in self.inflight:
                     serviced.add(rid)
-                    self.inflight[rid].tokens.append(int(emitted[i, s]))
+                    req = self.inflight[rid]
+                    if req.admit_tick < 0:    # first tick holding a slot
+                        req.admit_tick = self.ticks
+                    req.tokens.append(int(emitted[i, s]))
                     if done[i, s]:
                         r = self.inflight.pop(rid)
                         r.t_done = time.perf_counter()
+                        r.done_tick = self.ticks
                         self.done.append(r)
         # held requests (pool exhausted / unroutable this tick) re-queue —
         # the paper's bounded hold queue lives on the host ingress

@@ -1,0 +1,35 @@
+"""Workload subsystem (DESIGN.md §10): trace-style request generation,
+chained-service traversal, live-ops scenarios, and SLO tail reporting.
+
+  * ``generators``  — seeded arrival processes (Poisson / bursty ON-OFF /
+    diurnal), heavy-tailed service-time samplers (lognormal / Pareto), and
+    the ``Workload`` request factory that emits engine-compatible
+    ``RequestBatch``es.  Everything is keyed by ``(seed, tick)`` or
+    ``(seed, hop, req_id)`` — stateless draws, bit-identical replays.
+  * ``chain``       — the chained-service scenario: a completion at service
+    k synchronously admits at service k+1, the balancer is traversed once
+    per hop, end-to-end latency = sum of per-hop tick latencies.
+  * ``scenarios``   — declarative live-ops driver replaying timed
+    ControlPlane transactions mid-load (canary, blue-green, rolling
+    restart, elastic scale), composable with the fault injector.
+  * ``slo``         — p50/p99/p999 tail tables from per-request tick
+    samples + the validated BENCH_TREND.jsonl scenario-row schema.
+"""
+
+from repro.workload.chain import ChainResult, ChainRunner
+from repro.workload.generators import (BurstyArrivals, DiurnalArrivals,
+                                       FixedServiceTimes,
+                                       LognormalServiceTimes,
+                                       ParetoServiceTimes, PoissonArrivals,
+                                       ServiceTimeShaper, Workload)
+from repro.workload.scenarios import Op, ScenarioDriver, rolling_restart
+from repro.workload.slo import (append_scenario_row, percentiles,
+                                scenario_row, validate_scenario_row)
+
+__all__ = [
+    "PoissonArrivals", "BurstyArrivals", "DiurnalArrivals",
+    "LognormalServiceTimes", "ParetoServiceTimes", "FixedServiceTimes",
+    "ServiceTimeShaper", "Workload", "ChainRunner", "ChainResult",
+    "Op", "ScenarioDriver", "rolling_restart", "percentiles",
+    "scenario_row", "append_scenario_row", "validate_scenario_row",
+]

@@ -1,0 +1,143 @@
+"""SLO tail reporting: percentile tables from per-request tick samples +
+the validated BENCH_TREND.jsonl scenario-row schema.
+
+Latency samples are *engine ticks* (admit tick → done tick), the
+deterministic clock every scenario runs on — immune to host jitter, so the
+same seed reproduces the same row bit-for-bit and the chain gate can
+compare engines exactly.  Wall-clock numbers are advisory and never enter
+a scenario row.
+
+A scenario row is the one record format every workload driver appends to
+BENCH_TREND.jsonl (``bench: "scenario"``).  ``validate_scenario_row``
+rejects malformed rows *before* they reach the append-only trend file —
+a schema break fails the producing run, not a later reader.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+PCTS = (50.0, 99.0, 99.9)
+
+# Required fields of a BENCH_TREND scenario row and their types.  ``ts`` and
+# ``commit`` are stamped at append time and excluded from the deterministic
+# payload (replay tests compare rows without them).
+SCENARIO_ROW_REQUIRED = {
+    "bench": str, "scenario": str, "mode": str, "depth": int, "seed": int,
+    "arrivals": str, "n_requests": int, "completed": int, "dropped": int,
+    "ticks": int, "p50_ticks": float, "p99_ticks": float,
+    "p999_ticks": float,
+}
+SCENARIO_ROW_OPTIONAL = {
+    "service": str, "scale": float, "ops": int, "txns": int,
+    "held_first": int, "rate": float, "shards": int,
+    "mean_ticks": float, "per_hop_p99_ticks": list,
+}
+
+
+def percentiles(samples) -> dict:
+    """p50/p99/p999 (+ mean, n) of a latency sample set, NaN when empty."""
+    xs = np.asarray(list(samples), np.float64)
+    if xs.size == 0:
+        return {"n": 0, "mean": float("nan"), "p50": float("nan"),
+                "p99": float("nan"), "p999": float("nan")}
+    p50, p99, p999 = (float(np.percentile(xs, p)) for p in PCTS)
+    return {"n": int(xs.size), "mean": float(xs.mean()),
+            "p50": p50, "p99": p99, "p999": p999}
+
+
+def scenario_row(scenario: str, mode: str, *, depth: int, seed: int,
+                 arrivals: str, n_requests: int, completed: int,
+                 dropped: int, ticks: int, samples, **extra) -> dict:
+    """Build a canonical (deterministic, schema-valid) scenario row from
+    raw end-to-end tick samples.  Extra fields must be in the optional
+    schema — unknown keys are a validation error, not silent baggage."""
+    p = percentiles(samples)
+    row = {"bench": "scenario", "scenario": scenario, "mode": mode,
+           "depth": int(depth), "seed": int(seed), "arrivals": arrivals,
+           "n_requests": int(n_requests), "completed": int(completed),
+           "dropped": int(dropped), "ticks": int(ticks),
+           "p50_ticks": p["p50"], "p99_ticks": p["p99"],
+           "p999_ticks": p["p999"], "mean_ticks": p["mean"]}
+    row.update(extra)
+    validate_scenario_row(row)
+    return row
+
+
+def validate_scenario_row(row: dict) -> None:
+    """Raise ValueError on any schema violation (missing/extra/mistyped
+    fields, impossible counts, unordered percentiles)."""
+    errs = []
+    for k, t in SCENARIO_ROW_REQUIRED.items():
+        if k not in row:
+            errs.append(f"missing field {k!r}")
+        elif t is float:
+            if not isinstance(row[k], (int, float)) \
+                    or isinstance(row[k], bool):
+                errs.append(f"field {k!r} wants float, got "
+                            f"{type(row[k]).__name__}")
+        elif not isinstance(row[k], t) or isinstance(row[k], bool):
+            errs.append(f"field {k!r} wants {t.__name__}, got "
+                        f"{type(row[k]).__name__}")
+    allowed = (set(SCENARIO_ROW_REQUIRED) | set(SCENARIO_ROW_OPTIONAL)
+               | {"ts", "commit"})
+    for k in row:
+        if k not in allowed:
+            errs.append(f"unknown field {k!r}")
+        elif k in SCENARIO_ROW_OPTIONAL:
+            t = SCENARIO_ROW_OPTIONAL[k]
+            ok = isinstance(row[k], (int, float)) if t is float \
+                else isinstance(row[k], t)
+            if not ok or isinstance(row[k], bool):
+                errs.append(f"field {k!r} wants {t.__name__}, got "
+                            f"{type(row[k]).__name__}")
+    if not errs:
+        if row["bench"] != "scenario":
+            errs.append(f'bench must be "scenario", got {row["bench"]!r}')
+        if row["completed"] + row["dropped"] > row["n_requests"]:
+            errs.append("completed + dropped exceeds n_requests")
+        ps = [row["p50_ticks"], row["p99_ticks"], row["p999_ticks"]]
+        fin = [p for p in ps if not np.isnan(p)]
+        if fin != sorted(fin):
+            errs.append("percentiles not monotone (p50 <= p99 <= p999)")
+    if errs:
+        raise ValueError("invalid scenario row: " + "; ".join(errs))
+
+
+def _git_commit() -> str:
+    import subprocess
+    try:
+        return subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                              capture_output=True, text=True,
+                              timeout=10).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def append_scenario_row(row: dict, path: str = "BENCH_TREND.jsonl") -> dict:
+    """Validate, stamp (ts, commit), and append one scenario row to the
+    trend file.  Returns the stamped row."""
+    validate_scenario_row(row)
+    stamped = {"ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+               "commit": _git_commit()}
+    stamped.update(row)
+    with open(path, "a") as f:
+        f.write(json.dumps(stamped) + "\n")
+    return stamped
+
+
+def format_slo_table(rows: list[dict]) -> str:
+    """Markdown SLO table for a list of scenario rows (make_report.py)."""
+    lines = ["| scenario | mode | depth | arrivals | done/req | "
+             "p50 | p99 | p999 (ticks) |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['scenario']} | {r['mode']} | {r['depth']} | "
+            f"{r['arrivals']} | {r['completed']}/{r['n_requests']} | "
+            f"{r['p50_ticks']:.1f} | {r['p99_ticks']:.1f} | "
+            f"{r['p999_ticks']:.1f} |")
+    return "\n".join(lines)

@@ -22,7 +22,8 @@ from repro.core.control import ControlPlane
 from repro.core.health import (CLOSED, HALF_OPEN, OPEN, HealthConfig,
                                HealthPolicy, latency_estimate)
 from repro.core.routing_table import (MAX_ENDPOINTS, Cluster,
-                                      POLICY_LEAST_REQUEST, POLICY_RR, Rule,
+                                      POLICY_LEAST_REQUEST, POLICY_RR,
+                                      POLICY_WEIGHTED, Rule,
                                       ServiceConfig)
 from repro.models import model as M
 from repro.runtime.serve_loop import (Fault, FaultInjector, Request,
@@ -285,3 +286,89 @@ def test_closed_loop_ejects_and_recovers_through_live_engine():
     assert float(cp.endpoint_weight("pool", 1)) == 1.0   # weight restored
     # zero operator transactions: every version bump came from the daemon
     assert cp.version == pol.commits > 0
+
+
+# --------------------------------------------------------------------------- #
+# Graded-weight mode
+# --------------------------------------------------------------------------- #
+
+
+def _cp_weighted(n=3):
+    return ControlPlane(
+        [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
+        [Cluster("pool", endpoints=list(range(n)),
+                 policy=POLICY_WEIGHTED)])
+
+
+def test_graded_weights_monotone_in_latency_one_txn():
+    """Graded mode demotes proportionally to the in-kernel latency EWMA
+    ratio: slower endpoint => lower committed weight (floored), fast
+    endpoints stay at full weight — and the whole grade commits as ONE
+    transaction per epoch."""
+    cp = _cp_weighted(3)
+    pol = HealthPolicy(cp, HealthConfig(
+        graded_weights=True, graded_alpha=1.0, graded_deadband=0.01,
+        graded_floor=0.25), clusters=["pool"])
+    acts = pol.epoch(_obs(cp, {0: 1.0, 1: 2.0, 2: 4.0}))
+    assert all(a[0] == "weight" for a in acts)
+    assert cp.version == 1                       # one txn for the epoch
+    w = [cp.endpoint_weight("pool", i) for i in range(3)]
+    assert w[0] >= w[1] > w[2]                   # monotone in latency
+    assert w[0] == pytest.approx(1.0)            # med/lat clipped at 1.0
+    # ep2: leave-one-out median(1, 2) / 4 = 0.375
+    assert w[2] == pytest.approx(0.375)
+    assert w[2] >= 0.25                          # floor respected
+
+
+def test_graded_weights_converge_then_stop_committing():
+    """No-flap: under a steady latency profile the EWMA-smoothed weights
+    descend monotonically to the target and, once inside the deadband,
+    epochs stop producing transactions entirely."""
+    cp = _cp_weighted(3)
+    pol = HealthPolicy(cp, HealthConfig(
+        k_eject=20.0,                      # breaker stays out of the way
+        graded_weights=True, graded_alpha=0.5, graded_deadband=0.02,
+        graded_floor=0.1), clusters=["pool"])
+    obs = _obs(cp, {0: 1.0, 1: 1.0, 2: 8.0})     # target for ep2: 1/8
+    seen = []
+    for _ in range(16):
+        pol.epoch(obs)
+        seen.append(float(cp.endpoint_weight("pool", 2)))
+    assert seen == sorted(seen, reverse=True)    # monotone descent, no flap
+    assert seen[-1] == pytest.approx(0.125, abs=0.03)
+    commits_settled = pol.commits
+    for _ in range(6):                           # steady state: silent
+        pol.epoch(obs)
+    assert pol.commits == commits_settled
+    assert cp.version == commits_settled
+
+
+def test_graded_weights_skip_non_weighted_and_no_data():
+    """Graded mode only touches WEIGHTED clusters (other policies never
+    read ep_weight) and never judges endpoints without EWMA data."""
+    cp = _cp()                                   # POLICY_RR cluster
+    pol = HealthPolicy(cp, HealthConfig(graded_weights=True),
+                       clusters=["pool"])
+    assert pol.epoch(_obs(cp, {0: 1.0, 1: 1.0, 2: 2.0, 3: 2.0})) == []
+    assert cp.version == 0
+    cpw = _cp_weighted(3)
+    polw = HealthPolicy(cpw, HealthConfig(graded_weights=True),
+                        clusters=["pool"])
+    assert polw.epoch(_obs(cpw, {})) == []       # no data: nothing moves
+    assert cpw.version == 0
+
+
+def test_graded_weights_never_fight_the_breaker():
+    """An OPEN (health-drained) endpoint keeps its staged weight: the
+    graded pass skips non-CLOSED endpoints, so ejection and recovery stay
+    the breaker's exclusive job."""
+    cp = _cp_weighted(3)
+    pol = HealthPolicy(cp, HealthConfig(
+        trip_after=1, graded_weights=True, graded_alpha=1.0,
+        graded_deadband=0.01), clusters=["pool"])
+    acts = pol.epoch(_obs(cp, {0: 1.0, 1: 1.0, 2: 50.0}))
+    assert ("eject", "pool", 2) in acts
+    assert not any(a[0] == "weight" and a[2] == 2 for a in acts)
+    assert cp.drain_reason("pool", 2) == "health"
+    acts = pol.epoch(_obs(cp, {0: 1.0, 1: 1.0, 2: 50.0}))
+    assert not any(a[0] == "weight" and a[2] == 2 for a in acts)
