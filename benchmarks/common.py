@@ -34,12 +34,12 @@ KEY = jax.random.PRNGKey(42)
 PARAMS = M.init_params(CFG, KEY, dtype=jnp.float32)
 
 
-def build_cp(n_instances: int,
-             policy: int = POLICY_LEAST_REQUEST) -> ControlPlane:
+def build_cp(n_instances: int, policy: int = POLICY_LEAST_REQUEST, *,
+             lease_epochs: int = 0) -> ControlPlane:
     return ControlPlane(
         [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
         [Cluster("pool", endpoints=list(range(n_instances)),
-                 policy=policy)])
+                 policy=policy)], lease_epochs=lease_epochs)
 
 
 def build_routing(n_instances: int, policy: int = POLICY_LEAST_REQUEST):
@@ -79,12 +79,18 @@ class Service:
     uniform ``request_batch``; a ``Workload.request_batch`` gives per-flow
     feature entropy).  ``shards > 1`` runs the xlb engine's mesh-sharded
     admission datapath (needs that many devices).  Per-request engine-tick
-    samples land in ``submit_tick`` / ``admit_tick`` / ``done_tick``."""
+    samples land in ``submit_tick`` / ``admit_tick`` / ``done_tick``.
+
+    ``cp`` supplies an external ControlPlane (default: a private one);
+    ``consumer`` attaches the fleet through a ``transport.RemoteConsumer``
+    instead of directly — plans then arrive over the lossy channel and the
+    per-tick heartbeat/load report rides back the same way (the chaos
+    bench setting).  The consumer's boot snapshot seeds the engine."""
 
     def __init__(self, mode: str, n_instances: int, slots: int,
                  tokens_per_req: int, admit_batch: int = 16, eos: int = 1,
                  fault=None, shaper=None, policy: int = POLICY_LEAST_REQUEST,
-                 shards: int = 1, batch_fn=None):
+                 shards: int = 1, batch_fn=None, cp=None, consumer=None):
         kw = {}
         if shards > 1:
             if mode != "xlb":
@@ -94,10 +100,16 @@ class Service:
             kw = dict(shards=shards, shard_mesh=make_shard_mesh(shards))
         self.eng = make_balancer(mode, CFG, n_instances, slots,
                                  max_len=tokens_per_req + 1, eos=eos, **kw)
-        self.cp = build_cp(n_instances, policy)
-        self.state = self.eng.init_state(self.cp.snapshot(),
-                                         dtype=jnp.float32)
-        self.cp.attach(self)
+        self.cp = cp if cp is not None else build_cp(n_instances, policy)
+        self.consumer = consumer
+        if consumer is not None:
+            self.state = self.eng.init_state(consumer.boot_routing,
+                                             dtype=jnp.float32)
+            consumer.bind(self)
+        else:
+            self.state = self.eng.init_state(self.cp.snapshot(),
+                                             dtype=jnp.float32)
+            self.cp.attach(self)
         self.serve = self.eng.make_jitted(donate=False)
         self.admit_batch = admit_batch
         self.batch_fn = batch_fn or request_batch
@@ -132,7 +144,10 @@ class Service:
 
     def tick(self) -> list[int]:
         """One engine step. Returns req_ids completed this tick."""
-        self.cp.heartbeat(self)             # liveness lease (core/control)
+        if self.consumer is not None:       # transport-attached: plans in,
+            self.consumer.pump(self.tick_no)   # heartbeat + load out
+        else:
+            self.cp.heartbeat(self)         # liveness lease (core/control)
         if self.fault is not None:          # injected faults roll progress
             pool = self.fault.apply(self.state.pool, self.tick_no)
             if pool is not self.state.pool:  # back BEFORE the step, so a
@@ -247,7 +262,8 @@ def run_degraded(mode: str = "xlb", *, n_instances: int = 4, slots: int = 4,
                  tokens_per_req: int = 2, arrivals_per_tick: int = 2,
                  fault_start: int = 40, fault_end: int = 160,
                  factor: int = 10, epoch_interval: int = 6,
-                 total_ticks: int = 280, warmup: int = 10) -> dict:
+                 total_ticks: int = 280, warmup: int = 10,
+                 graded: bool = False) -> dict:
     """The closed-loop health scenario (DESIGN.md §8): one instance goes
     ``factor``× slower mid-run; the HealthPolicy daemon must eject it and,
     once the fault clears, re-admit it — with ZERO operator transactions —
@@ -259,25 +275,46 @@ def run_degraded(mode: str = "xlb", *, n_instances: int = 4, slots: int = 4,
     and immune to host jitter.  The breaker's cooldown is sized so the
     half-open probe lands after the fault clears (the mid-fault re-eject
     cycle is pinned by tests/test_health.py instead — here we measure the
-    clean recovery the gate checks)."""
-    from repro.core.health import CLOSED, OPEN, HealthConfig, HealthPolicy
+    clean recovery the gate checks).
+
+    ``graded=True`` switches to the continuous-demotion leg: a WEIGHTED
+    cluster over a *heterogeneous* fleet (one permanently 2× instance plus
+    the transient ``factor``× fault) with ``graded_weights`` on and the
+    breaker detuned — no ejection may fire; the daemon must instead track
+    each endpoint's latency with per-epoch weight commits and re-promote
+    the sick instance once the fault clears.  Both legs record a per-epoch
+    ``timeline`` (breaker state, live weights, latency estimates) for the
+    report's trajectory section."""
+    from repro.core.health import (CLOSED, OPEN, HealthConfig, HealthPolicy,
+                                   latency_estimate)
+    from repro.core.routing_table import POLICY_WEIGHTED
     from repro.runtime.serve_loop import Fault, FaultInjector
 
     sick = n_instances - 1
-    inj = FaultInjector([Fault(sick, "slow", factor=factor,
-                               start=fault_start, end=fault_end)])
+    faults = [Fault(sick, "slow", factor=factor,
+                    start=fault_start, end=fault_end)]
+    if graded:          # heterogeneous fleet: instance 1 permanently 2×
+        faults.append(Fault(1 % n_instances, "slow", factor=2, start=0))
+    inj = FaultInjector(faults)
     svc = Service(mode, n_instances, slots, tokens_per_req, eos=-1,
-                  fault=inj)
+                  fault=inj,
+                  policy=POLICY_WEIGHTED if graded else POLICY_LEAST_REQUEST)
     # first probe at ~eject + cooldown·interval: past fault_end by design
     cooldown = (fault_end - fault_start) // epoch_interval
-    pol = HealthPolicy(svc.cp, HealthConfig(
-        trip_after=2, cooldown=cooldown, recover_after=2,
-        probe_patience=10), clusters=["pool"])
+    if graded:          # breaker detuned far above the worst ratio: every
+        hc = HealthConfig(k_eject=3.0 * factor, trip_after=8,   # demotion
+                          cooldown=cooldown, recover_after=2,   # must be a
+                          probe_patience=10, graded_weights=True)  # weight
+    else:
+        hc = HealthConfig(trip_after=2, cooldown=cooldown, recover_after=2,
+                          probe_patience=10)
+    pol = HealthPolicy(svc.cp, hc, clusters=["pool"])
     v0 = svc.cp.version
     submit_t = svc.submit_tick              # per-request engine-tick samples
     done_t = svc.done_tick                  # recorded by the Service itself
     rid = 0
     eject_tick = uneject_tick = None
+    timeline: list[dict] = []
     for t in range(total_ticks):
         wave = list(range(rid, rid + arrivals_per_tick))
         rid += len(wave)
@@ -291,6 +328,23 @@ def run_degraded(mode: str = "xlb", *, n_instances: int = 4, slots: int = 4,
             if eject_tick is not None and uneject_tick is None \
                     and st == CLOSED:
                 uneject_tick = t
+            routing = svc.routing
+            est = latency_estimate(np.asarray(routing.ep_inflight_ewma),
+                                   np.asarray(routing.ep_tput_ewma))
+            weights, lat_est, states = [], [], []
+            for i in range(n_instances):
+                try:
+                    s = svc.cp.endpoint_slot("pool", i)
+                    weights.append(round(
+                        float(svc.cp.endpoint_weight("pool", i)), 4))
+                    lat_est.append(round(float(est[s]), 3))
+                except KeyError:            # reaped mid-scenario
+                    weights.append(None)
+                    lat_est.append(None)
+                states.append(pol.state_of("pool", i))
+            timeline.append({"tick": t, "epoch": pol.epochs,
+                             "state": states, "weights": weights,
+                             "lat_est": lat_est})
 
     from repro.workload.slo import percentiles
     lat = {r: done_t[r] - submit_t[r] for r in done_t}
@@ -305,12 +359,16 @@ def run_degraded(mode: str = "xlb", *, n_instances: int = 4, slots: int = 4,
     detect = eject_tick if eject_tick is not None else fault_end
     healthy = p99(warmup, fault_start)
     degraded = p99(fault_start + 2, min(detect + settle, fault_end))
-    recovered = p99(detect + settle, fault_end)
+    if graded:      # no ejection by design: recovery is the post-fault
+        # window, once the graded weights have re-promoted the instance
+        recovered = p99(fault_end + settle, total_ticks)
+    else:
+        recovered = p99(detect + settle, fault_end)
     snap = svc.cp.snapshot()
     ep_slots = [svc.cp.endpoint_slot("pool", i) for i in range(n_instances)]
     end_drained = int(sum(int(np.asarray(snap.ep_drained)[s])
                           for s in ep_slots))
-    return {
+    out = {
         "mode": mode, "n_instances": n_instances, "slots": slots,
         "factor": factor, "fault_start": fault_start,
         "fault_end": fault_end, "ticks": total_ticks,
@@ -325,7 +383,16 @@ def run_degraded(mode: str = "xlb", *, n_instances: int = 4, slots: int = 4,
         "end_drained": end_drained,
         "end_state": pol.state_of("pool", sick),
         "end_weight": float(svc.cp.endpoint_weight("pool", sick)),
+        "graded": graded, "timeline": timeline,
     }
+    if graded:
+        sick_w = [e["weights"][sick] for e in timeline
+                  if e["weights"][sick] is not None]
+        out["min_sick_weight"] = min(sick_w) if sick_w else None
+        out["min_weights"] = [
+            min(w for w in (e["weights"][i] for e in timeline)
+                if w is not None) for i in range(n_instances)]
+    return out
 
 
 def run_chain(mode: str, *, chain_len: int, n_requests: int = 16,
@@ -363,7 +430,8 @@ def run_chain_scenario(mode: str, *, depth: int = 3, workload=None,
                        n_instances: int = 2, slots: int = 8,
                        tokens_per_req: int = 2, admit_batch: int = 8,
                        policy: int = POLICY_LEAST_REQUEST, shards: int = 1,
-                       faults: dict | None = None,
+                       faults: dict | None = None, health_cfg=None,
+                       epoch_interval: int = 6,
                        max_ticks: int = 4000) -> dict:
     """The workload-subsystem chain driver (DESIGN.md §10): a generated
     request stream through a depth-D service chain, each hop behind its own
@@ -373,7 +441,10 @@ def run_chain_scenario(mode: str, *, depth: int = 3, workload=None,
     submit at hop 0 → completion at hop D-1, per-hop admit→done recorded
     too.  Returns ``{"result": ChainResult, "row": <scenario row>}`` — the
     row is schema-validated and ready for ``append_scenario_row``.
-    ``faults`` maps hop → FaultInjector (composable with the scenario)."""
+    ``faults`` maps hop → FaultInjector (composable with the scenario).
+    ``health_cfg`` runs a per-hop ``HealthPolicy`` daemon off the chain
+    clock, one epoch every ``epoch_interval`` global ticks (the graded
+    heterogeneous-fleet leg drives this with ``graded_weights=True``)."""
     from repro.workload import (ChainRunner, PoissonArrivals,
                                 ScenarioDriver, Workload, percentiles,
                                 scenario_row)
@@ -392,7 +463,17 @@ def run_chain_scenario(mode: str, *, depth: int = 3, workload=None,
     if ops:
         scenario = ScenarioDriver([h.cp for h in hops], ops,
                                   max_instances=n_instances)
-    res = ChainRunner(hops, workload, scenario=scenario,
+    policies = on_tick = None
+    if health_cfg is not None:
+        from repro.core.health import HealthPolicy
+        policies = [HealthPolicy(h.cp, health_cfg, clusters=["pool"])
+                    for h in hops]
+
+        def on_tick(t):
+            if (t + 1) % epoch_interval == 0:
+                for pol, h in zip(policies, hops):
+                    pol.epoch(h.routing)
+    res = ChainRunner(hops, workload, scenario=scenario, on_tick=on_tick,
                       max_ticks=max_ticks).run()
     arr = type(workload.arrivals).__name__.removesuffix("Arrivals").lower()
     extra = {"ops": len(ops or []),
@@ -403,6 +484,19 @@ def run_chain_scenario(mode: str, *, depth: int = 3, workload=None,
                                    for k in range(depth)]}
     if shards > 1:
         extra["shards"] = shards
+    if policies is not None:
+        extra["health_txns"] = sum(p.commits for p in policies)
+        ws = []
+        for h in hops:
+            hw = []
+            for i in range(n_instances):
+                try:
+                    hw.append(round(float(
+                        h.cp.endpoint_weight("pool", i)), 4))
+                except KeyError:
+                    hw.append(None)
+            ws.append(hw)
+        extra["end_weights"] = ws
     if workload.service is not None:
         extra["service"] = type(workload.service).__name__ \
             .removesuffix("ServiceTimes").lower()
@@ -412,6 +506,129 @@ def run_chain_scenario(mode: str, *, depth: int = 3, workload=None,
                        dropped=res.dropped, ticks=res.ticks,
                        samples=res.samples(), **extra)
     return {"result": res, "row": row}
+
+
+def run_chaos(mode: str = "xlb", *, n_instances: int = 4, slots: int = 4,
+              tokens_per_req: int = 2, seed: int = 23, rate: float = 1.0,
+              n_requests: int = 130, total_ticks: int = 170,
+              epoch_interval: int = 6, lease_epochs: int = 3,
+              fault_start: int = 20, fault_end: int = 78, factor: int = 8,
+              recovered_from: int = 110, chaos: bool = True,
+              flush_budget: int = 120) -> dict:
+    """The transport-chaos scenario (DESIGN.md §11): a generated request
+    stream served through a ``transport.RemoteConsumer``-attached fleet
+    while a live-ops schedule commits config over a lossy control channel
+    and a second consumer is crash-restarted mid-canary.
+
+    Chaos leg (``chaos=True``): the channel drops/duplicates/delays, a
+    partition window blacks out the serving consumer across the drain
+    commit, and the replica consumer dies at tick 44 (its lease expires —
+    plans stop shipping) and rejoins cold at 76 (exactly one snapshot
+    resync).  A slow-instance fault overlaps the partition so recovery
+    needs both the health of the fleet AND the eventual delivery of the
+    operator's drain/undrain.  Baseline leg (``chaos=False``): identical
+    schedule over a clean channel — the SLO-recovery gate compares the
+    two recovered-window p99s.
+
+    Everything is keyed off ``seed`` + engine ticks: two runs with the
+    same arguments produce bit-identical histories, channel stats and
+    rows (the ``--check`` replay gate).  Returns the validated
+    ``bench="chaos"`` trend row plus the raw artifacts (consumer
+    histories, scenario log, convergence report)."""
+    from repro.runtime import transport
+    from repro.runtime.serve_loop import Fault, FaultInjector
+    from repro.workload import (Op, PoissonArrivals, ScenarioDriver,
+                                Workload, chaos_row, percentiles)
+    from repro.core.routing_table import POLICY_WEIGHTED
+
+    sick = n_instances - 1
+    cp = build_cp(n_instances, POLICY_WEIGHTED, lease_epochs=lease_epochs)
+    if chaos:
+        chan = transport.LossyChannel(
+            seed=seed, p_drop=0.15, p_dup=0.10, delay_min=1, delay_max=4,
+            faults=[transport.ChannelFault(22, 58, dst="ingress-0")])
+    else:
+        chan = transport.LossyChannel(seed=seed)
+    hub = transport.Transport(cp, chan, retry_base=1, retry_cap=8,
+                              seed=seed + 1)
+    rc = hub.consumer("ingress-0")
+    inj = FaultInjector([Fault(sick, "slow", factor=factor,
+                               start=fault_start, end=fault_end)])
+    svc = Service(mode, n_instances, slots, tokens_per_req, admit_batch=8,
+                  eos=-1, fault=inj, cp=cp, consumer=rc)
+    replica = hub.consumer("replica-1")      # config mirror on another host
+    crash_tick, restart_tick = (44, 76) if chaos else (None, None)
+    wl = Workload(PoissonArrivals(rate=rate, seed=seed),
+                  n_requests=n_requests, vocab=CFG.vocab)
+    ops = [Op(6, "canary", args={"instance": 1, "pct": 40.0}),
+           Op(24, "drain", args={"instance": sick}),
+           Op(40, "set_weight", args={"instance": 0, "weight": 1.4}),
+           Op(72, "canary", args={"instance": 2, "pct": 50.0}),
+           Op(88, "undrain", args={"instance": sick, "weight": 1.0})]
+    driver = ScenarioDriver([cp], ops, max_instances=n_instances)
+    rid = 0
+    for t in range(total_ticks):
+        driver.apply(t)
+        if (t + 1) % epoch_interval == 0:
+            cp.advance_epoch()               # the lease-reaper clock
+        if t == crash_tick:
+            replica.crash()
+        if t == restart_tick:
+            replica.restart()
+        hub.pump(t)
+        wave = wl.wave(t, rid)
+        rid += len(wave)
+        if wave:
+            svc.submit(wave)
+        svc.tick()
+        replica.pump(t)
+    # flush: no new arrivals; pump until the fleet is idle and every live
+    # consumer has converged on the head version (budget-bounded so a
+    # regression fails visibly instead of spinning)
+    flush = 0
+    while flush < flush_budget:
+        t = total_ticks + flush
+        hub.pump(t)
+        svc.tick()
+        replica.pump(t)
+        flush += 1
+        if not svc.busy and hub.report()["converged"]:
+            break
+    rep = hub.report()
+    lat = {r: svc.done_tick[r] - svc.submit_tick[r] for r in svc.done_tick}
+
+    def p99(lo, hi):
+        xs = [lat[r] for r, d in svc.done_tick.items() if lo <= d < hi]
+        return percentiles(np.asarray(xs, np.int64))["p99"]
+
+    healthy = p99(4, fault_start)
+    worst = p99(fault_start, recovered_from)
+    recovered = p99(recovered_from, total_ticks + flush)
+    cstats = chan.stats()
+    pub = hub.publisher.stats()
+    row = chaos_row(
+        "chaos" if chaos else "chaos-baseline", mode, seed=seed,
+        n_requests=rid, completed=len(svc.done_tick),
+        dropped=len(svc.dropped), ticks=total_ticks, flush_ticks=flush,
+        versions=cp.version, consumers=len(hub.consumers),
+        resyncs=sum(c.resyncs for c in hub.consumers),
+        crashes=sum(c.crashes for c in hub.consumers),
+        converged=bool(rep["converged"]),
+        healthy_p99_ticks=healthy, chaos_p99_ticks=worst,
+        recovered_p99_ticks=recovered,
+        recovery_ratio=recovered / healthy if healthy else float("nan"),
+        msgs_sent=cstats["sent"], msgs_dropped=cstats["dropped"],
+        msgs_duped=cstats["duped"], msgs_delivered=cstats["delivered"],
+        msgs_partitioned=cstats["partitioned"],
+        stale=sum(c.stale for c in hub.consumers),
+        held=sum(c.held for c in hub.consumers),
+        rejected=sum(c.rejected for c in hub.consumers),
+        plan_sends=sum(s["plan_sends"] for s in pub.values()),
+        snap_sends=sum(s["snap_sends"] for s in pub.values()),
+        ops=len(ops), txns=driver.txns, rate=float(rate))
+    return {"row": row, "report": rep, "scenario_log": driver.log,
+            "histories": {c.node: list(c.history) for c in hub.consumers},
+            "channel": cstats, "publisher": pub}
 
 
 def run_graph(mode: str, graph: ServiceGraph, *, n_requests: int = 12,

@@ -454,8 +454,11 @@ def bench_degraded():
     slower mid-run; the health daemon must detect it through the in-kernel
     latency EWMAs, eject it, hold tail latency at the healthy baseline,
     and — once the fault clears — probe and fully restore it with ZERO
-    operator transactions.  Writes BENCH_degraded.json and appends the
-    record to BENCH_TREND.jsonl."""
+    operator transactions.  A second *graded* leg runs a heterogeneous
+    WEIGHTED fleet with ``graded_weights=True``: continuous per-epoch
+    demotion, no ejection allowed.  Writes BENCH_degraded.json (both legs
+    + their per-epoch timelines) and appends the classic record to
+    BENCH_TREND.jsonl."""
     from benchmarks import common
     r = common.run_degraded("xlb")
     for k in ("healthy_p99_ticks", "degraded_p99_ticks",
@@ -468,12 +471,19 @@ def bench_degraded():
     for k in ("operator_txns", "daemon_txns", "end_drained", "completed",
               "dropped"):
         emit("degraded", "xlb", k, r[k])
+    g = common.run_degraded("xlb", graded=True, factor=3)
+    emit("degraded", "xlb", "graded_daemon_txns", g["daemon_txns"])
+    emit("degraded", "xlb", "graded_min_sick_weight", g["min_sick_weight"])
+    emit("degraded", "xlb", "graded_end_weight", g["end_weight"])
+    emit("degraded", "xlb", "graded_recovery_ratio", g["recovery_ratio"])
     with open("BENCH_degraded.json", "w") as f:
-        json.dump(r, f, indent=2)
+        json.dump({"classic": r, "graded": g}, f, indent=2)
         f.write("\n")
     print("# wrote BENCH_degraded.json", flush=True)
-    _append_trend("degraded", r)
+    _append_trend("degraded", {k: v for k, v in r.items()
+                               if k != "timeline"})
     _gate_degraded(r)
+    _gate_graded(g)
 
 
 def _chain_workload(n_requests: int = 24, seed: int = 11,
@@ -518,6 +528,16 @@ def bench_chain():
     emit("chain", "xlb", "liveops_p99_ticks", live["p99_ticks"])
     emit("chain", "xlb", "liveops_txns", live["txns"])
     rows.append(live)
+    from repro.runtime.serve_loop import Fault, FaultInjector
+    graded = common.run_chain_scenario(
+        "xlb", depth=depth, n_instances=3, slots=6, policy=POLICY_WEIGHTED,
+        health_cfg=_graded_chain_cfg(), epoch_interval=6,
+        faults={0: FaultInjector([Fault(0, "slow", factor=3, start=0)])},
+        workload=_chain_workload(n_requests=40, seed=7, rate=1.5),
+        label="chain_graded")["row"]
+    emit("chain", "xlb", "graded_p99_ticks", graded["p99_ticks"])
+    emit("chain", "xlb", "graded_health_txns", graded["health_txns"])
+    rows.append(graded)
     _gate_chain([r for r in rows if r["scenario"] == "chain"])
     with open("BENCH_chain.json", "w") as f:
         json.dump({"depth": depth, "rows": rows}, f, indent=2)
@@ -637,6 +657,174 @@ def check_degraded() -> None:
     _gate_degraded(common.run_degraded("xlb"))
 
 
+def _gate_graded(g: dict) -> None:
+    """The graded-weights gate: on a heterogeneous fleet the daemon must
+    track latency with continuous weight commits — demoting the sick
+    instance well below parity, NEVER tripping the breaker, re-promoting
+    once the fault clears — and tail latency must still recover."""
+    fails = []
+    if g["eject_tick"] is not None:
+        fails.append(f"breaker ejected at tick {g['eject_tick']} — graded "
+                     "mode must demote, not eject")
+    if g["operator_txns"] != 0:
+        fails.append(f"{g['operator_txns']} non-daemon config txns")
+    if g["daemon_txns"] < 10:
+        fails.append(f"only {g['daemon_txns']} daemon txns — graded "
+                     "tracking never engaged")
+    if g["min_sick_weight"] is None or g["min_sick_weight"] > 0.6:
+        fails.append(f"sick instance never demoted below 0.6 "
+                     f"(min weight {g['min_sick_weight']})")
+    if not g["end_weight"] >= 0.75:          # catches NaN too
+        fails.append(f"sick instance not re-promoted after the fault "
+                     f"(end weight {g['end_weight']:.3f} < 0.75)")
+    if g["end_drained"] != 0:
+        fails.append(f"{g['end_drained']} endpoint(s) drained — graded "
+                     "mode must keep the whole fleet serving")
+    if not g["recovery_ratio"] <= 1.5:
+        fails.append(f"recovered/healthy p99 {g['recovery_ratio']:.3f} "
+                     "> 1.5")
+    if fails:
+        sys.exit("check: graded-weights gate FAILED — " + "; ".join(fails))
+    print(f"# check: graded gate OK — min sick weight "
+          f"{g['min_sick_weight']:.2f}, end weight {g['end_weight']:.2f}, "
+          f"{g['daemon_txns']} daemon txns, no ejection", flush=True)
+
+
+def _graded_chain_cfg():
+    from repro.core.health import HealthConfig
+    return HealthConfig(k_eject=12.0, trip_after=8, cooldown=10,
+                        recover_after=2, probe_patience=10,
+                        graded_weights=True)
+
+
+def check_graded() -> None:
+    """--check leg for graded weights (heterogeneous fleets): the degraded
+    graded leg must pass ``_gate_graded``, and a depth-2 chain with a
+    permanently-slow hop-0 instance under per-hop HealthPolicy daemons
+    must complete with the graded tracking engaged (weight commits that
+    demote below parity)."""
+    from benchmarks import common
+    from repro.core.routing_table import POLICY_WEIGHTED
+    from repro.runtime.serve_loop import Fault, FaultInjector
+    _gate_graded(common.run_degraded("xlb", graded=True, factor=3))
+    out = common.run_chain_scenario(
+        "xlb", depth=2, n_instances=3, slots=6, policy=POLICY_WEIGHTED,
+        health_cfg=_graded_chain_cfg(), epoch_interval=6,
+        faults={0: FaultInjector([Fault(0, "slow", factor=3, start=0)])},
+        workload=_chain_workload(n_requests=40, seed=7, rate=1.5),
+        label="chain_graded")
+    row = out["row"]
+    fails = []
+    if row["completed"] != row["n_requests"]:
+        fails.append(f"completed {row['completed']}/{row['n_requests']}")
+    if row["health_txns"] < 2:
+        fails.append(f"per-hop health daemons committed "
+                     f"{row['health_txns']} txns — tracking never engaged")
+    ws = [w for hop in row["end_weights"] for w in hop if w is not None]
+    if not ws or min(ws) > 0.9:
+        fails.append(f"graded weights never demoted any endpoint "
+                     f"(min end weight {min(ws) if ws else None})")
+    if fails:
+        sys.exit("check: graded chain gate FAILED — " + "; ".join(fails))
+    print(f"# check: graded chain OK — {row['health_txns']} health txns, "
+          f"min end weight {min(ws):.2f}", flush=True)
+
+
+def _gate_chaos(out: dict, base: dict) -> None:
+    """The chaos convergence + SLO-recovery gate (DESIGN.md §11): after
+    the schedule ends, every live consumer must hold a bit-exact copy of
+    the control plane's RoutingState at the head version with a monotone
+    no-lost-bump history; the crashed consumer rejoined with at most one
+    snapshot resync; every request completed; and the recovered-window
+    p99 is within 1.5× of the identical run over a fault-free channel."""
+    row, rep, brow = out["row"], out["report"], base["row"]
+    fails = []
+    if not row["converged"] or rep["issues"]:
+        fails.append("transport did not converge: "
+                     + "; ".join(rep["issues"]))
+    if row["crashes"] != 1:
+        fails.append(f"{row['crashes']} consumer crashes, schedule has "
+                     "exactly 1")
+    if row["resyncs"] > row["crashes"]:
+        fails.append(f"{row['resyncs']} resyncs for {row['crashes']} "
+                     "crash(es) — more than one resync per crash")
+    if not (brow["converged"] and brow["crashes"] == 0
+            and brow["resyncs"] == 0):
+        fails.append("fault-free baseline leg was not clean")
+    if row["completed"] != row["n_requests"] or row["dropped"]:
+        fails.append(f"completed {row['completed']}/{row['n_requests']}, "
+                     f"dropped {row['dropped']}")
+    lim = 1.5 * brow["recovered_p99_ticks"]
+    if not row["recovered_p99_ticks"] <= lim:      # NaN fails too
+        fails.append(f"post-recovery p99 {row['recovered_p99_ticks']} "
+                     f"ticks > 1.5x fault-free {brow['recovered_p99_ticks']}")
+    if fails:
+        sys.exit("check: chaos gate FAILED — " + "; ".join(fails))
+    print(f"# check: chaos gate OK — {row['versions']} versions to "
+          f"{row['consumers']} consumers over a lossy channel "
+          f"(drop {row['msgs_dropped']}/dup {row['msgs_duped']}/part "
+          f"{row['msgs_partitioned']}), {row['resyncs']} resync for "
+          f"{row['crashes']} crash, recovered p99 "
+          f"{row['recovered_p99_ticks']:.1f} vs baseline "
+          f"{brow['recovered_p99_ticks']:.1f}", flush=True)
+
+
+def bench_chaos():
+    """Transport-chaos scenario (DESIGN.md §11): generated load served by
+    a RemoteConsumer-attached fleet while the live-ops schedule commits
+    config over a lossy, partitioned control channel and a replica
+    consumer is crash-restarted mid-canary — plus the identical schedule
+    over a fault-free channel (the SLO-recovery baseline).  Writes
+    BENCH_chaos.json and appends both validated ``bench="chaos"`` rows to
+    BENCH_TREND.jsonl."""
+    from benchmarks import common
+    from repro.workload import append_scenario_row
+    out = common.run_chaos("xlb")
+    base = common.run_chaos("xlb", chaos=False)
+    row, brow = dict(out["row"]), base["row"]
+    for k in ("healthy_p99_ticks", "chaos_p99_ticks",
+              "recovered_p99_ticks", "recovery_ratio"):
+        emit("chaos", "xlb", k, row[k])
+    emit("chaos", "xlb", "baseline_recovered_p99_ticks",
+         brow["recovered_p99_ticks"])
+    for k in ("versions", "resyncs", "crashes", "flush_ticks",
+              "msgs_sent", "msgs_dropped", "msgs_duped", "msgs_delivered",
+              "msgs_partitioned", "plan_sends", "snap_sends"):
+        emit("chaos", "xlb", k, row[k])
+    emit("chaos", "xlb", "converged", int(row["converged"]))
+    _gate_chaos(out, base)
+    row["baseline_p99_ticks"] = brow["recovered_p99_ticks"]
+    with open("BENCH_chaos.json", "w") as f:
+        json.dump({"chaos": {"row": row, "report": out["report"],
+                             "scenario_log": out["scenario_log"],
+                             "histories": out["histories"],
+                             "publisher": out["publisher"]},
+                   "baseline": {"row": brow}}, f, indent=2)
+        f.write("\n")
+    print("# wrote BENCH_chaos.json", flush=True)
+    for r in (row, brow):
+        append_scenario_row(r)
+    print("# appended 2 chaos rows to BENCH_TREND.jsonl", flush=True)
+
+
+def check_chaos() -> None:
+    """--check leg for the plan transport: the chaos scenario must pass
+    ``_gate_chaos`` AND replay bit-identically — same row, same per-consumer
+    apply/resync histories, same channel counters — under the fixed seed."""
+    from benchmarks import common
+    out = common.run_chaos("xlb")
+    base = common.run_chaos("xlb", chaos=False)
+    _gate_chaos(out, base)
+    replay = common.run_chaos("xlb")
+    drift = [k for k in ("row", "histories", "channel")
+             if replay[k] != out[k]]
+    if drift:
+        sys.exit(f"check: chaos replay FAILED — {drift} drifted under "
+                 f"seed {out['row']['seed']}")
+    print(f"# check: chaos replay OK — bit-identical row, histories and "
+          f"channel counters under seed {out['row']['seed']}", flush=True)
+
+
 def _run_on_host_mesh(argv: list, shards: int, *, what: str,
                       timeout: int = 1800):
     """Run a python subprocess on an M-device virtual host mesh (XLA_FLAGS
@@ -680,8 +868,11 @@ def check_gates(remeasured: bool = False) -> None:
     recorded BENCH_admit.json; the fused completion kernel must hold
     fused/staged >= 0.8 at the engine-sized 2x16 pool per BENCH_step.json;
     all three engines must still drive the serving launcher end-to-end
-    through the Balancer protocol; and the closed health loop must recover
-    the degraded scenario autonomously (``check_degraded``)."""
+    through the Balancer protocol; the closed health loop must recover
+    the degraded scenario autonomously (``check_degraded``) and track
+    heterogeneous fleets with graded weights (``check_graded``); and the
+    plan transport must converge deterministically under chaos
+    (``check_chaos``)."""
     if not remeasured:
         print("# check: gating the last recorded BENCH_admit.json / "
               "BENCH_step.json (not re-measured this run)", flush=True)
@@ -721,7 +912,9 @@ def check_gates(remeasured: bool = False) -> None:
     smoke_shards()
     smoke_policies()
     check_degraded()
+    check_graded()
     check_chain()
+    check_chaos()
 
 
 def smoke_engines() -> None:
@@ -786,6 +979,7 @@ def smoke_policies(shards: int = 2) -> None:
 BENCHES = {
     "admit": bench_admit, "step": bench_step, "shard": bench_shard,
     "degraded": bench_degraded, "chain": bench_chain,
+    "chaos": bench_chaos,
     "table1": bench_table1, "table2": bench_table2, "fig5": bench_fig5,
     "fig6": bench_fig6, "fig7": bench_fig7, "fig8": bench_fig8,
     "fig9": bench_fig9, "fig10": bench_fig10, "fig11": bench_fig11,

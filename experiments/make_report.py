@@ -252,6 +252,110 @@ def scenario_slo_section():
     return "\n".join(lines)
 
 
+def degraded_trajectory_section():
+    """Eject/recover trajectory of the closed health loop plus the graded
+    heterogeneous-fleet leg's per-epoch weight timeline, from
+    BENCH_degraded.json (benchmarks/run.py degraded)."""
+    path = os.path.join(ROOT, "BENCH_degraded.json")
+    if not os.path.exists(path):
+        return ("## §Degraded trajectory\n\n(run `PYTHONPATH=src python -m "
+                "benchmarks.run degraded` first)")
+    rec = json.load(open(path))
+    if "classic" not in rec:                 # pre-transport flat record
+        rec = {"classic": rec}
+    c = rec["classic"]
+    sick = c["n_instances"] - 1
+    lines = ["## §Degraded trajectory — closed health loop (DESIGN.md §8)",
+             "",
+             f"Instance {sick} runs {c['factor']}× slow over ticks "
+             f"[{c['fault_start']}, {c['fault_end']}); the breaker ejected "
+             f"at tick {c['eject_tick']}, re-admitted at tick "
+             f"{c['uneject_tick']}, with {c['daemon_txns']} daemon and "
+             f"{c['operator_txns']} operator transactions. p99 ticks: "
+             f"healthy {c['healthy_p99_ticks']:.1f} → degraded "
+             f"{c['degraded_p99_ticks']:.1f} → recovered "
+             f"{c['recovered_p99_ticks']:.1f} (ratio "
+             f"{c['recovery_ratio']:.2f})."]
+    tl = c.get("timeline") or []
+    if tl:
+        seq, prev = [], None
+        for e in tl:
+            st = e["state"][sick]
+            if st != prev:
+                seq.append(f"t{e['tick']}:{st}")
+                prev = st
+        lines += ["", "Breaker trajectory of the sick instance (per health "
+                  "epoch): " + " → ".join(seq)]
+    g = rec.get("graded")
+    if g:
+        n = g["n_instances"]
+        lines += [
+            "",
+            f"**Graded leg** (WEIGHTED cluster, heterogeneous fleet: "
+            f"instance 1 permanently 2× slow, instance {n - 1} "
+            f"{g['factor']}× slow over [{g['fault_start']}, "
+            f"{g['fault_end']})): {g['daemon_txns']} weight commits, no "
+            f"ejection (min sick weight "
+            f"{g['min_sick_weight']}, end weight "
+            f"{g['end_weight']:.2f}). Per-epoch graded weights:",
+            "",
+            "| tick | " + " | ".join(f"w[{i}]" for i in range(n)) + " |",
+            "|---|" + "---|" * n]
+        gtl = g.get("timeline") or []
+        shown = gtl[::4] + ([gtl[-1]] if gtl and gtl[-1] not in gtl[::4]
+                            else [])
+        for e in shown:
+            ws = " | ".join("—" if w is None else f"{w:.2f}"
+                            for w in e["weights"])
+            lines.append(f"| {e['tick']} | {ws} |")
+    return "\n".join(lines)
+
+
+def chaos_section():
+    """Transport-chaos record: convergence verdict, channel damage,
+    resync accounting and the SLO-recovery comparison vs the fault-free
+    baseline leg, from BENCH_chaos.json (benchmarks/run.py chaos)."""
+    path = os.path.join(ROOT, "BENCH_chaos.json")
+    if not os.path.exists(path):
+        return ("## §Chaos transport\n\n(run `PYTHONPATH=src python -m "
+                "benchmarks.run chaos` first)")
+    rec = json.load(open(path))
+    row = rec["chaos"]["row"]
+    base = rec["baseline"]["row"]
+    rep = rec["chaos"]["report"]
+    lines = ["## §Chaos transport — versioned resync under a lossy control "
+             "channel (DESIGN.md §11)",
+             "",
+             f"{row['versions']} config versions shipped to "
+             f"{row['consumers']} consumers over a channel that dropped "
+             f"{row['msgs_dropped']}, duplicated {row['msgs_duped']} and "
+             f"partitioned {row['msgs_partitioned']} of {row['msgs_sent']} "
+             f"messages; one consumer crash-restarted mid-canary "
+             f"({row['crashes']} crash → {row['resyncs']} snapshot "
+             f"resync). Publisher: {row['plan_sends']} journal plan sends, "
+             f"{row['snap_sends']} snapshots. Converged: "
+             f"**{row['converged']}** ({len(rep['issues'])} invariant "
+             f"issues); all rows replay bit-identically under seed "
+             f"{row['seed']}.",
+             "",
+             "| leg | p99 healthy | p99 chaos window | p99 recovered | "
+             "converged | resyncs | crashes |",
+             "|---|---|---|---|---|---|---|"]
+    for tag, r in (("chaos", row), ("fault-free baseline", base)):
+        lines.append(
+            f"| {tag} | {r['healthy_p99_ticks']:.1f} | "
+            f"{r['chaos_p99_ticks']:.1f} | {r['recovered_p99_ticks']:.1f} "
+            f"| {r['converged']} | {r['resyncs']} | {r['crashes']} |")
+    lines += ["",
+              "| consumer | alive | version | resyncs | stale no-ops | "
+              "rejected |",
+              "|---|---|---|---|---|---|"]
+    for e in rep["consumers"]:
+        lines.append(f"| {e['node']} | {e['alive']} | {e['version']} | "
+                     f"{e['resyncs']} | {e['stale']} | {e['rejected']} |")
+    return "\n".join(lines)
+
+
 def main():
     single, multi = load("16x16"), load("2x16x16")
     ok_s = sum(1 for r in single.values() if "roofline" in r)
@@ -268,7 +372,8 @@ def main():
     ]
     body = [dryrun_section(single, multi), "", roofline_section(single), "",
             perf_section(), "", paper_claims_section(), "",
-            scenario_slo_section()]
+            scenario_slo_section(), "", degraded_trajectory_section(), "",
+            chaos_section()]
     with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
         f.write("\n".join(head + body) + "\n")
     print("wrote EXPERIMENTS.md")

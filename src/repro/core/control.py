@@ -46,6 +46,7 @@ disturb the kernel data path".
 
 from __future__ import annotations
 
+import collections
 import contextlib
 import copy
 import dataclasses
@@ -57,12 +58,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import policy_defs
-from repro.core.routing_table import (AFFINITY_SLOTS, MAX_CLUSTERS,
-                                      MAX_ENDPOINTS, MAX_EPS_PER_CLUSTER,
-                                      MAX_RULES, MAX_RULES_PER_SVC,
-                                      MAX_SERVICES, POLICY_LEAST_REQUEST,
-                                      WILDCARD, Cluster, RoutingState, Rule,
-                                      ServiceConfig, build_state, fnv1a)
+from repro.core.routing_table import (AFFINITY_SLOTS, MAGLEV_TABLE_SIZE,
+                                      MAX_CLUSTERS, MAX_ENDPOINTS,
+                                      MAX_EPS_PER_CLUSTER, MAX_RULES,
+                                      MAX_RULES_PER_SVC, MAX_SERVICES,
+                                      POLICY_LEAST_REQUEST, WILDCARD, Cluster,
+                                      RoutingState, Rule, ServiceConfig,
+                                      build_state, fnv1a)
 
 # The tables the control plane owns.  Everything else in RoutingState
 # (ep_load, ep_inflight_ewma, ep_tput_ewma, rr_cursor, aff_key, aff_ep,
@@ -89,6 +91,34 @@ class RefreshPlan(NamedTuple):
     config: tuple            # new config arrays, CONFIG_FIELDS order
     ep_src: np.ndarray       # (E,) i32: new slot → old slot (-1 = fresh)
     ep_dst: np.ndarray       # (E,) i32: old slot → new slot (-1 = removed)
+    # transport versioning (runtime/transport.py): ``base_version`` is the
+    # config version this plan was diffed against; a remote consumer applies
+    # the plan only when its own version matches (gap → snapshot resync),
+    # and ``apply_plan`` stamps ``version`` instead of blind +1 so a
+    # resync'd consumer lands on the control plane's exact version.  The
+    # defaults (-1) keep in-process consumers on the legacy +1 behaviour.
+    base_version: int = -1   # scalar i32; -1 = unversioned (local commit)
+    version: int = -1        # scalar i32; -1 = bump live.version + 1
+
+
+# Expected wire shapes/kinds for every pack_plan field — the validation
+# table unpack_plan checks a payload against before anything is applied.
+_WIRE_SPECS: dict = {
+    "svc_rule_start": ((MAX_SERVICES,), "i"),
+    "svc_rule_count": ((MAX_SERVICES,), "i"),
+    "rule_field": ((MAX_RULES,), "i"),
+    "rule_value": ((MAX_RULES,), "i"),
+    "rule_cluster": ((MAX_RULES,), "i"),
+    "cluster_ep_start": ((MAX_CLUSTERS,), "i"),
+    "cluster_ep_count": ((MAX_CLUSTERS,), "i"),
+    "cluster_policy": ((MAX_CLUSTERS,), "i"),
+    "ep_instance": ((MAX_ENDPOINTS,), "i"),
+    "ep_weight": ((MAX_ENDPOINTS,), "f"),
+    "ep_drained": ((MAX_ENDPOINTS,), "i"),
+    "maglev_table": ((MAX_CLUSTERS, MAGLEV_TABLE_SIZE), "i"),
+    "ep_src": ((MAX_ENDPOINTS,), "i"),
+    "ep_dst": ((MAX_ENDPOINTS,), "i"),
+}
 
 
 def pack_plan(plan: RefreshPlan) -> dict:
@@ -98,25 +128,79 @@ def pack_plan(plan: RefreshPlan) -> dict:
     out = {k: np.asarray(v) for k, v in zip(CONFIG_FIELDS, plan.config)}
     out["ep_src"] = np.asarray(plan.ep_src)
     out["ep_dst"] = np.asarray(plan.ep_dst)
+    out["base_version"] = int(plan.base_version)
+    out["version"] = int(plan.version)
     return out
+
+
+def _wire_scalar(arrays: dict, key: str) -> int:
+    v = arrays[key]
+    ok = (isinstance(v, int) and not isinstance(v, bool)) \
+        or isinstance(v, np.integer) \
+        or (isinstance(v, np.ndarray) and v.ndim == 0
+            and np.issubdtype(v.dtype, np.integer))
+    if not ok:
+        raise ValueError(f"plan payload field {key!r} must be an integer "
+                         f"scalar, got {v!r}")
+    iv = int(v)
+    if iv < -1:
+        raise ValueError(f"plan payload field {key!r} out of range: {iv}")
+    return iv
 
 
 def unpack_plan(arrays: dict) -> RefreshPlan:
     """Rebuild a :class:`RefreshPlan` from ``pack_plan`` output — the
     receiving host applies it with the same ``apply_refresh`` seam local
-    consumers use (one splice, one version bump)."""
+    consumers use (one splice, one version bump).
+
+    A payload off the wire is validated *before* anything is returned —
+    missing keys, wrong shapes, wrong dtype kinds, and malformed version
+    fields each raise :class:`ValueError` naming the offending field, so a
+    corrupted plan can never half-apply downstream.  Unknown extra keys are
+    ignored (transport envelopes ride alongside the payload)."""
+    if not isinstance(arrays, dict):
+        raise ValueError(f"plan payload must be a dict, got "
+                         f"{type(arrays).__name__}")
+    missing = [k for k in (*_WIRE_SPECS, "base_version", "version")
+               if k not in arrays]
+    if missing:
+        raise ValueError(f"plan payload missing fields: {missing}")
+    vals: dict = {}
+    for k, (shape, kind) in _WIRE_SPECS.items():
+        try:
+            a = np.asarray(arrays[k])
+        except Exception as e:
+            raise ValueError(f"plan payload field {k!r} is not "
+                             f"array-like") from e
+        if a.shape != shape:
+            raise ValueError(f"plan payload field {k!r} has shape "
+                             f"{a.shape}, expected {shape}")
+        want = np.integer if kind == "i" else np.floating
+        if not np.issubdtype(a.dtype, want):
+            raise ValueError(f"plan payload field {k!r} has dtype "
+                             f"{a.dtype}, expected "
+                             f"{'integer' if kind == 'i' else 'floating'}")
+        vals[k] = a.astype(np.int32 if kind == "i" else np.float32)
+    base = _wire_scalar(arrays, "base_version")
+    version = _wire_scalar(arrays, "version")
+    if version == 0 or (version > 0 and base >= version):
+        raise ValueError(f"plan payload has bad version fields: "
+                         f"base_version={base}, version={version}")
     return RefreshPlan(
-        config=tuple(np.asarray(arrays[k]) for k in CONFIG_FIELDS),
-        ep_src=np.asarray(arrays["ep_src"]),
-        ep_dst=np.asarray(arrays["ep_dst"]))
+        config=tuple(vals[k] for k in CONFIG_FIELDS),
+        ep_src=vals["ep_src"], ep_dst=vals["ep_dst"],
+        base_version=base, version=version)
 
 
 @jax.jit
 def apply_plan(live: RoutingState, plan: RefreshPlan) -> RoutingState:
     """The single buffer swap: new config in, live loads + health EWMAs
     migrated through the slot permutation (fresh slots start cold at zero),
-    rr cursors untouched, version + 1."""
+    rr cursors untouched.  A versioned plan (transport) stamps its own
+    version; an unversioned one (plan.version == -1) bumps live + 1."""
     cfg = {k: jnp.asarray(v) for k, v in zip(CONFIG_FIELDS, plan.config)}
+    ver = jnp.asarray(plan.version, jnp.int32)
+    new_version = jnp.where(ver >= 0, ver, live.version + 1)
     src = jnp.asarray(plan.ep_src)
     gather = jnp.maximum(src, 0)
     load = jnp.where(src >= 0, live.ep_load[gather], 0)
@@ -136,7 +220,7 @@ def apply_plan(live: RoutingState, plan: RefreshPlan) -> RoutingState:
                          aff_ep=jnp.where(alive, ae2, -1).astype(jnp.int32),
                          aff_key=jnp.where(alive, live.aff_key,
                                            -1).astype(jnp.int32),
-                         version=live.version + 1, **cfg)
+                         version=new_version.astype(jnp.int32), **cfg)
 
 
 def remap_endpoints(plan: RefreshPlan, endpoint: jax.Array) -> jax.Array:
@@ -228,7 +312,8 @@ class ControlPlane:
     """Owner of the routing config: directory + allocator + transactions."""
 
     def __init__(self, services: list[ServiceConfig] = (),
-                 clusters: list[Cluster] = (), *, lease_epochs: int = 0):
+                 clusters: list[Cluster] = (), *, lease_epochs: int = 0,
+                 journal_limit: int = 64):
         # One packing implementation: the initial build IS a build_state
         # rebuild (bit-exact by construction); the directory and free-lists
         # are recovered from its window layout.
@@ -259,6 +344,13 @@ class ControlPlane:
         self.version = 0
         self.last_commit_log: list[tuple] = []
         self.last_plan: RefreshPlan | None = None
+        # bounded plan journal: the last ``journal_limit`` commits as packed
+        # (wire-format) plans, each stamped base_version/version.  The
+        # transport publisher replays journal suffixes to consumers that
+        # fell behind; a consumer whose ack predates the journal floor gets
+        # a full snapshot resync instead (runtime/transport.py).
+        self.journal: collections.deque = collections.deque(
+            maxlen=max(1, int(journal_limit)))
         # liveness leases: a consumer's heartbeat records the control epoch
         # it was last seen alive at.  With lease_epochs > 0 the drain reaper
         # ignores load pinned by a consumer whose lease expired (a dead host
@@ -302,6 +394,18 @@ class ControlPlane:
             aff_ep=jnp.full((AFFINITY_SLOTS,), -1, jnp.int32),
             version=jnp.asarray(self.version, jnp.int32),
             **{k: jnp.asarray(cfg[k]) for k in CONFIG_FIELDS})
+
+    def packed_snapshot(self) -> dict:
+        """The full current config as a wire-format dict (CONFIG_FIELDS
+        arrays + the config version) — the transport's resync payload for a
+        consumer whose ack fell behind the plan journal (or that crashed
+        and rejoined at version -1).  The consumer side rebuilds a
+        load-preserving :class:`RefreshPlan` from it by matching (cluster,
+        instance) rows against its own live config
+        (``runtime.transport.snapshot_plan``)."""
+        out = {k: np.array(self._store.cfg[k]) for k in CONFIG_FIELDS}
+        out["version"] = int(self.version)
+        return out
 
     def cluster_names(self) -> list[str]:
         return list(self._store.clusters)
@@ -367,6 +471,12 @@ class ControlPlane:
         anything periodic may drive it)."""
         self.epoch += 1
         return self.epoch
+
+    def lease_live(self, consumer) -> bool:
+        """Public read of the liveness lease — the transport publisher
+        stops shipping plans to a consumer whose lease expired and resumes
+        (with a resync if needed) when its heartbeats return."""
+        return self._lease_live(consumer)
 
     def _lease_live(self, consumer) -> bool:
         if self.lease_epochs <= 0:
@@ -448,11 +558,13 @@ class ControlPlane:
         dst[txn.src[occupied]] = np.nonzero(occupied)[0]
         plan = RefreshPlan(
             config=tuple(txn.store.cfg[k].copy() for k in CONFIG_FIELDS),
-            ep_src=txn.src.copy(), ep_dst=dst)
+            ep_src=txn.src.copy(), ep_dst=dst,
+            base_version=self.version, version=self.version + 1)
         self._store = txn.store
         self.version += 1
         self.last_commit_log = list(txn.log)
         self.last_plan = plan
+        self.journal.append(pack_plan(plan))
         for consumer in consumers:
             consumer.apply_refresh(plan)
 

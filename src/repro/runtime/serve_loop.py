@@ -27,6 +27,7 @@ import numpy as np
 from repro.core import control
 from repro.core.balancer import Balancer, RequestBatch
 from repro.core.routing_table import N_FEATURES, RoutingState, fnv1a
+from repro.runtime import transport
 
 
 @dataclasses.dataclass
@@ -163,7 +164,8 @@ class ServeLoop:
     """Continuous batching driver for one service fleet."""
 
     def __init__(self, balancer: Balancer, params,
-                 routing: RoutingState | control.ControlPlane,
+                 routing: RoutingState | control.ControlPlane
+                 | transport.RemoteConsumer,
                  admit_batch: int = 8, dtype=jnp.float32,
                  max_retries: int = 64, backoff_base: int = 1,
                  backoff_cap: int = 16, backoff_seed: int = 0,
@@ -172,10 +174,20 @@ class ServeLoop:
         self.params = params
         self.admit_batch = admit_batch
         self.cp = None
+        self.remote = None
         if isinstance(routing, control.ControlPlane):
             cp, routing = routing, routing.snapshot()
             cp.attach(self)
             self.cp = cp
+        elif isinstance(routing, transport.RemoteConsumer):
+            # attach through the plan transport instead of in-process: the
+            # consumer pumps its lossy channel each tick (plans in,
+            # heartbeat + live load report out) and calls apply_refresh
+            # here; the loop boots at whatever snapshot the consumer was
+            # seeded with (runtime/transport.py).
+            rc, routing = routing, routing.boot_routing
+            rc.bind(self)
+            self.remote = rc
         self.state = balancer.init_state(routing, dtype=dtype)
         self.serve_step = balancer.make_jitted(donate=False)
         self.queue: collections.deque[Request] = collections.deque()
@@ -291,6 +303,8 @@ class ServeLoop:
         """One engine step: admit waiting requests + decode every lane."""
         if self.cp is not None:
             self.cp.heartbeat(self)          # liveness lease (core/control)
+        elif self.remote is not None:        # transport-attached: plans in,
+            self.remote.pump(self.ticks)     # heartbeat + load report out
         if self.fault is not None:           # injected faults roll progress
             pool = self.fault.apply(self.state.pool, self.ticks)
             if pool is not self.state.pool:  # back BEFORE the step so a

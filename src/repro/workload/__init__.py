@@ -23,8 +23,9 @@ from repro.workload.generators import (BurstyArrivals, DiurnalArrivals,
                                        ParetoServiceTimes, PoissonArrivals,
                                        ServiceTimeShaper, Workload)
 from repro.workload.scenarios import Op, ScenarioDriver, rolling_restart
-from repro.workload.slo import (append_scenario_row, percentiles,
-                                scenario_row, validate_scenario_row)
+from repro.workload.slo import (append_scenario_row, chaos_row, percentiles,
+                                scenario_row, validate_chaos_row,
+                                validate_scenario_row)
 
 __all__ = [
     "PoissonArrivals", "BurstyArrivals", "DiurnalArrivals",
@@ -32,4 +33,5 @@ __all__ = [
     "ServiceTimeShaper", "Workload", "ChainRunner", "ChainResult",
     "Op", "ScenarioDriver", "rolling_restart", "percentiles",
     "scenario_row", "append_scenario_row", "validate_scenario_row",
+    "chaos_row", "validate_chaos_row",
 ]

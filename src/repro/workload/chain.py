@@ -59,11 +59,12 @@ class ChainResult:
 class ChainRunner:
     """Drive a workload through a chain of service fleets."""
 
-    def __init__(self, hops, workload, *, scenario=None,
+    def __init__(self, hops, workload, *, scenario=None, on_tick=None,
                  max_ticks: int = 4000, drain_ticks: int = 2000):
         self.hops = list(hops)
         self.workload = workload
         self.scenario = scenario
+        self.on_tick = on_tick       # called with the tick after hops run
         self.max_ticks = max_ticks
         self.drain_ticks = drain_ticks
         self.position: dict[int, int] = {}   # req_id → current hop
@@ -107,6 +108,8 @@ class ChainRunner:
                     for r in finished:
                         done_tick[r] = tick
                         self.position.pop(r, None)
+            if self.on_tick is not None:     # daemon seam: health epochs,
+                self.on_tick(tick)           # transport pumps, chaos probes
             tick += 1
             exhausted = (self.workload.n_requests is not None
                          and next_id >= self.workload.n_requests)

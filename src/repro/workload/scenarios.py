@@ -128,7 +128,9 @@ class ScenarioDriver:
         else:
             raise ValueError(f"unknown scenario op {op.op!r}")
         self.txns += cp.version - v0
-        self.log.append((tick, op.hop, op.op, tuple(sorted(
+        # audit trail carries the post-op config version so a transport
+        # replay can be checked op-for-op against the journal history
+        self.log.append((tick, op.hop, op.op, cp.version, tuple(sorted(
             (k, tuple(v) if isinstance(v, list) else v)
             for k, v in a.items()))))
 
@@ -146,9 +148,15 @@ class ScenarioDriver:
     @staticmethod
     def _canary(cp, cluster: str, instance: int, pct: float) -> None:
         """The canary takes ``pct``% of a WEIGHTED cluster's traffic; its
-        peers split the remainder evenly.  One transaction."""
+        *serving* peers split the remainder evenly.  Draining members are
+        skipped — re-weighting one would silently cancel a pending
+        operator drain as a side effect.  One transaction."""
+        if cp.drain_reason(cluster, instance) is not None:
+            raise ValueError(f"canary target {instance} in {cluster!r} "
+                             "is draining")
         members = cp.cluster_members(cluster)
-        peers = [i for _, i in members if i != instance]
+        peers = [i for _, i in members if i != instance
+                 and cp.drain_reason(cluster, i) is None]
         if not peers:
             raise ValueError(f"canary needs peers in {cluster!r}")
         share = (100.0 - pct) / (100.0 * len(peers))

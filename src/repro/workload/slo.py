@@ -35,6 +35,26 @@ SCENARIO_ROW_OPTIONAL = {
     "service": str, "scale": float, "ops": int, "txns": int,
     "held_first": int, "rate": float, "shards": int,
     "mean_ticks": float, "per_hop_p99_ticks": list,
+    "health_txns": int, "end_weights": list,
+}
+
+# The chaos-bench row (``bench: "chaos"``): one transport-chaos run —
+# workload SLO windows + channel/consumer protocol counters + the
+# convergence verdict.  Same validate-before-append discipline.
+CHAOS_ROW_REQUIRED = {
+    "bench": str, "scenario": str, "mode": str, "seed": int,
+    "n_requests": int, "completed": int, "dropped": int, "ticks": int,
+    "flush_ticks": int, "versions": int, "consumers": int,
+    "resyncs": int, "crashes": int, "converged": bool,
+    "healthy_p99_ticks": float, "chaos_p99_ticks": float,
+    "recovered_p99_ticks": float, "recovery_ratio": float,
+    "msgs_sent": int, "msgs_dropped": int, "msgs_duped": int,
+    "msgs_delivered": int,
+}
+CHAOS_ROW_OPTIONAL = {
+    "msgs_partitioned": int, "stale": int, "held": int, "rejected": int,
+    "plan_sends": int, "snap_sends": int, "ops": int, "txns": int,
+    "rate": float, "baseline_p99_ticks": float,
 }
 
 
@@ -67,33 +87,39 @@ def scenario_row(scenario: str, mode: str, *, depth: int, seed: int,
     return row
 
 
-def validate_scenario_row(row: dict) -> None:
-    """Raise ValueError on any schema violation (missing/extra/mistyped
-    fields, impossible counts, unordered percentiles)."""
+def _type_errs(row: dict, required: dict, optional: dict) -> list[str]:
+    """Field-presence + type errors for one row schema.  ``bool`` fields
+    accept only bool; ``float`` fields accept int-or-float (never bool)."""
+    def ok(v, t):
+        if t is bool:
+            return isinstance(v, bool)
+        if isinstance(v, bool):
+            return False
+        if t is float:
+            return isinstance(v, (int, float))
+        return isinstance(v, t)
+
     errs = []
-    for k, t in SCENARIO_ROW_REQUIRED.items():
+    for k, t in required.items():
         if k not in row:
             errs.append(f"missing field {k!r}")
-        elif t is float:
-            if not isinstance(row[k], (int, float)) \
-                    or isinstance(row[k], bool):
-                errs.append(f"field {k!r} wants float, got "
-                            f"{type(row[k]).__name__}")
-        elif not isinstance(row[k], t) or isinstance(row[k], bool):
+        elif not ok(row[k], t):
             errs.append(f"field {k!r} wants {t.__name__}, got "
                         f"{type(row[k]).__name__}")
-    allowed = (set(SCENARIO_ROW_REQUIRED) | set(SCENARIO_ROW_OPTIONAL)
-               | {"ts", "commit"})
+    allowed = set(required) | set(optional) | {"ts", "commit"}
     for k in row:
         if k not in allowed:
             errs.append(f"unknown field {k!r}")
-        elif k in SCENARIO_ROW_OPTIONAL:
-            t = SCENARIO_ROW_OPTIONAL[k]
-            ok = isinstance(row[k], (int, float)) if t is float \
-                else isinstance(row[k], t)
-            if not ok or isinstance(row[k], bool):
-                errs.append(f"field {k!r} wants {t.__name__}, got "
-                            f"{type(row[k]).__name__}")
+        elif k in optional and not ok(row[k], optional[k]):
+            errs.append(f"field {k!r} wants {optional[k].__name__}, got "
+                        f"{type(row[k]).__name__}")
+    return errs
+
+
+def validate_scenario_row(row: dict) -> None:
+    """Raise ValueError on any schema violation (missing/extra/mistyped
+    fields, impossible counts, unordered percentiles)."""
+    errs = _type_errs(row, SCENARIO_ROW_REQUIRED, SCENARIO_ROW_OPTIONAL)
     if not errs:
         if row["bench"] != "scenario":
             errs.append(f'bench must be "scenario", got {row["bench"]!r}')
@@ -107,6 +133,42 @@ def validate_scenario_row(row: dict) -> None:
         raise ValueError("invalid scenario row: " + "; ".join(errs))
 
 
+def chaos_row(scenario: str, mode: str, *, seed: int, **fields) -> dict:
+    """Build a validated ``bench="chaos"`` trend row (run_chaos output)."""
+    row = {"bench": "chaos", "scenario": scenario, "mode": mode,
+           "seed": int(seed)}
+    row.update(fields)
+    validate_chaos_row(row)
+    return row
+
+
+def validate_chaos_row(row: dict) -> None:
+    """Raise ValueError on any chaos-row schema violation.  A
+    non-converged run still validates — the row records the truth; the
+    chaos *gate* (benchmarks/run.py) is what fails on it."""
+    errs = _type_errs(row, CHAOS_ROW_REQUIRED, CHAOS_ROW_OPTIONAL)
+    if not errs:
+        if row["bench"] != "chaos":
+            errs.append(f'bench must be "chaos", got {row["bench"]!r}')
+        if row["completed"] + row["dropped"] > row["n_requests"]:
+            errs.append("completed + dropped exceeds n_requests")
+        for k in ("versions", "consumers", "resyncs", "crashes",
+                  "msgs_sent", "msgs_dropped", "msgs_duped",
+                  "msgs_delivered"):
+            if row[k] < 0:
+                errs.append(f"field {k!r} negative")
+        if row["msgs_delivered"] > row["msgs_sent"] + row["msgs_duped"]:
+            errs.append("delivered exceeds sent + duplicated")
+        if not np.isnan(row["recovery_ratio"]) and row["recovery_ratio"] < 0:
+            errs.append("recovery_ratio negative")
+    if errs:
+        raise ValueError("invalid chaos row: " + "; ".join(errs))
+
+
+_VALIDATORS = {"scenario": validate_scenario_row,
+               "chaos": validate_chaos_row}
+
+
 def _git_commit() -> str:
     import subprocess
     try:
@@ -118,9 +180,12 @@ def _git_commit() -> str:
 
 
 def append_scenario_row(row: dict, path: str = "BENCH_TREND.jsonl") -> dict:
-    """Validate, stamp (ts, commit), and append one scenario row to the
-    trend file.  Returns the stamped row."""
-    validate_scenario_row(row)
+    """Validate, stamp (ts, commit), and append one trend row (scenario
+    or chaos — dispatched on ``bench``).  Returns the stamped row."""
+    validator = _VALIDATORS.get(row.get("bench"))
+    if validator is None:
+        raise ValueError(f"no validator for bench {row.get('bench')!r}")
+    validator(row)
     stamped = {"ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
                "commit": _git_commit()}
     stamped.update(row)

@@ -276,6 +276,7 @@ def test_refresh_plan_pack_unpack_roundtrip():
     cp = control.ControlPlane(
         [ServiceConfig("s", rules=[Rule(0, None, "c")])],
         [Cluster("c", endpoints=[0, 1], policy=POLICY_RR)])
+    st0 = cp.snapshot()                   # the remote replica, pre-commit
     with cp.transaction():
         cp.add_endpoint("c", 2)
         cp.drain_endpoint("c", 0)
@@ -285,9 +286,11 @@ def test_refresh_plan_pack_unpack_roundtrip():
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     np.testing.assert_array_equal(plan.ep_src, back.ep_src)
     np.testing.assert_array_equal(plan.ep_dst, back.ep_dst)
-    st0 = cp.snapshot()
+    # journaled plans are versioned (DESIGN.md §11): the splice lands the
+    # replica on the control plane's exact version, not a blind +1
+    assert back.base_version == 0 and back.version == 1
     st1 = control.apply_plan(st0, back)
-    assert int(np.asarray(st1.version)) == int(np.asarray(st0.version)) + 1
+    assert int(np.asarray(st1.version)) == cp.version == 1
 
 
 # --------------------------------------------------------------------------- #
@@ -469,6 +472,72 @@ for _ in range(30):
     saw_new = saw_new or bool(((pr >= 4) & act).any())
 assert saw_new                                # traffic kept flowing
 print("control OK: one bump on all sharded consumers, drain visible")
+
+# --- 4) transport kill/restart: lease expiry x rejoin resync ------------- #
+# A sharded ServeLoop attaches through the lossy plan transport.  It holds
+# in-flight load on an endpoint the operator drains, then crashes.  Its
+# phantom load must stop pinning the drain once the lease expires, and the
+# restarted incarnation must land exactly ONE version-consistent resync.
+from repro.runtime import transport
+from repro.runtime.serve_loop import Fault, FaultInjector
+
+cp2 = control.ControlPlane(
+    [ServiceConfig("svc", rules=[Rule(0, None, "pool")])],
+    [Cluster("pool", endpoints=[0, 1], policy=POLICY_RR)],
+    lease_epochs=2)
+hub = transport.Transport(cp2, transport.LossyChannel(seed=5))
+rc = hub.consumer("ingress-0")
+# instance 1 wedged: its slots never progress, so its in-flight load can
+# only ever clear by the lease expiring (the crash scenario under test)
+loop2 = ServeLoop(eng, params, rc, admit_batch=4,
+                  fault=FaultInjector([Fault(instance=1, kind="stall")]))
+t = [0]
+def pump(n, dead=False):
+    for _ in range(n):
+        hub.pump(t[0])
+        if not dead:
+            loop2.tick()
+        t[0] += 1
+for i in range(6):
+    loop2.submit(Request(req_id=200 + i, service=0, headers={},
+                         prompt_token=3 + i))
+pump(4)                                       # admit + heartbeat the load in
+cp2.drain_endpoint("pool", 1)
+pump(3)                                       # plan v1 ships + lands
+slot1 = cp2.endpoint_slot("pool", 1)
+assert rc.version == cp2.version == 1
+assert int(np.asarray(loop2.routing.ep_drained)[slot1]) == 1
+proxy = hub.publisher.nodes["ingress-0"].proxy
+assert int(proxy.routing.ep_load[slot1]) > 0  # reported load pins the row
+cp2.reap()
+assert len(cp2.cluster_members("pool")) == 2  # live lease: reap blocked
+assert cp2.version == 1                       # blocked reap = no commit
+rc.crash()                                    # the host dies mid-drain
+for _ in range(3):
+    cp2.advance_epoch()
+    pump(1, dead=True)
+assert not cp2.lease_live(proxy)              # lease expired
+cp2.reap()                                    # phantom load ignored now
+assert len(cp2.cluster_members("pool")) == 1
+assert cp2.version == 2
+cp2.set_weight("pool", 0, 2.0)                # commits keep landing while
+assert cp2.version == 3                       # the node is dead
+pump(4, dead=True)                            # dead node: nothing ships
+assert hub.publisher.nodes["ingress-0"].acked == 1
+rc.restart()                                  # fresh process, version -1
+loop3 = ServeLoop(eng, params, rc, admit_batch=4)
+for _ in range(12):
+    hub.pump(t[0]); loop3.tick(); t[0] += 1
+assert rc.resyncs == 1, rc.resyncs            # exactly one resync
+assert rc.version == cp2.version == 3
+transport.assert_converged(cp2, [rc])
+for i in range(4):
+    loop3.submit(Request(req_id=300 + i, service=0, headers={},
+                         prompt_token=3))
+for _ in range(20):
+    hub.pump(t[0]); loop3.tick(); t[0] += 1
+assert len(loop3.done) == 4                   # resumed serving post-rejoin
+print("transport OK: lease unpinned the phantom drain, one resync on rejoin")
 """
 
 
@@ -492,5 +561,6 @@ def test_sharded_admission_subprocess():
                    "complete OK: sharded health EWMAs",
                    "oracle OK: admit_sharded_ref",
                    "relay OK: sharded round-trip",
-                   "control OK: one bump"):
+                   "control OK: one bump",
+                   "transport OK: lease unpinned the phantom drain"):
         assert marker in out.stdout, f"missing {marker!r}\n{out.stdout}"

@@ -1,0 +1,476 @@
+"""Fault-tolerant plan transport (runtime/transport.py).
+
+Pins the PR 9 acceptance contract: ``unpack_plan`` rejects every
+corruption class with a clear ValueError before anything applies; the
+lossy channel is seeded-deterministic (drop / duplicate / delay-reorder /
+partition windows); a RemoteConsumer applies plans idempotently keyed by
+version (stale and duplicate messages are no-ops, out-of-order plans are
+held and chained, a journal gap costs exactly one snapshot resync that
+preserves surviving endpoints' live load); the publisher stops shipping
+to a lease-dead node and resumes on rejoin with capped-exponential
+retry; and a full chaos schedule — crash, restart, partition, loss —
+converges bit-exactly and replays byte-identically.
+
+Everything here is engine-free: consumers sink into ``RoutingView``
+(plain ``apply_plan`` replicas), so no serving engine is compiled.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import control
+from repro.core.control import ControlPlane, pack_plan, unpack_plan
+from repro.core.routing_table import (Cluster, POLICY_LEAST_REQUEST,
+                                      POLICY_RR, POLICY_WEIGHTED, Rule,
+                                      ServiceConfig)
+from repro.runtime.transport import (CP_NODE, ChannelFault, LossyChannel,
+                                     RemoteConsumer, Transport,
+                                     convergence_report, snapshot_plan,
+                                     snapshot_state)
+
+SERVICES = [
+    ServiceConfig("front", rules=[
+        Rule(field=0, value="v2", cluster="canary"),
+        Rule(field=0, value=None, cluster="stable"),
+    ]),
+]
+CLUSTERS = [
+    Cluster("canary", endpoints=[0, 1], policy=POLICY_RR),
+    Cluster("stable", endpoints=[2, 3, 4], policy=POLICY_LEAST_REQUEST),
+]
+
+
+def _cp(**kw):
+    return ControlPlane(SERVICES, CLUSTERS, **kw)
+
+
+def _settle(hub, rcs, t0, budget=60):
+    """Pump publisher + consumers tick by tick until converged."""
+    t = t0
+    for _ in range(budget):
+        hub.pump(t)
+        for rc in rcs:
+            rc.pump(t)
+        t += 1
+        if hub.report()["converged"]:
+            return t
+    raise AssertionError("transport did not settle: "
+                         + "; ".join(hub.report()["issues"]))
+
+
+# --------------------------------------------------------------------------- #
+# unpack_plan input validation (satellite: corruption classes)
+# --------------------------------------------------------------------------- #
+
+
+def _wire():
+    cp = _cp()
+    cp.set_weight("canary", instance=0, weight=2.0)
+    return dict(cp.journal[-1])
+
+
+def test_unpack_roundtrip_bit_exact():
+    wire = _wire()
+    plan = unpack_plan(wire)
+    back = pack_plan(plan)
+    assert set(back) == set(wire)
+    for k, v in wire.items():
+        np.testing.assert_array_equal(np.asarray(back[k]), np.asarray(v),
+                                      err_msg=f"field {k!r}")
+    assert plan.base_version == 0 and plan.version == 1
+
+
+def test_unpack_rejects_non_dict():
+    with pytest.raises(ValueError, match="must be a dict"):
+        unpack_plan([("ep_src", np.zeros(4))])
+
+
+def test_unpack_rejects_missing_fields():
+    wire = _wire()
+    del wire["ep_src"]
+    with pytest.raises(ValueError, match="missing fields.*ep_src"):
+        unpack_plan(wire)
+    wire = _wire()
+    del wire["base_version"]
+    with pytest.raises(ValueError, match="missing fields.*base_version"):
+        unpack_plan(wire)
+
+
+def test_unpack_rejects_wrong_shape():
+    wire = _wire()
+    wire["cluster_ep_count"] = np.asarray(wire["cluster_ep_count"])[:-1]
+    with pytest.raises(ValueError, match="cluster_ep_count.*shape"):
+        unpack_plan(wire)
+
+
+def test_unpack_rejects_wrong_dtype_kind():
+    wire = _wire()
+    wire["ep_weight"] = np.asarray(wire["ep_weight"]).astype(np.int32)
+    with pytest.raises(ValueError, match="ep_weight.*dtype"):
+        unpack_plan(wire)
+    wire = _wire()
+    wire["ep_instance"] = np.asarray(wire["ep_instance"]).astype(np.float64)
+    with pytest.raises(ValueError, match="ep_instance.*dtype"):
+        unpack_plan(wire)
+
+
+def test_unpack_rejects_bad_version_fields():
+    for base, version in [(0, 0), (2, 2), (3, 1)]:
+        wire = _wire()
+        wire["base_version"], wire["version"] = base, version
+        with pytest.raises(ValueError, match="bad version fields"):
+            unpack_plan(wire)
+    wire = _wire()
+    wire["version"] = "2"                  # scalar type confusion
+    with pytest.raises(ValueError, match="integer scalar"):
+        unpack_plan(wire)
+    wire = _wire()
+    wire["base_version"] = True            # bool is not an int on the wire
+    with pytest.raises(ValueError, match="integer scalar"):
+        unpack_plan(wire)
+    wire = _wire()
+    wire["version"] = -5
+    with pytest.raises(ValueError, match="out of range"):
+        unpack_plan(wire)
+
+
+def test_unpack_tolerates_envelope_keys():
+    wire = _wire()
+    wire["kind"] = "plan"                  # transport envelope rides along
+    plan = unpack_plan(wire)
+    assert plan.version == 1
+
+
+def test_snapshot_validation_mirrors_plan_validation():
+    cp = _cp()
+    snap = cp.packed_snapshot()
+    st = snapshot_state(snap)
+    assert int(np.asarray(st.version)) == cp.version
+    bad = dict(snap)
+    del bad["maglev_table"]
+    with pytest.raises(ValueError, match="missing fields.*maglev_table"):
+        snapshot_state(bad)
+    bad = dict(snap)
+    bad["version"] = -1                    # a snapshot is always versioned
+    with pytest.raises(ValueError, match="bad version"):
+        snapshot_state(bad)
+
+
+# --------------------------------------------------------------------------- #
+# LossyChannel: seeded fate, partitions, reordering
+# --------------------------------------------------------------------------- #
+
+
+def test_channel_reliable_delivery_after_min_delay():
+    ch = LossyChannel(delay_min=1)
+    ch.send("a", {"n": 1}, tick=0)
+    assert ch.recv("a", 0) == []           # not matured yet
+    assert ch.recv("a", 1) == [{"n": 1}]
+    assert ch.stats() == {"sent": 1, "dropped": 0, "partitioned": 0,
+                          "duped": 0, "delivered": 1}
+
+
+def test_channel_fate_is_seed_deterministic():
+    def run():
+        ch = LossyChannel(seed=7, p_drop=0.4, p_dup=0.3, delay_min=1,
+                          delay_max=4)
+        for i in range(50):
+            ch.send("a", {"n": i}, tick=i)
+        got = [m["n"] for t in range(60) for m in ch.recv("a", t)]
+        return got, ch.stats()
+
+    g1, s1 = run()
+    g2, s2 = run()
+    assert (g1, s1) == (g2, s2)
+    assert s1["dropped"] > 0 and s1["duped"] > 0
+    assert s1["delivered"] == s1["sent"] - s1["dropped"] + s1["duped"]
+    assert g1 != sorted(g1)                # random delays did reorder
+
+
+def test_channel_partition_window():
+    ch = LossyChannel(faults=(ChannelFault(2, 5, dst="a"),))
+    for t in range(7):
+        ch.send("a", {"t": t}, t)
+        ch.send("b", {"t": t}, t)          # other dst unaffected
+    got_a = [m["t"] for t in range(9) for m in ch.recv("a", t)]
+    got_b = [m["t"] for t in range(9) for m in ch.recv("b", t)]
+    assert got_a == [0, 1, 5, 6]
+    assert got_b == list(range(7))
+    assert ch.partitioned == 3
+
+
+def test_channel_rejects_bad_delay_bounds():
+    with pytest.raises(ValueError, match="delay_max"):
+        LossyChannel(delay_min=3, delay_max=1)
+
+
+# --------------------------------------------------------------------------- #
+# RemoteConsumer protocol: idempotent versioned application
+# --------------------------------------------------------------------------- #
+
+
+def test_consumer_holds_out_of_order_then_chains():
+    cp = _cp()
+    ch = LossyChannel(delay_min=0)
+    rc = RemoteConsumer("n0", ch, snapshot=cp.packed_snapshot())
+    cp.set_weight("canary", instance=0, weight=2.0)    # v1
+    cp.set_weight("canary", instance=1, weight=3.0)    # v2
+    p1, p2 = cp.journal[-2], cp.journal[-1]
+    ch.send("n0", {"kind": "plan", **p2}, 0)           # v2 arrives first
+    rc.pump(0)
+    assert rc.held == 1 and rc.version == 0
+    ch.send("n0", {"kind": "plan", **p1}, 1)           # gap closes
+    rc.pump(1)
+    assert rc.version == 2 and rc.held == 1 and rc.stale == 0
+    assert [(k, b, v) for (_, k, b, v) in rc.history] == \
+        [("plan", 0, 1), ("plan", 1, 2)]
+    assert float(np.asarray(rc.routing.ep_weight)[
+        cp.endpoint_slot("canary", 1)]) == 3.0
+
+
+def test_consumer_duplicate_and_stale_are_noops():
+    cp = _cp()
+    ch = LossyChannel(delay_min=0)
+    rc = RemoteConsumer("n0", ch, snapshot=cp.packed_snapshot())
+    cp.set_weight("canary", instance=0, weight=2.0)
+    wire = {"kind": "plan", **cp.journal[-1]}
+    for t in range(3):                     # same plan delivered thrice
+        ch.send("n0", wire, t)
+        rc.pump(t)
+    assert rc.version == 1 and rc.stale == 2
+    assert len(rc.history) == 1            # applied exactly once
+
+
+def test_consumer_rejects_corrupt_plan_whole():
+    cp = _cp()
+    ch = LossyChannel(delay_min=0)
+    rc = RemoteConsumer("n0", ch, snapshot=cp.packed_snapshot())
+    cp.set_weight("canary", instance=0, weight=2.0)
+    wire = {"kind": "plan", **cp.journal[-1]}
+    wire["ep_weight"] = np.asarray(wire["ep_weight"])[:3]   # truncated
+    ch.send("n0", wire, 0)
+    rc.pump(0)
+    assert rc.rejected == 1 and rc.version == 0
+    assert float(np.asarray(rc.routing.ep_weight)[
+        cp.endpoint_slot("canary", 0)]) == 1.0   # nothing half-applied
+
+
+def test_snapshot_resync_preserves_surviving_load():
+    cp = _cp()
+    ch = LossyChannel(delay_min=0)
+    rc = RemoteConsumer("n0", ch, snapshot=cp.packed_snapshot())
+    slot = cp.endpoint_slot("stable", 3)
+    load = np.asarray(rc.routing.ep_load).copy()
+    load[slot] = 7                         # live in-flight work on the sink
+    rc.sink.routing = rc.routing._replace(ep_load=load)
+    cp.add_endpoint("canary", instance=9)  # membership change + gap
+    cp.set_weight("stable", instance=2, weight=1.5)
+    ch.send("n0", {"kind": "snapshot", **cp.packed_snapshot()}, 0)
+    rc.pump(0)
+    assert rc.resyncs == 1 and rc.version == cp.version
+    r = rc.routing
+    assert int(np.asarray(r.ep_load)[cp.endpoint_slot("stable", 3)]) == 7
+    assert int(np.asarray(r.ep_load)[cp.endpoint_slot("canary", 9)]) == 0
+    np.testing.assert_array_equal(
+        np.asarray(r.ep_weight), np.asarray(cp.snapshot().ep_weight))
+
+
+def test_snapshot_plan_applies_on_any_base():
+    cp = _cp()
+    snap = cp.packed_snapshot()
+    plan = snapshot_plan(snap, snapshot_state(snap))
+    assert plan.base_version == -1 and plan.version == cp.version
+
+
+# --------------------------------------------------------------------------- #
+# Transport end-to-end: gaps, crashes, lease gating, backoff
+# --------------------------------------------------------------------------- #
+
+
+def test_journal_gap_costs_exactly_one_resync():
+    cp = _cp(journal_limit=2)
+    hub = Transport(cp, LossyChannel(delay_min=0))
+    rc = hub.consumer("n0")
+    for i in range(5):                     # journal floor races past acked=0
+        cp.set_weight("stable", instance=2, weight=1.0 + 0.1 * (i + 1))
+    _settle(hub, [rc], 0)
+    rep = hub.assert_converged()
+    assert rc.version == 5 and rc.resyncs == 1
+    assert hub.publisher.stats()["n0"]["snap_sends"] == 1
+    assert rep["head"] == 5
+
+
+def test_contiguous_suffix_ships_as_plans_not_snapshot():
+    cp = _cp(journal_limit=16)
+    hub = Transport(cp, LossyChannel(delay_min=0))
+    rc = hub.consumer("n0")
+    for i in range(4):                     # all four commits still journaled
+        cp.set_weight("stable", instance=2, weight=1.0 + 0.1 * (i + 1))
+    _settle(hub, [rc], 0)
+    hub.assert_converged()
+    st = hub.publisher.stats()["n0"]
+    assert rc.resyncs == 0 and st["snap_sends"] == 0 and st["plan_sends"] >= 4
+
+
+def test_crash_restart_rejoins_with_one_resync():
+    cp = _cp()
+    hub = Transport(cp, LossyChannel(delay_min=1))
+    rc = hub.consumer("n0")
+    cp.set_weight("canary", instance=0, weight=2.0)
+    t = _settle(hub, [rc], 0)
+    rc.crash()
+    cp.set_weight("canary", instance=1, weight=3.0)    # missed commits
+    cp.add_endpoint("stable", instance=8)
+    for dt in range(4):                    # plans pile up undelivered
+        hub.pump(t + dt)
+    rc.restart()
+    t = _settle(hub, [rc], t + 4)
+    rep = hub.assert_converged()
+    assert rc.crashes == 1 and rc.resyncs == 1
+    assert rc.version == cp.version == 3
+    assert rep["consumers"][0]["alive"]
+    # queued pre-crash plans landed on the new incarnation as no-ops
+    assert all(v > 0 for (_, _, _, v) in rc.history)
+
+
+def test_publisher_gates_on_lease_and_resumes_on_rejoin():
+    cp = _cp(lease_epochs=2)
+    hub = Transport(cp, LossyChannel(delay_min=1))
+    rc = hub.consumer("n0")
+    cp.set_weight("canary", instance=0, weight=2.0)
+    t = _settle(hub, [rc], 0)
+    rc.crash()
+    hub.pump(t)                            # absorb in-flight heartbeats
+    for _ in range(4):                     # heartbeats stop; lease expires
+        cp.advance_epoch()
+    cp.set_weight("canary", instance=1, weight=3.0)
+    st = hub.publisher.stats()["n0"]
+    sends_dead = st["plan_sends"] + st["snap_sends"]
+    for dt in range(1, 7):                 # dead node: plans stop shipping
+        hub.pump(t + dt)
+    st = hub.publisher.stats()["n0"]
+    assert st["plan_sends"] + st["snap_sends"] == sends_dead
+    rc.restart()                           # rejoin: heartbeat re-leases
+    t = _settle(hub, [rc], t + 6)
+    hub.assert_converged()
+    assert cp.lease_live(hub.publisher.nodes["n0"].proxy)
+    assert rc.resyncs == 1                 # rejoin landed one resync
+
+
+def test_retry_backoff_is_capped_and_deterministic():
+    def run():
+        cp = _cp()                         # lease_epochs=0: lease disabled
+        # a black-hole channel: the node never acks, publisher retries
+        ch = LossyChannel(p_drop=1.0)
+        hub = Transport(cp, ch, retry_base=1, retry_cap=8, seed=5)
+        hub.consumer("n0", boot=False)     # cold: acked=-1, snapshot path
+        ticks = []
+        last = -1
+        for t in range(200):
+            hub.pump(t)
+            s = hub.publisher.stats()["n0"]["snap_sends"]
+            if s != last:
+                ticks.append(t)
+                last = s
+        return ticks
+
+    t1, t2 = run(), run()
+    assert t1 == t2                        # seeded jitter: replayable
+    gaps = [b - a for a, b in zip(t1, t1[1:])]
+    assert all(1 <= g <= 16 for g in gaps)  # cap + jitter < 2*cap
+    assert max(gaps) > min(gaps)           # backoff actually grew
+    assert gaps[-1] >= 8                   # settled at >= cap
+
+
+def test_heartbeats_carry_load_votes_to_the_reaper():
+    cp = _cp()
+    hub = Transport(cp, LossyChannel(delay_min=1))
+    rc = hub.consumer("n0")
+    slot = cp.endpoint_slot("stable", 4)
+    load = np.asarray(rc.routing.ep_load).copy()
+    load[slot] = 3                         # remote in-flight work
+    rc.sink.routing = rc.routing._replace(ep_load=load)
+    for t in range(3):                     # heartbeat out, publisher reads
+        hub.pump(t)
+        rc.pump(t)
+    proxy = hub.publisher.nodes["n0"].proxy
+    assert int(proxy.routing.ep_load[slot]) == 3
+    cp.drain_endpoint("stable", instance=4)
+    assert cp.drain_reason("stable", 4) is not None   # load pins the drain
+    load = np.asarray(rc.routing.ep_load).copy()
+    load[slot] = 0                         # remote work finishes
+    rc.sink.routing = rc.routing._replace(ep_load=load)
+    for t in range(3, 8):                  # zero-load vote reaches the cp
+        hub.pump(t)
+        rc.pump(t)
+    cp.set_weight("canary", instance=0, weight=1.1)   # next commit reaps
+    assert cp.drain_reason("stable", 4) is None
+    assert ("stable", 4) not in [("stable", i)
+                                 for _, i in cp.cluster_members("stable")]
+
+
+# --------------------------------------------------------------------------- #
+# Chaos convergence: the whole protocol under fire, bit-identical replay
+# --------------------------------------------------------------------------- #
+
+
+def _chaos_run(seed=11):
+    cp = _cp(lease_epochs=3, journal_limit=8)
+    ch = LossyChannel(seed=seed, p_drop=0.25, p_dup=0.15, delay_min=1,
+                      delay_max=3, faults=(ChannelFault(10, 22, dst="n1"),))
+    hub = Transport(cp, ch, seed=seed)
+    rcs = [hub.consumer("n0"), hub.consumer("n1")]
+    for t in range(70):
+        if t in (4, 14, 24, 34, 44):
+            cp.set_weight("stable", instance=2, weight=1.0 + 0.01 * t)
+        if t % 5 == 0:
+            cp.advance_epoch()
+        if t == 18:
+            rcs[0].crash()
+        if t == 30:
+            rcs[0].restart()
+        hub.pump(t)
+        for rc in rcs:
+            rc.pump(t)
+    t = _settle(hub, rcs, 70, budget=80)
+    rep = hub.assert_converged()
+    return rep, ch.stats(), [rc.history for rc in rcs], \
+        {n: dict(s) for n, s in hub.publisher.stats().items()}
+
+
+def test_chaos_schedule_converges_and_replays_bit_identically():
+    r1 = _chaos_run()
+    r2 = _chaos_run()
+    assert r1 == r2
+    rep, stats, histories, _ = r1
+    assert rep["converged"] and rep["head"] == 5
+    assert stats["dropped"] > 0 and stats["duped"] > 0
+    assert stats["partitioned"] > 0
+    by_node = {e["node"]: e for e in rep["consumers"]}
+    assert by_node["n0"]["crashes"] == 1
+    assert by_node["n0"]["resyncs"] <= by_node["n0"]["crashes"] + 1
+    assert by_node["n1"]["resyncs"] <= 1   # partition alone: at most a gap
+    for hist in histories:                 # applied versions strictly climb
+        vs = [v for (_, _, _, v) in hist]
+        assert vs == sorted(set(vs))
+
+
+def test_convergence_report_flags_divergence():
+    cp = _cp()
+    hub = Transport(cp, LossyChannel(delay_min=0))
+    rc = hub.consumer("n0")
+    cp.set_weight("canary", instance=0, weight=2.0)   # never delivered
+    rep = convergence_report(cp, [rc])
+    assert not rep["converged"]
+    assert any("at version 0" in s for s in rep["issues"])
+    _settle(hub, [rc], 0)
+    assert convergence_report(cp, [rc])["converged"]
+
+
+def test_convergence_report_flags_lost_bump_history():
+    cp = _cp()
+    rc = RemoteConsumer("n0", LossyChannel(), snapshot=cp.packed_snapshot())
+    rc.history = [(0, "plan", 0, 1), (1, "plan", 3, 4)]   # forged gap
+    rc.version = cp.version
+    rep = convergence_report(cp, [rc])
+    assert any("lost bump" in s for s in rep["issues"])
