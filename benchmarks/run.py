@@ -915,6 +915,45 @@ def check_gates(remeasured: bool = False) -> None:
     check_graded()
     check_chain()
     check_chaos()
+    check_analysis()
+    check_sanitize()
+
+
+def check_analysis() -> None:
+    """--check leg for the datapath verifier: ``python -m repro.analysis``
+    (jaxpr safety pass over every registered kernel x fold, AST lints +
+    import-graph containment, the plan-op sweep and the oracle/host
+    lowering smoke) must come back with zero findings."""
+    from repro.analysis.__main__ import main as analysis_main
+    if analysis_main([]) != 0:
+        sys.exit("check: analysis gate FAILED — datapath verifier findings "
+                 "(report above)")
+    print("# check: analysis gate OK — verifier/lint/plans/lowerings clean",
+          flush=True)
+
+
+def check_sanitize() -> None:
+    """--check leg for the checkify sanitizer: the tier-1 suite runs once
+    with XLB_SANITIZE=1, so every kernel-wrapper call discharges the
+    conservation laws in-graph and every ServeLoop/ChainRunner tick asserts
+    the host laws.  Overhead is roughly 1.3-1.5x suite wall time (checkify
+    retrace + the per-tick host asserts) — documented in
+    benchmarks/README.md; the sanitizer is strictly opt-in and never in the
+    measured path."""
+    import os
+    import subprocess
+    env = {**os.environ, "XLB_SANITIZE": "1"}
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p)
+    t0 = time.perf_counter()
+    proc = subprocess.run([sys.executable, "-m", "pytest", "-x", "-q"],
+                          env=env)
+    dt = time.perf_counter() - t0
+    if proc.returncode != 0:
+        sys.exit("check: sanitizer leg FAILED — tier-1 under XLB_SANITIZE=1 "
+                 f"exited {proc.returncode}")
+    print(f"# check: sanitizer leg OK — tier-1 clean under XLB_SANITIZE=1 "
+          f"({dt:.0f}s)", flush=True)
 
 
 def smoke_engines() -> None:

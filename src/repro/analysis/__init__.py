@@ -1,0 +1,22 @@
+"""Static verification subsystem — the reproduction's eBPF-verifier analogue
+(DESIGN.md §12).
+
+  * ``verifier``   — jaxpr-level interval analysis proving every gather /
+    scatter / dynamic_slice in the datapath kernels stays inside its table
+    window, plus dtype / determinism sweeps and the PolicyDef four-lowering
+    sweep.
+  * ``invariants`` — ONE declarative registry of conservation laws and
+    field-value bounds, compiled three ways: static checks on plan wire
+    dicts (``core/control.py::unpack_plan``), a ``jax.experimental.checkify``
+    sanitizer (``XLB_SANITIZE=1``) hooked into the kernel wrappers and the
+    serving loops, and the BENCH_TREND.jsonl row schemas.
+  * ``lint``       — repo-wide AST lints (computed scatters without an OOB
+    mode, bare nondeterminism in datapath modules, policy-enum literals)
+    and the import-graph dead-module report.
+
+Run it all: ``python -m repro.analysis`` (also wired into
+``benchmarks/run.py --check``).  Submodules are imported explicitly —
+``from repro.analysis import invariants`` — so that core/ and workload/
+can depend on the lightweight invariant engine without pulling the kernel
+tracer into their import graph.
+"""

@@ -1,0 +1,176 @@
+"""``python -m repro.analysis`` — the full static verification gate.
+
+Sections (any finding fails the process with exit code 1):
+
+  1. ``registry``  — every PolicyDef carries all four lowering hooks, a
+     valid shard-merge rule, and a unique enum.
+  2. ``kernels``   — jaxpr interval analysis over every registered Pallas
+     kernel × fold on the tune.py representative shapes (plus the staged
+     ``policies.select`` chain and the sharded admit relay).
+  3. ``lint``      — repo-wide AST lints + import-graph containment.
+  4. ``plans``     — one ControlPlane transaction of every named op kind;
+     each journaled wire plan must round-trip ``unpack_plan`` (which now
+     enforces the declarative plan laws) with zero law violations.
+  5. ``lowerings`` — runtime smoke of the two numpy lowerings the jaxpr
+     pass cannot see (``ref.admit_ref`` oracle, sidecar ``HostRouter``):
+     one batch per registered policy, outputs bounds-checked.
+
+``--fast`` skips the kernel sweep (the slow section) for edit loops;
+``--report`` additionally prints the import-graph dead-module report.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def _plan_ops_findings():
+    """Exercise every named ControlPlane op; validate every wire plan."""
+    from repro.analysis.invariants import check_plan_wire
+    from repro.analysis.verifier import Finding
+    from repro.core import control
+    from repro.core.routing_table import (POLICY_MAGLEV, POLICY_RR, Rule)
+
+    findings = []
+    cp = control.ControlPlane()
+    cp.add_cluster("gold", endpoints=[0, 1, 2])
+    cp.add_cluster("canary", policy=POLICY_MAGLEV, endpoints=[3, 4])
+    cp.add_service("checkout", rules=[Rule(0, "fast", "gold"),
+                                      Rule(0, None, "canary")])
+    cp.add_endpoint("gold", 5)
+    cp.set_weight("gold", 5, 2.5)
+    cp.set_policy("gold", POLICY_RR)
+    cp.upsert_rule("checkout", 1, "beta", "canary")
+    cp.drain_endpoint("gold", 5)
+    cp.reap()                                    # no consumers: removes it
+    cp.remove_endpoint("canary", 4)
+    cp.remove_rule("checkout", 1, "beta")
+    cp.remove_service("checkout")
+    cp.remove_cluster("canary")
+    cp.remove_cluster("gold")
+    for i, wire in enumerate(cp.journal):
+        for err in check_plan_wire(wire):
+            findings.append(Finding("plan-law-violation",
+                                    f"plan[{i}]", err))
+        try:
+            control.unpack_plan(wire)
+        except ValueError as e:
+            findings.append(Finding("plan-unpack-rejected",
+                                    f"plan[{i}]", str(e)))
+    if not cp.journal:
+        findings.append(Finding("plan-sweep-empty", "plans",
+                                "ControlPlane op sweep produced no plans"))
+    return findings
+
+
+def _lowering_smoke_findings():
+    """Run the oracle (ref) and sidecar (host) lowerings — plain numpy
+    loops the jaxpr pass never sees — once per registered policy."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.analysis.verifier import Finding, _sweep_state, SWEEP_I
+    from repro.core import policy_defs
+    from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, N_FEATURES,
+                                          fnv1a)
+    from repro.core.sidecar import HostRouter
+    from repro.kernels import ref
+
+    findings = []
+    state = _sweep_state()
+    E = state.ep_load.shape[0]
+    R = 8 * len(policy_defs.REGISTRY)
+    key = jax.random.PRNGKey(7)
+    kr, kw = jax.random.split(key)
+    # feature 0 == the policy enum routes to that policy's cluster
+    svc = jnp.arange(R, dtype=jnp.int32) % len(policy_defs.REGISTRY)
+    feats = jnp.zeros((R, N_FEATURES), jnp.int32).at[:, 0].set(
+        jnp.asarray([fnv1a(str(int(s))) for s in svc], jnp.int32))
+    rid = jnp.arange(R, dtype=jnp.int32)
+    rnd = jax.random.randint(kr, (R,), 0, 1 << 30, dtype=jnp.int32)
+    gum = jax.random.gumbel(kw, (R, MAX_EPS_PER_CLUSTER), jnp.float32)
+    free = jnp.ones((SWEEP_I, 4), jnp.int32)
+    res = ref.admit_ref(rid, svc, feats, jnp.ones((R,), jnp.int32),
+                        state, free, rnd, gum)
+    ep = np.asarray(res.endpoint)
+    if ep.min(initial=0) < -1 or ep.max(initial=0) >= E:
+        findings.append(Finding(
+            "oracle-endpoint-oob", "ref.admit_ref",
+            f"oracle endpoint outside [-1, {E - 1}]: "
+            f"[{ep.min()}, {ep.max()}]"))
+    if not (np.asarray(res.cluster) >= 0).any():
+        findings.append(Finding(
+            "oracle-no-route", "ref.admit_ref",
+            "policy-per-cluster sweep batch routed nothing"))
+
+    hr = HostRouter(state, seed=3)
+    routed = 0
+    for r in range(R):
+        c = hr.match(int(svc[r]), np.asarray(feats[r]))
+        if c < 0:
+            continue
+        e, inst = hr.select(c, np.asarray(feats[r]))
+        if e >= 0:
+            routed += 1
+            if not 0 <= e < E:
+                findings.append(Finding(
+                    "host-endpoint-oob", "sidecar.HostRouter",
+                    f"host lowering picked endpoint {e} outside "
+                    f"[0, {E - 1}]"))
+            hr.release(e)
+    if routed == 0:
+        findings.append(Finding(
+            "host-no-route", "sidecar.HostRouter",
+            "host lowering routed nothing in the per-policy sweep"))
+    if np.asarray(hr.t.ep_load).any():
+        findings.append(Finding(
+            "host-load-leak", "sidecar.HostRouter",
+            "ep_load nonzero after releasing every pick "
+            "(admits != releases)"))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the (slow) kernel jaxpr sweep")
+    ap.add_argument("--report", action="store_true",
+                    help="print the import-graph dead-module report")
+    args = ap.parse_args(argv)
+
+    from repro.analysis import lint as _lint
+    from repro.analysis import verifier as _ver
+
+    sections: list[tuple[str, list]] = []
+    sections.append(("registry", _ver.check_registry()))
+    if not args.fast:
+        sections.append(("kernels", _ver.verify_kernels()))
+    report, lint_findings = _lint.lint_all()
+    sections.append(("lint", lint_findings))
+    sections.append(("plans", _plan_ops_findings()))
+    sections.append(("lowerings", _lowering_smoke_findings()))
+
+    total = 0
+    for name, findings in sections:
+        status = "ok" if not findings else f"{len(findings)} finding(s)"
+        print(f"[{name:>9}] {status}")
+        for f in findings:
+            print(f"    {f}")
+        total += len(findings)
+    print(f"[   import] {len(report['datapath'])} datapath modules, "
+          f"{len(report['dead'])} dead seed modules (report-only)")
+    if args.report:
+        for mod in report["dead"]:
+            print(f"    dead: {mod}")
+    if total:
+        print(f"FAILED: {total} finding(s)")
+        return 1
+    print("verified: all sections clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

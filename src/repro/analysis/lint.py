@@ -1,0 +1,325 @@
+"""Repo-wide AST lints — the hazards the repo keeps fixing by hand.
+
+Where :mod:`repro.analysis.verifier` proves properties of *traced* jaxprs,
+this pass reads the *source*: hazards that precede tracing (a scatter
+written without an explicit OOB ``mode``, wall-clock or unseeded host
+randomness inside a traced datapath module, a policy enum compared as a
+bare integer literal, a ``PolicyDef`` registered without all four lowering
+hooks) and the repo-structure question no trace can answer — which seed
+modules are dead weight and whether the datapath has started importing
+them.
+
+Scopes
+------
+* **traced datapath** (``TRACED_DATAPATH``): ``repro.kernels`` +
+  ``repro.core`` — code that ends up inside jit/pallas programs.  The
+  scatter-mode, nondeterminism and enum-literal lints run here.
+  ``kernels/tune.py`` is exempt from the wall-clock lint: it is the
+  autotuner, whose whole job is timing.
+* **import graph**: every module under ``src/repro``.  Seed modules under
+  ``repro.models`` / ``repro.optim`` / ``repro.data`` /
+  ``repro.sharding`` / ``repro.configs`` (plus the train-side launch and
+  runtime legs) are *expected* to be unreachable from the serving
+  datapath; the report marks them dead rather than deleting them, and CI
+  fails only if a datapath module *newly imports* one
+  (``datapath-imports-dead`` finding).
+
+Findings reuse :class:`repro.analysis.verifier.Finding` so the CLI and the
+mutation tests treat both passes uniformly.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.verifier import Finding
+
+SRC_ROOT = os.path.join(os.path.dirname(__file__), "..", "..")
+
+#: modules whose code runs inside traced programs — strictest lints
+TRACED_DATAPATH = ("repro.kernels", "repro.core")
+
+#: the serving datapath the import-graph reachability starts from
+DATAPATH_ROOTS = (
+    "repro.kernels", "repro.core", "repro.runtime.serve_loop",
+    "repro.runtime.transport", "repro.runtime.elastic",
+    "repro.workload", "repro.launch.serve", "repro.launch.mesh",
+    "repro.analysis",
+)
+
+#: seed packages/modules that MAY be dead — reported, never deleted; a
+#: datapath import of a dead one is the CI-failing event
+SEED_LEGACY = (
+    "repro.models", "repro.optim", "repro.data", "repro.sharding",
+    "repro.configs", "repro.roofline", "repro.launch.train",
+    "repro.launch.dryrun", "repro.runtime.train_loop",
+    "repro.runtime.checkpoint",
+)
+
+#: wall-clock exemptions inside the traced datapath (measurement code)
+CLOCK_EXEMPT = ("repro.kernels.tune",)
+
+#: seeded constructors — deterministic host PRNG is fine, module-level
+#: draws are not
+SEEDED_RNG_CTORS = {"RandomState", "default_rng", "Generator",
+                    "SeedSequence", "PRNGKey", "key"}
+
+#: names whose comparison against a bare int literal bypasses policy_defs
+ENUM_NAMES = {"policy", "cluster_policy", "enum"}
+
+#: .at[...] update methods that scatter
+_SCATTER_METHODS = {"set", "add", "mul", "min", "max", "apply", "subtract",
+                    "divide", "power"}
+
+
+def _module_name(path: str) -> str:
+    rel = os.path.relpath(path, SRC_ROOT).replace(os.sep, "/")
+    mod = rel[:-3].replace("/", ".")
+    return mod[:-9] if mod.endswith(".__init__") else mod
+
+
+def _iter_modules():
+    root = os.path.join(SRC_ROOT, "repro")
+    for dirpath, _dirs, files in os.walk(root):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                path = os.path.join(dirpath, f)
+                yield _module_name(path), path
+
+
+def _in(mod: str, prefixes) -> bool:
+    return any(mod == p or mod.startswith(p + ".") for p in prefixes)
+
+
+def _static_index(node: ast.expr) -> bool:
+    """True if a subscript index is fully static (ints / slices of ints /
+    ellipsis / None) — such scatters cannot go OOB and need no mode."""
+    if isinstance(node, ast.Tuple):
+        return all(_static_index(e) for e in node.elts)
+    if isinstance(node, ast.Constant):
+        return isinstance(node.val if hasattr(node, "val") else node.value,
+                          (int, type(None), type(...)))
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        return _static_index(node.operand)
+    if isinstance(node, ast.Slice):
+        return all(s is None or _static_index(s)
+                   for s in (node.lower, node.upper, node.step))
+    return False
+
+
+class _ModuleLinter(ast.NodeVisitor):
+    def __init__(self, mod: str, findings: list):
+        self.mod = mod
+        self.findings = findings
+        self.traced = _in(mod, TRACED_DATAPATH)
+
+    def flag(self, code, node, detail):
+        self.findings.append(Finding(
+            code, f"{self.mod}:{getattr(node, 'lineno', '?')}", detail))
+
+    # ---- scatter mode ---------------------------------------------------- #
+
+    def _check_scatter(self, call: ast.Call):
+        f = call.func
+        if not (isinstance(f, ast.Attribute) and f.attr in _SCATTER_METHODS):
+            return
+        sub = f.value
+        if not (isinstance(sub, ast.Subscript)
+                and isinstance(sub.value, ast.Attribute)
+                and sub.value.attr == "at"):
+            return
+        if _static_index(sub.slice):
+            return
+        if any(kw.arg == "mode" for kw in call.keywords):
+            return
+        self.flag("scatter-missing-mode", call,
+                  f".at[...].{f.attr}() with a computed index relies on "
+                  "the backend's implicit OOB behavior — spell the mode "
+                  "(mode=\"drop\" for sentinel-steered folds)")
+
+    # ---- nondeterminism -------------------------------------------------- #
+
+    def _check_nondet(self, call: ast.Call):
+        f = call.func
+        if not isinstance(f, ast.Attribute):
+            return
+        base = f.value
+        if isinstance(base, ast.Attribute) and isinstance(base.value,
+                                                          ast.Name):
+            root, mid = base.value.id, base.attr
+            if root in ("np", "numpy") and mid == "random" \
+                    and f.attr not in SEEDED_RNG_CTORS:
+                self.flag("nondet-in-datapath", call,
+                          f"module-level np.random.{f.attr}() draws from "
+                          "hidden global state — pass a seeded Generator/"
+                          "RandomState in")
+        elif isinstance(base, ast.Name):
+            if base.id == "time" and self.mod not in CLOCK_EXEMPT:
+                self.flag("nondet-in-datapath", call,
+                          f"wall-clock time.{f.attr}() inside a traced "
+                          "datapath module — clocks belong to the serving "
+                          "loop, not the compiled step")
+            if base.id == "random" and f.attr not in ("Random",
+                                                      "SystemRandom"):
+                self.flag("nondet-in-datapath", call,
+                          f"stdlib random.{f.attr}() draws from hidden "
+                          "global state — use a seeded instance")
+
+    # ---- enum literals --------------------------------------------------- #
+
+    def _check_enum_literal(self, node: ast.Compare):
+        sides = [node.left] + list(node.comparators)
+        names = [s for s in sides
+                 if (isinstance(s, ast.Name) and s.id in ENUM_NAMES)
+                 or (isinstance(s, ast.Attribute) and s.attr in ENUM_NAMES)]
+        lits = [s for s in sides if isinstance(s, ast.Constant)
+                and isinstance(s.value, int)
+                and not isinstance(s.value, bool)]
+        if names and lits and not any(
+                isinstance(op, (ast.Lt, ast.LtE, ast.Gt, ast.GtE))
+                for op in node.ops):
+            self.flag("enum-literal-bypass", node,
+                      "policy enum compared against a bare integer "
+                      "literal — route through policy_defs (POLICY_* / "
+                      "PolicyDef.enum) so renumbering cannot silently "
+                      "reroute traffic")
+
+    # ---- PolicyDef registration ------------------------------------------ #
+
+    def _check_policy_def(self, call: ast.Call):
+        f = call.func
+        name = f.id if isinstance(f, ast.Name) else \
+            f.attr if isinstance(f, ast.Attribute) else None
+        if name != "PolicyDef":
+            return
+        hooks = ("kernel_offset", "oracle_pick", "staged_offset",
+                 "host_pick")
+        kw = {k.arg for k in call.keywords}
+        # dataclass field order: 5 metadata fields then the four hooks
+        covered = max(len(call.args) - 5, 0) + len(kw & set(hooks))
+        if covered < len(hooks) and not any(k.arg is None
+                                            for k in call.keywords):
+            self.flag("policy-missing-hook", call,
+                      f"PolicyDef registration covers only {covered}/4 "
+                      "lowering hooks (kernel_offset, oracle_pick, "
+                      "staged_offset, host_pick)")
+
+    def visit_Call(self, node: ast.Call):
+        if self.traced:
+            self._check_scatter(node)
+            self._check_nondet(node)
+        self._check_policy_def(node)
+        self.generic_visit(node)
+
+    def visit_Compare(self, node: ast.Compare):
+        if self.traced and self.mod != "repro.core.policy_defs":
+            self._check_enum_literal(node)
+        self.generic_visit(node)
+
+
+def lint_sources() -> list[Finding]:
+    """Run every AST lint over ``src/repro``."""
+    findings: list[Finding] = []
+    for mod, path in _iter_modules():
+        with open(path, encoding="utf-8") as fh:
+            tree = ast.parse(fh.read(), filename=path)
+        _ModuleLinter(mod, findings).visit(tree)
+    return findings
+
+
+# --------------------------------------------------------------------------- #
+# Import graph: dead seed modules + datapath containment
+# --------------------------------------------------------------------------- #
+
+
+def _imports_of(path: str, mod: str) -> set[str]:
+    with open(path, encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    pkg = mod.rsplit(".", 1)[0] if "." in mod else mod
+    out: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            out.update(a.name for a in node.names)
+        elif isinstance(node, ast.ImportFrom):
+            base = node.module or ""
+            if node.level:                      # relative import
+                parts = pkg.split(".")
+                parts = parts[:len(parts) - (node.level - 1)]
+                base = ".".join(parts + ([base] if base else []))
+            out.add(base)
+            out.update(f"{base}.{a.name}" for a in node.names)
+    return {m for m in out if m.startswith("repro")}
+
+
+def import_graph() -> dict[str, set[str]]:
+    """``module -> set(imported repro modules)`` over ``src/repro``."""
+    mods = dict(_iter_modules())
+    graph = {}
+    for mod, path in mods.items():
+        deps = set()
+        for imp in _imports_of(path, mod):
+            # resolve "from pkg import name" where name is an attr
+            while imp and imp not in mods:
+                imp = imp.rsplit(".", 1)[0] if "." in imp else ""
+            if imp and imp != mod:
+                deps.add(imp)
+        graph[mod] = deps
+    return graph
+
+
+def _reachable(graph, roots):
+    seen, stack = set(), [r for r in graph if _in(r, roots)]
+    while stack:
+        m = stack.pop()
+        if m in seen:
+            continue
+        seen.add(m)
+        stack.extend(graph.get(m, ()))
+    return seen
+
+
+def import_report() -> tuple[dict, list[Finding]]:
+    """The dead-module report and its CI-failing subset.
+
+    Returns ``(report, findings)``: the report maps every module to its
+    status (``datapath`` / ``dead-seed`` / ``other``), findings carry only
+    ``datapath-imports-dead`` — a *new* import edge from live datapath
+    code into a module the report marks dead.  Dead modules themselves
+    are informational: the seed keeps its scaffolding until a PR needs
+    the space.
+    """
+    graph = import_graph()
+    live = _reachable(graph, DATAPATH_ROOTS)
+    report, findings = {"modules": {}, "dead": [], "datapath": []}, []
+    for mod in sorted(graph):
+        legacy = _in(mod, SEED_LEGACY)
+        if mod in live and not legacy:
+            status = "datapath"
+            report["datapath"].append(mod)
+        elif legacy:
+            status = "dead-seed" if mod not in live else "legacy-imported"
+            if mod not in live:
+                report["dead"].append(mod)
+        else:
+            status = "other"
+        report["modules"][mod] = {
+            "status": status, "imports": sorted(graph[mod])}
+    dead = set(report["dead"])
+    for mod in sorted(live):
+        if _in(mod, SEED_LEGACY):
+            continue
+        hits = sorted(graph.get(mod, set()) & dead)
+        for h in hits:
+            findings.append(Finding(
+                "datapath-imports-dead", mod,
+                f"datapath module imports dead seed module {h!r} — either "
+                "revive it intentionally (move it out of the legacy list) "
+                "or drop the import"))
+    return report, findings
+
+
+def lint_all() -> tuple[dict, list[Finding]]:
+    """AST lints + import containment.  Returns (report, findings)."""
+    report, graph_findings = import_report()
+    return report, lint_sources() + graph_findings

@@ -186,6 +186,16 @@ def unpack_plan(arrays: dict) -> RefreshPlan:
     if version == 0 or (version > 0 and base >= version):
         raise ValueError(f"plan payload has bad version fields: "
                          f"base_version={base}, version={version}")
+    # semantic layer: the declarative plan laws (field bounds, disjoint
+    # windows, slot-permutation consistency, version monotonicity) — the
+    # same registry the XLB_SANITIZE runtime mode and the static verifier's
+    # entry assumptions compile from (repro.analysis.invariants)
+    from repro.analysis.invariants import check_plan_wire
+    violations = check_plan_wire(
+        {**vals, "base_version": base, "version": version})
+    if violations:
+        raise ValueError("plan payload violates invariants: "
+                         + "; ".join(violations))
     return RefreshPlan(
         config=tuple(vals[k] for k in CONFIG_FIELDS),
         ep_src=vals["ep_src"], ep_dst=vals["ep_dst"],

@@ -42,15 +42,17 @@ def add_endpoint(state: RoutingState, cluster_id: int, ep_slot: int,
     bumped, so a concurrent reader never indexes an unwritten row.
     """
     st = state._replace(
-        ep_instance=state.ep_instance.at[ep_slot].set(instance),
-        ep_weight=state.ep_weight.at[ep_slot].set(weight),
-        ep_drained=state.ep_drained.at[ep_slot].set(0),
-        ep_load=state.ep_load.at[ep_slot].set(0),
-        ep_inflight_ewma=state.ep_inflight_ewma.at[ep_slot].set(0.0),
-        ep_tput_ewma=state.ep_tput_ewma.at[ep_slot].set(0.0),
+        ep_instance=state.ep_instance.at[ep_slot].set(instance, mode="drop"),
+        ep_weight=state.ep_weight.at[ep_slot].set(weight, mode="drop"),
+        ep_drained=state.ep_drained.at[ep_slot].set(0, mode="drop"),
+        ep_load=state.ep_load.at[ep_slot].set(0, mode="drop"),
+        ep_inflight_ewma=state.ep_inflight_ewma.at[ep_slot].set(0.0,
+                                                               mode="drop"),
+        ep_tput_ewma=state.ep_tput_ewma.at[ep_slot].set(0.0, mode="drop"),
     )
     st = st._replace(
-        cluster_ep_count=st.cluster_ep_count.at[cluster_id].add(1))
+        cluster_ep_count=st.cluster_ep_count.at[cluster_id].add(
+            1, mode="drop"))
     return _bump(st)
 
 
@@ -63,29 +65,43 @@ def remove_endpoint(state: RoutingState, cluster_id: int, ep_off: int
     endpoint's in-flight load counter with it, and a later ``add_endpoint``
     reusing the slot must start from a clean row — leaving the stale
     ``ep_instance``/``ep_load`` behind let a new occupant inherit phantom
-    load (and a late release corrupt it)."""
+    load (and a late release corrupt it).
+
+    Removing from an empty cluster (a raced double-remove) is a
+    version-bump no-op: the count never goes negative and the swap targets
+    are steered to the drop sentinel — otherwise ``last = start - 1`` and
+    an unclamped ``tgt`` would corrupt a *neighbouring cluster's* slots
+    (the invariant audit finding pinned by tests/test_analysis.py)."""
+    E = state.ep_instance.shape[0]
     start = state.cluster_ep_start[cluster_id]
     count = state.cluster_ep_count[cluster_id]
+    has = count > 0
     st = state._replace(
-        cluster_ep_count=state.cluster_ep_count.at[cluster_id].add(-1))
-    last = start + count - 1
-    tgt = start + ep_off
+        cluster_ep_count=state.cluster_ep_count.at[cluster_id].add(
+            -has.astype(state.cluster_ep_count.dtype), mode="drop"))
+    last = jnp.where(has, start + count - 1, E)
+    tgt = jnp.where(has, start + jnp.clip(ep_off, 0, count - 1), E)
+    lastc = jnp.minimum(last, E - 1)           # in-bounds gather source
     st = st._replace(
-        ep_instance=st.ep_instance.at[tgt].set(st.ep_instance[last]),
-        ep_weight=st.ep_weight.at[tgt].set(st.ep_weight[last]),
-        ep_drained=st.ep_drained.at[tgt].set(st.ep_drained[last]),
-        ep_load=st.ep_load.at[tgt].set(st.ep_load[last]),
+        ep_instance=st.ep_instance.at[tgt].set(st.ep_instance[lastc],
+                                               mode="drop"),
+        ep_weight=st.ep_weight.at[tgt].set(st.ep_weight[lastc],
+                                           mode="drop"),
+        ep_drained=st.ep_drained.at[tgt].set(st.ep_drained[lastc],
+                                             mode="drop"),
+        ep_load=st.ep_load.at[tgt].set(st.ep_load[lastc], mode="drop"),
         ep_inflight_ewma=st.ep_inflight_ewma.at[tgt].set(
-            st.ep_inflight_ewma[last]),
-        ep_tput_ewma=st.ep_tput_ewma.at[tgt].set(st.ep_tput_ewma[last]),
+            st.ep_inflight_ewma[lastc], mode="drop"),
+        ep_tput_ewma=st.ep_tput_ewma.at[tgt].set(st.ep_tput_ewma[lastc],
+                                                 mode="drop"),
     )
     st = st._replace(
-        ep_instance=st.ep_instance.at[last].set(-1),
-        ep_weight=st.ep_weight.at[last].set(1.0),
-        ep_drained=st.ep_drained.at[last].set(0),
-        ep_load=st.ep_load.at[last].set(0),
-        ep_inflight_ewma=st.ep_inflight_ewma.at[last].set(0.0),
-        ep_tput_ewma=st.ep_tput_ewma.at[last].set(0.0),
+        ep_instance=st.ep_instance.at[last].set(-1, mode="drop"),
+        ep_weight=st.ep_weight.at[last].set(1.0, mode="drop"),
+        ep_drained=st.ep_drained.at[last].set(0, mode="drop"),
+        ep_load=st.ep_load.at[last].set(0, mode="drop"),
+        ep_inflight_ewma=st.ep_inflight_ewma.at[last].set(0.0, mode="drop"),
+        ep_tput_ewma=st.ep_tput_ewma.at[last].set(0.0, mode="drop"),
     )
     return _bump(st)
 
@@ -99,11 +115,13 @@ def add_rule(state: RoutingState, svc_id: int, rule_slot: int, field: int,
              value_hash: int, cluster_id: int) -> RoutingState:
     """Write the rule row first (bottom), then extend the service chain."""
     st = state._replace(
-        rule_field=state.rule_field.at[rule_slot].set(field),
-        rule_value=state.rule_value.at[rule_slot].set(value_hash),
-        rule_cluster=state.rule_cluster.at[rule_slot].set(cluster_id),
+        rule_field=state.rule_field.at[rule_slot].set(field, mode="drop"),
+        rule_value=state.rule_value.at[rule_slot].set(value_hash, mode="drop"),
+        rule_cluster=state.rule_cluster.at[rule_slot].set(cluster_id,
+                                                          mode="drop"),
     )
-    st = st._replace(svc_rule_count=st.svc_rule_count.at[svc_id].add(1))
+    st = st._replace(svc_rule_count=st.svc_rule_count.at[svc_id].add(
+        1, mode="drop"))
     return _bump(st)
 
 
@@ -111,20 +129,31 @@ def remove_rule(state: RoutingState, svc_id: int, rule_off: int
                 ) -> RoutingState:
     """Top-down: shrink the chain, then compact (swap-with-last).  The
     vacated ``last`` row resets to the empty-state defaults so a slot later
-    reused by ``add_rule`` can never briefly expose a stale match."""
+    reused by ``add_rule`` can never briefly expose a stale match.
+
+    Empty-chain removal is a version-bump no-op (see ``remove_endpoint``:
+    same neighbouring-window corruption hazard, same drop-sentinel fix)."""
+    R = state.rule_field.shape[0]
     start = state.svc_rule_start[svc_id]
     count = state.svc_rule_count[svc_id]
-    st = state._replace(svc_rule_count=state.svc_rule_count.at[svc_id].add(-1))
-    last, tgt = start + count - 1, start + rule_off
+    has = count > 0
+    st = state._replace(svc_rule_count=state.svc_rule_count.at[svc_id].add(
+        -has.astype(state.svc_rule_count.dtype), mode="drop"))
+    last = jnp.where(has, start + count - 1, R)
+    tgt = jnp.where(has, start + jnp.clip(rule_off, 0, count - 1), R)
+    lastc = jnp.minimum(last, R - 1)
     st = st._replace(
-        rule_field=st.rule_field.at[tgt].set(st.rule_field[last]),
-        rule_value=st.rule_value.at[tgt].set(st.rule_value[last]),
-        rule_cluster=st.rule_cluster.at[tgt].set(st.rule_cluster[last]),
+        rule_field=st.rule_field.at[tgt].set(st.rule_field[lastc],
+                                             mode="drop"),
+        rule_value=st.rule_value.at[tgt].set(st.rule_value[lastc],
+                                             mode="drop"),
+        rule_cluster=st.rule_cluster.at[tgt].set(st.rule_cluster[lastc],
+                                                 mode="drop"),
     )
     st = st._replace(
-        rule_field=st.rule_field.at[last].set(0),
-        rule_value=st.rule_value.at[last].set(WILDCARD),
-        rule_cluster=st.rule_cluster.at[last].set(-1),
+        rule_field=st.rule_field.at[last].set(0, mode="drop"),
+        rule_value=st.rule_value.at[last].set(WILDCARD, mode="drop"),
+        rule_cluster=st.rule_cluster.at[last].set(-1, mode="drop"),
     )
     return _bump(st)
 
@@ -132,13 +161,14 @@ def remove_rule(state: RoutingState, svc_id: int, rule_off: int
 def set_policy(state: RoutingState, cluster_id: int, policy: int
                ) -> RoutingState:
     return _bump(state._replace(
-        cluster_policy=state.cluster_policy.at[cluster_id].set(policy)))
+        cluster_policy=state.cluster_policy.at[cluster_id].set(
+            policy, mode="drop")))
 
 
 def set_weight(state: RoutingState, ep_slot: int, weight: float
                ) -> RoutingState:
     return _bump(state._replace(
-        ep_weight=state.ep_weight.at[ep_slot].set(weight)))
+        ep_weight=state.ep_weight.at[ep_slot].set(weight, mode="drop")))
 
 
 def set_drained(state: RoutingState, ep_slot: int, drained: bool
@@ -148,4 +178,5 @@ def set_drained(state: RoutingState, ep_slot: int, drained: bool
     fused admit kernel, ``policies.select``, the sidecar HostRouter —
     consults the mask)."""
     return _bump(state._replace(
-        ep_drained=state.ep_drained.at[ep_slot].set(int(drained))))
+        ep_drained=state.ep_drained.at[ep_slot].set(int(drained),
+                                                    mode="drop")))

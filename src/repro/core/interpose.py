@@ -194,7 +194,24 @@ class Engine:
                                  lambda s: s, state)
             return self.step(params, state)
 
-        return serve_step
+        from repro.analysis.invariants import sanitize_enabled
+        if not sanitize_enabled():
+            return serve_step
+
+        # XLB_SANITIZE=1: the kernel wrappers emit conservation-law checks
+        # into the trace (analysis/invariants.py::guard); functionalize them
+        # here — the host boundary — and fail the tick loudly on violation.
+        from jax.experimental import checkify
+        ck = jax.jit(checkify.checkify(serve_step,
+                                       errors=checkify.user_checks))
+
+        def sanitized_step(params, state, reqs):
+            err, res = ck(params, state, reqs)
+            err.throw()
+            return res
+
+        sanitized_step._cache_size = ck._cache_size   # recompile probes
+        return sanitized_step
 
     # ------------------------------------------------------------------ #
     # control-plane seam (Balancer protocol)

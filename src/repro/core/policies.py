@@ -52,7 +52,10 @@ def select(state: RoutingState, cluster: jax.Array, key: jax.Array,
     (callers that never route to a hashed cluster may omit it).
     """
     B = cluster.shape[0]
-    cl = jnp.maximum(cluster, 0)
+    n_cl = state.cluster_ep_start.shape[0]
+    # clamp both ends: -1 is the documented NO_ROUTE sentinel, but an id
+    # past the table must not walk the per-cluster tables out of window
+    cl = jnp.clip(cluster, 0, n_cl - 1)
     idx, ok, count = _window(state, cl)
     # drained endpoints (the ControlPlane's datapath-visible draining mask)
     # are ineligible under EVERY policy; matched-but-empty clusters — zero
@@ -81,7 +84,6 @@ def select(state: RoutingState, cluster: jax.Array, key: jax.Array,
     # instance I — ranking them at max(cluster, 0) would inflate the arrival
     # ranks of genuine cluster-0 traffic and skew rr/least-request offsets
     # away from the fused kernel and the admit_ref oracle.
-    n_cl = state.cluster_ep_start.shape[0]
     rank, _ = relay.positions_sort(jnp.where(routable, cl, n_cl), n_cl + 1)
     fkey = (jnp.zeros((B,), jnp.int32) if features is None
             else policy_defs.flow_hash(features).astype(jnp.int32))
@@ -95,7 +97,7 @@ def select(state: RoutingState, cluster: jax.Array, key: jax.Array,
     conds, offs = [], []
     for p in policy_defs.REGISTRY:
         o_p = p.staged_offset(sctx).astype(jnp.int32)
-        if p.enum == 0:
+        if p.enum == policy_defs.POLICY_RR:   # unknown-policy fallback
             default_off = o_p
         else:
             conds.append(policy == p.enum)

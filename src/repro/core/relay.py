@@ -62,8 +62,13 @@ def positions_sort(idx: jax.Array, n_dest: int) -> tuple[jax.Array, jax.Array]:
     sorted_idx = idx[order]
     load = jnp.bincount(idx, length=n_dest)                   # (E,)
     starts = jnp.cumsum(load) - load                          # (E,)
-    pos_sorted = jnp.arange(N, dtype=jnp.int32) - starts[sorted_idx]
-    slot = jnp.zeros((N,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    # shard_admit steers dropped rows to the sentinel destination
+    # ``n_dest``: their rank is never consumed, but the gather must still
+    # stay inside ``starts`` — OOB reads are undefined once compiled
+    pos_sorted = jnp.arange(N, dtype=jnp.int32) \
+        - starts[jnp.minimum(sorted_idx, n_dest - 1)]
+    slot = jnp.zeros((N,), jnp.int32).at[order].set(
+        pos_sorted.astype(jnp.int32), mode="drop")
     return slot, load.astype(jnp.int32)
 
 

@@ -30,6 +30,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.invariants import guard, sanitize_enabled
 from repro.core.balancer import PoolState, RequestBatch
 from repro.kernels import (completion as _cp, decode_attention as _da,
                            flash_attention as _fa, relay_dispatch as _rd,
@@ -112,8 +113,13 @@ def admit(reqs: RequestBatch, routing, free_mask, rnd, gumbel, *,
     ``fold`` default to the autotuned plan (``kernels/tune.py``)."""
     block_r, fold = tune.plan_admit(reqs.req_id.shape[0], free_mask.shape,
                                     block_r=block_r, fold=fold)
-    return _admit(reqs, routing, free_mask, rnd, gumbel, block_r=block_r,
-                  fold=fold)
+    res = _admit(reqs, routing, free_mask, rnd, gumbel, block_r=block_r,
+                 fold=fold)
+    if sanitize_enabled():
+        guard("admit", dict(load_before=routing.ep_load,
+                            load_after=res.ep_load, ok=res.ok,
+                            held=res.held, endpoint=res.endpoint))
+    return res
 
 
 @partial(jax.jit, static_argnames=("block_r", "fold"))
@@ -139,8 +145,17 @@ def admit_commit(reqs: RequestBatch, routing, pool: PoolState, rnd, gumbel,
     block_r, fold = tune.plan_admit(reqs.req_id.shape[0],
                                     pool.req_id.shape, block_r=block_r,
                                     fold=fold, commit=True)
-    return _admit_commit(reqs, routing, pool, rnd, gumbel, block_r=block_r,
-                         fold=fold)
+    out = _admit_commit(reqs, routing, pool, rnd, gumbel, block_r=block_r,
+                        fold=fold)
+    if sanitize_enabled():
+        guard("admit", dict(load_before=routing.ep_load,
+                            load_after=out.ep_load, ok=out.ok,
+                            held=out.held, endpoint=out.endpoint,
+                            instance=out.instance, slot=out.slot,
+                            req_id=reqs.req_id,
+                            pool_req_id=out.pool.req_id,
+                            pool_active=out.pool.active))
+    return out
 
 
 def admit_commit_sharded(reqs: RequestBatch, routing, pool: PoolState, rnd,
@@ -205,9 +220,15 @@ def complete(pool: PoolState, nxt, ep_load, rx_bytes, ep_inflight_ewma=None,
                                        fold=fold)
     ep_inflight_ewma, ep_tput_ewma = _ewma_defaults(
         ep_load, ep_inflight_ewma, ep_tput_ewma)
-    return _complete(pool, nxt, ep_load, rx_bytes, ep_inflight_ewma,
-                     ep_tput_ewma, eos=eos, max_len=max_len,
-                     block_i=block_i, fold=fold)
+    res = _complete(pool, nxt, ep_load, rx_bytes, ep_inflight_ewma,
+                    ep_tput_ewma, eos=eos, max_len=max_len,
+                    block_i=block_i, fold=fold)
+    if sanitize_enabled():
+        guard("complete", dict(load_before=ep_load, load_after=res.ep_load,
+                               done_cnt=res.done_cnt, done=res.done,
+                               active_after=res.pool.active,
+                               req_id_after=res.pool.req_id))
+    return res
 
 
 def complete_sharded(pool: PoolState, nxt, ep_load, rx_bytes,

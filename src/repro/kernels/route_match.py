@@ -67,7 +67,7 @@ from repro.core.policy_defs import BIG  # noqa: F401  (re-export: the
 # sentinel and the policy enum live in core/policy_defs.py — ONE
 # definition site for kernel, oracle and staged chain, DESIGN.md §9)
 from repro.core.routing_table import (MAX_EPS_PER_CLUSTER, MAX_RULES_PER_SVC,
-                                      POLICY_AFFINITY, WILDCARD)
+                                      POLICY_AFFINITY, POLICY_RR, WILDCARD)
 from repro.kernels.backend import resolve_fold, resolve_interpret
 
 
@@ -133,7 +133,8 @@ def _seg_rank(ids, mask, n_seg: int, *, fold: str, block_r: int):
         first = sk != jnp.concatenate([jnp.full((1,), -1, sk.dtype),
                                        sk[:-1]])       # segment boundaries
         start = jax.lax.cummax(jnp.where(first, iota, 0))
-        rank = jnp.zeros((block_r,), jnp.int32).at[order].set(iota - start)
+        rank = jnp.zeros((block_r,), jnp.int32).at[order].set(
+            iota - start, mode="drop")
         edges = jnp.searchsorted(sk, jnp.arange(n_seg + 1, dtype=jnp.int32))
         return rank, (edges[1:] - edges[:-1]).astype(jnp.int32)
     oh = (mask[:, None] & (ids[:, None] == jax.lax.broadcasted_iota(
@@ -169,7 +170,9 @@ def _match_stage(svc, feats, rs_ref, rc_ref, rf_ref, rv_ref, rcl_ref, *,
 def _route_kernel(svc_ref, feat_ref, rs_ref, rc_ref, rf_ref, rv_ref,
                   rcl_ref, cs_ref, cc_ref, load_ref, cluster_ref, ep_ref, *,
                   block_r: int):
-    svc = svc_ref[...]                                 # (BR,)
+    # clamp like _admit_kernel: a hostile/garbage svc id must not walk the
+    # rule tables out of window (refs have no OOB semantics once compiled)
+    svc = jnp.clip(svc_ref[...], 0, rs_ref.shape[0] - 1)   # (BR,)
     cluster = _match_stage(svc, feat_ref[...], rs_ref, rc_ref, rf_ref,
                            rv_ref, rcl_ref, block_r=block_r)
     cluster_ref[...] = cluster
@@ -380,7 +383,7 @@ def _admit_kernel(*refs, block_r: int, commit: bool, fold: str):
             o_p = jax.lax.cond(jnp.any(cp_ref[...] == p.enum), fn, zoff)
         else:
             o_p = fn()
-        if p.enum == 0:                 # rr doubles as the unknown-policy
+        if p.enum == POLICY_RR:         # rr doubles as the unknown-policy
             default_off = o_p           # fallback (oracle parity)
         else:
             conds.append(policy == p.enum)

@@ -24,6 +24,7 @@ from typing import NamedTuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.invariants import assert_host, sanitize_enabled
 from repro.core import control
 from repro.core.balancer import Balancer, RequestBatch
 from repro.core.routing_table import N_FEATURES, RoutingState, fnv1a
@@ -211,6 +212,8 @@ class ServeLoop:
         self._wseq = 0                      # (eligible_tick, seq, Request)
         self.ticks = 0                      # engine ticks driven so far
         self.fault = fault                  # optional FaultInjector
+        self.submitted = 0                  # all-time submit() count (the
+        #                                     queue-conservation law input)
 
     # ------------------------------------------------------------------ #
     # control-plane seam
@@ -236,6 +239,7 @@ class ServeLoop:
         req.t_submit = time.perf_counter()
         if req.submit_tick < 0:
             req.submit_tick = self.ticks
+        self.submitted += 1
         self.queue.append(req)
 
     def latency_samples(self) -> dict:
@@ -343,6 +347,11 @@ class ServeLoop:
                 #                             submitted == done + dropped +
                 #                             n_queued + inflight throughout
         self.ticks += 1
+        if sanitize_enabled():
+            assert_host("loop", dict(
+                submitted=self.submitted, done=len(self.done),
+                dropped=len(self.dropped), queued=self.n_queued,
+                inflight=len(self.inflight)))
         return {"active": int(out["active"]), "queued": self.n_queued,
                 "done": len(self.done), "dropped": len(self.dropped)}
 

@@ -29,6 +29,8 @@ import time
 
 import numpy as np
 
+from repro.analysis.invariants import assert_host, sanitize_enabled
+
 
 @dataclasses.dataclass
 class ChainResult:
@@ -110,6 +112,10 @@ class ChainRunner:
                         self.position.pop(r, None)
             if self.on_tick is not None:     # daemon seam: health epochs,
                 self.on_tick(tick)           # transport pumps, chaos probes
+            if sanitize_enabled():
+                assert_host("chain", dict(
+                    positions=list(self.position.values()), depth=D,
+                    positions_ids=list(self.position), done_ids=done_tick))
             tick += 1
             exhausted = (self.workload.n_requests is not None
                          and next_id >= self.workload.n_requests)

@@ -11,6 +11,10 @@ A scenario row is the one record format every workload driver appends to
 BENCH_TREND.jsonl (``bench: "scenario"``).  ``validate_scenario_row``
 rejects malformed rows *before* they reach the append-only trend file —
 a schema break fails the producing run, not a later reader.
+
+The schemas themselves live in :mod:`repro.analysis.invariants` — one
+declarative field-spec engine shared with the plan wire format — and this
+module re-exports the public names every driver (and test) imports.
 """
 
 from __future__ import annotations
@@ -20,42 +24,12 @@ import time
 
 import numpy as np
 
+from repro.analysis.invariants import (CHAOS_ROW_OPTIONAL,  # noqa: F401
+                                       CHAOS_ROW_REQUIRED,
+                                       SCENARIO_ROW_OPTIONAL,
+                                       SCENARIO_ROW_REQUIRED, validate_row)
+
 PCTS = (50.0, 99.0, 99.9)
-
-# Required fields of a BENCH_TREND scenario row and their types.  ``ts`` and
-# ``commit`` are stamped at append time and excluded from the deterministic
-# payload (replay tests compare rows without them).
-SCENARIO_ROW_REQUIRED = {
-    "bench": str, "scenario": str, "mode": str, "depth": int, "seed": int,
-    "arrivals": str, "n_requests": int, "completed": int, "dropped": int,
-    "ticks": int, "p50_ticks": float, "p99_ticks": float,
-    "p999_ticks": float,
-}
-SCENARIO_ROW_OPTIONAL = {
-    "service": str, "scale": float, "ops": int, "txns": int,
-    "held_first": int, "rate": float, "shards": int,
-    "mean_ticks": float, "per_hop_p99_ticks": list,
-    "health_txns": int, "end_weights": list,
-}
-
-# The chaos-bench row (``bench: "chaos"``): one transport-chaos run —
-# workload SLO windows + channel/consumer protocol counters + the
-# convergence verdict.  Same validate-before-append discipline.
-CHAOS_ROW_REQUIRED = {
-    "bench": str, "scenario": str, "mode": str, "seed": int,
-    "n_requests": int, "completed": int, "dropped": int, "ticks": int,
-    "flush_ticks": int, "versions": int, "consumers": int,
-    "resyncs": int, "crashes": int, "converged": bool,
-    "healthy_p99_ticks": float, "chaos_p99_ticks": float,
-    "recovered_p99_ticks": float, "recovery_ratio": float,
-    "msgs_sent": int, "msgs_dropped": int, "msgs_duped": int,
-    "msgs_delivered": int,
-}
-CHAOS_ROW_OPTIONAL = {
-    "msgs_partitioned": int, "stale": int, "held": int, "rejected": int,
-    "plan_sends": int, "snap_sends": int, "ops": int, "txns": int,
-    "rate": float, "baseline_p99_ticks": float,
-}
 
 
 def percentiles(samples) -> dict:
@@ -87,50 +61,10 @@ def scenario_row(scenario: str, mode: str, *, depth: int, seed: int,
     return row
 
 
-def _type_errs(row: dict, required: dict, optional: dict) -> list[str]:
-    """Field-presence + type errors for one row schema.  ``bool`` fields
-    accept only bool; ``float`` fields accept int-or-float (never bool)."""
-    def ok(v, t):
-        if t is bool:
-            return isinstance(v, bool)
-        if isinstance(v, bool):
-            return False
-        if t is float:
-            return isinstance(v, (int, float))
-        return isinstance(v, t)
-
-    errs = []
-    for k, t in required.items():
-        if k not in row:
-            errs.append(f"missing field {k!r}")
-        elif not ok(row[k], t):
-            errs.append(f"field {k!r} wants {t.__name__}, got "
-                        f"{type(row[k]).__name__}")
-    allowed = set(required) | set(optional) | {"ts", "commit"}
-    for k in row:
-        if k not in allowed:
-            errs.append(f"unknown field {k!r}")
-        elif k in optional and not ok(row[k], optional[k]):
-            errs.append(f"field {k!r} wants {optional[k].__name__}, got "
-                        f"{type(row[k]).__name__}")
-    return errs
-
-
 def validate_scenario_row(row: dict) -> None:
     """Raise ValueError on any schema violation (missing/extra/mistyped
     fields, impossible counts, unordered percentiles)."""
-    errs = _type_errs(row, SCENARIO_ROW_REQUIRED, SCENARIO_ROW_OPTIONAL)
-    if not errs:
-        if row["bench"] != "scenario":
-            errs.append(f'bench must be "scenario", got {row["bench"]!r}')
-        if row["completed"] + row["dropped"] > row["n_requests"]:
-            errs.append("completed + dropped exceeds n_requests")
-        ps = [row["p50_ticks"], row["p99_ticks"], row["p999_ticks"]]
-        fin = [p for p in ps if not np.isnan(p)]
-        if fin != sorted(fin):
-            errs.append("percentiles not monotone (p50 <= p99 <= p999)")
-    if errs:
-        raise ValueError("invalid scenario row: " + "; ".join(errs))
+    validate_row(row, "scenario")
 
 
 def chaos_row(scenario: str, mode: str, *, seed: int, **fields) -> dict:
@@ -146,23 +80,7 @@ def validate_chaos_row(row: dict) -> None:
     """Raise ValueError on any chaos-row schema violation.  A
     non-converged run still validates — the row records the truth; the
     chaos *gate* (benchmarks/run.py) is what fails on it."""
-    errs = _type_errs(row, CHAOS_ROW_REQUIRED, CHAOS_ROW_OPTIONAL)
-    if not errs:
-        if row["bench"] != "chaos":
-            errs.append(f'bench must be "chaos", got {row["bench"]!r}')
-        if row["completed"] + row["dropped"] > row["n_requests"]:
-            errs.append("completed + dropped exceeds n_requests")
-        for k in ("versions", "consumers", "resyncs", "crashes",
-                  "msgs_sent", "msgs_dropped", "msgs_duped",
-                  "msgs_delivered"):
-            if row[k] < 0:
-                errs.append(f"field {k!r} negative")
-        if row["msgs_delivered"] > row["msgs_sent"] + row["msgs_duped"]:
-            errs.append("delivered exceeds sent + duplicated")
-        if not np.isnan(row["recovery_ratio"]) and row["recovery_ratio"] < 0:
-            errs.append("recovery_ratio negative")
-    if errs:
-        raise ValueError("invalid chaos row: " + "; ".join(errs))
+    validate_row(row, "chaos")
 
 
 _VALIDATORS = {"scenario": validate_scenario_row,

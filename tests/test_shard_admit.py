@@ -513,7 +513,10 @@ cp2.reap()
 assert len(cp2.cluster_members("pool")) == 2  # live lease: reap blocked
 assert cp2.version == 1                       # blocked reap = no commit
 rc.crash()                                    # the host dies mid-drain
-for _ in range(3):
+# 4 epochs, not lease_epochs+1: a heartbeat already in flight through the
+# lossy channel can land after the first advance and refresh the lease one
+# epoch later than the crash tick
+for _ in range(4):
     cp2.advance_epoch()
     pump(1, dead=True)
 assert not cp2.lease_live(proxy)              # lease expired
